@@ -1,0 +1,57 @@
+"""Paper Table I / Fig 7: LLAMP (LP/analytical solve) vs LogGOPSim (DES).
+
+Per workload: run the paper's Algorithm-2-style latency sweep (11 points,
+L ∈ [3, 13] µs step 1 µs — the exact protocol of Appendix E) with
+  (a) the DAG engine (warm LevelPlan ≈ Gurobi warm basis),
+  (b) the explicit LP via HiGHS (one solve; the paper's solver path), and
+  (c) the discrete-event simulator (LogGOPSim role),
+and report events/s + the LLAMP-vs-DES speedup (paper: ≥6×).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import dag, lp, simulator, synth
+from repro.core.loggps import cluster_params
+
+from .common import csv_line, timeit
+
+WORKLOADS = [
+    # paper-like skeletons at growing event counts
+    ("stencil2d.16", lambda p: synth.stencil2d(4, 4, 40, params=p)),
+    ("stencil3d.27", lambda p: synth.stencil3d(3, 3, 3, 16, params=p)),
+    ("cg.16", lambda p: synth.cg_like(4, 4, 30, params=p)),
+    ("sweep.36", lambda p: synth.sweep2d(6, 6, 12, params=p)),
+    ("allreduce.64", lambda p: synth.allreduce_chain(64, 10, params=p)),
+    ("stencil2d.64", lambda p: synth.stencil2d(8, 8, 60, params=p)),
+]
+
+DELTAS = np.arange(0.0, 11.0, 1.0)   # L from 3 to 13 µs, step 1 (Appendix E)
+
+
+def run(out):
+    p = cluster_params(L_us=3.0, o_us=5.0)
+    for name, builder in WORKLOADS:
+        g = builder(p)
+        ev = g.num_events
+
+        def llamp_sweep():
+            plan = dag.LevelPlan(g)
+            return plan.forward_multi(p, DELTAS)   # K points, one pass (§Perf)
+
+        def des_sweep():
+            return [simulator.simulate(g, p, float(d)).T for d in DELTAS]
+
+        t_llamp, Ts_a = timeit(llamp_sweep, repeats=2, warmup=1)
+        t_des, Ts_b = timeit(des_sweep, repeats=1, warmup=0)
+        assert np.allclose(Ts_a, Ts_b), name
+        t_lp, _ = timeit(lambda: lp.predict_runtime(g, p).T, repeats=1,
+                         warmup=0)
+        speedup = t_des / t_llamp
+        out(csv_line(f"solver_speed.{name}.llamp", t_llamp * 1e6,
+                     f"events={ev};sweep11;ev_per_s={ev * 11 / t_llamp:.3e}"))
+        out(csv_line(f"solver_speed.{name}.des", t_des * 1e6,
+                     f"events={ev};sweep11;speedup_llamp={speedup:.2f}x"))
+        out(csv_line(f"solver_speed.{name}.highs1", t_lp * 1e6,
+                     f"events={ev};single_solve"))

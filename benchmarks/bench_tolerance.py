@@ -1,0 +1,54 @@
+"""Paper Fig 1 analog: per-architecture latency tolerance zones.
+
+The "applications" are the assigned architectures' training/decode steps on
+a (2, 4, 8)-pod mesh slice (tracer graphs; full-mesh graphs are exercised
+in the §Perf hillclimb).  Reports ΔL tolerable on the DCN class before
+1%/2%/5% step-time degradation — the deployment question of the paper's
+introduction, asked of our own workloads.
+"""
+
+from __future__ import annotations
+
+from repro import configs
+from repro.core import dag, sensitivity
+from repro.core.tracer import TraceSpec, trace_step
+from repro.models.config import DECODE_32K, TRAIN_4K
+
+from .common import csv_line, timeit
+
+ARCHS = ["jamba-1.5-large-398b", "deepseek-v2-lite-16b", "grok-1-314b",
+         "rwkv6-7b", "deepseek-7b", "yi-6b", "llama3.2-3b", "minitron-8b",
+         "qwen2-vl-2b", "hubert-xlarge"]
+
+
+def run(out):
+    ts = TraceSpec(pods=2, data=4, model=8, mfu=0.5)
+    p = ts.params()
+    for arch in ARCHS:
+        cfg, _ = configs.get(arch)
+        g = trace_step(cfg, TRAIN_4K, ts)
+        plan = dag.LevelPlan(g)
+
+        def query():
+            return sensitivity.latency_tolerance(
+                g, p, (0.01, 0.02, 0.05), cls=1, plan=plan)
+
+        t, tol = timeit(query, repeats=1)
+        s = plan.forward(p)
+        out(csv_line(
+            f"tolerance.train.{arch}", t * 1e6,
+            f"events={g.num_events};T={s.T:.0f}us;lam_ici={s.lam[0]:.0f};"
+            f"lam_dcn={s.lam[1]:.0f};dcn_tol1%={tol[0.01]:.1f}us;"
+            f"dcn_tol2%={tol[0.02]:.1f}us;dcn_tol5%={tol[0.05]:.1f}us"))
+    # decode tolerance (ICI class — no DCN traffic in decode)
+    for arch in ("yi-6b", "jamba-1.5-large-398b", "rwkv6-7b"):
+        cfg, _ = configs.get(arch)
+        g = trace_step(cfg, DECODE_32K, ts)
+        plan = dag.LevelPlan(g)
+        t, tol = timeit(lambda: sensitivity.latency_tolerance(
+            g, p, (0.01, 0.05), cls=0, plan=plan), repeats=1)
+        s = plan.forward(p)
+        out(csv_line(
+            f"tolerance.decode.{arch}", t * 1e6,
+            f"T={s.T:.0f}us;lam_ici={s.lam[0]:.0f};"
+            f"ici_tol1%={tol[0.01]:.2f}us;ici_tol5%={tol[0.05]:.2f}us"))

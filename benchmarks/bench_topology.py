@@ -1,0 +1,59 @@
+"""Paper Fig 11 / Appendix H: topology impact via wire-latency variables.
+
+Fat Tree (k=16, 3-tier) vs Dragonfly (g=8, a=4, p=8) with the paper's
+constants (l_wire = 274 ns, d_switch = 108 ns), plus the TPU-native case:
+a 16×16 ICI torus and a 2-pod torus+DCN — asking the FEC question ("how
+much per-wire latency before 1% slowdown?") for an allreduce-heavy step.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import dag, topology
+from repro.core.graph import GraphBuilder
+
+from .common import csv_line, timeit
+
+
+def build_workload(topo, params, iters=4, comp_us=5_000.0, nbytes=1e5,
+                   nranks=256):
+    """Neighbor+stride exchanges, recursive-doubling allreduce skeleton."""
+    stamp = topology.TopologyStamper(topo, params)
+    b = GraphBuilder(nranks, topo.nclasses)
+    for it in range(iters):
+        for r in range(nranks):
+            b.add_calc(r, comp_us)
+        # recursive-doubling exchange pattern stamped with per-hop wires
+        for k in range(8):
+            for r in range(nranks):
+                peer = r ^ (1 << k)
+                if peer < nranks and r < peer:
+                    stamp.message(b, r, peer, nbytes)
+                    stamp.message(b, peer, r, nbytes)
+    return b.finalize()
+
+
+def run(out):
+    cases = [
+        ("fat_tree_k16", topology.fat_tree(16)),
+        ("dragonfly_8_4_8", topology.dragonfly(8, 4, 8)),
+        ("torus_16x16", topology.torus((16, 16))),
+        ("2pod_torus_dcn", topology.multipod_torus(2, (16, 16))),
+    ]
+    for name, topo in cases:
+        p = topology.topology_params(topo, l_wire_us=0.274)
+        g = build_workload(topo, p)
+        plan = dag.LevelPlan(g)
+
+        def q():
+            return dag.tolerance(g, p, 0.01, cls=0, plan=plan)
+
+        t, tol = timeit(q, repeats=1)
+        s = plan.forward(p)
+        lam = ";".join(f"lam_{p.class_names[c]}={s.lam[c]:.0f}"
+                       for c in range(topo.nclasses))
+        out(csv_line(
+            f"topology.{name}", t * 1e6,
+            f"events={g.num_events};T={s.T:.0f}us;{lam};"
+            f"wire_tol1%={tol * 1e3:.0f}ns(paper_fec~+100ns)"))

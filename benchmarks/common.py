@@ -1,0 +1,22 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import time
+
+
+def timeit(fn, repeats: int = 3, warmup: int = 1):
+    """Returns (best_seconds, result)."""
+    out = None
+    for _ in range(warmup):
+        out = fn()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.3f},{derived}"

@@ -1,0 +1,59 @@
+"""§Roofline table generator: reads results/dryrun/*.json (written by
+launch/dryrun.py) and prints the per-(arch × shape × mesh) roofline rows.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dirname: str):
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_row(r: dict) -> str:
+    a, s, m = r["arch"], r["shape"], r["mesh"]
+    if r["status"] == "skip":
+        return f"| {a} | {s} | {m} | skip | — | — | — | — | — |"
+    if r["status"] == "error":
+        return f"| {a} | {s} | {m} | ERROR | — | — | — | — | {r['error'][:60]} |"
+    rf = r["roofline"]
+    mem = r.get("memory_per_device", {})
+    hbm = (mem.get("argument_size_in_bytes", 0)
+           + mem.get("temp_size_in_bytes", 0)) / 1e9
+    dom = rf["dominant"]
+    return (f"| {a} | {s} | {m} | {rf['t_compute_s'] * 1e3:.2f} ms "
+            f"| {rf['t_memory_s'] * 1e3:.2f} ms | {rf['t_collective_s'] * 1e3:.2f} ms "
+            f"| **{dom}** | {rf['model_vs_hlo']:.2f} | {hbm:.1f} GB |")
+
+
+def summarize(recs):
+    print("| arch | shape | mesh | compute | memory | collective | dominant "
+          "| MODEL/HLO | HBM/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        print(fmt_row(r))
+    ok = sum(r["status"] == "ok" for r in recs)
+    skip = sum(r["status"] == "skip" for r in recs)
+    err = sum(r["status"] == "error" for r in recs)
+    print(f"\ncells: ok={ok} skip={skip} error={err}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    summarize(load(args.dir))
+
+
+if __name__ == "__main__":
+    main()

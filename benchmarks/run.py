@@ -1,0 +1,38 @@
+"""Benchmark runner — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines:
+  bench_solver_speed   — Table I / Fig 7  (LLAMP vs DES throughput)
+  bench_validation     — Fig 9 / Table II (RRMSE of predictions under ΔL)
+  bench_tolerance      — Fig 1            (per-arch tolerance zones)
+  bench_collectives    — Fig 10           (ring vs recursive doubling)
+  bench_topology       — Fig 11           (fat-tree/dragonfly/torus wires)
+  bench_placement      — Fig 20           (Algorithm 3 rank placement)
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (bench_collectives, bench_placement, bench_solver_speed,
+                   bench_tolerance, bench_topology, bench_validation)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in (bench_solver_speed, bench_validation, bench_tolerance,
+                bench_collectives, bench_topology, bench_placement):
+        try:
+            mod.run(lambda line: print(line, flush=True))
+        except Exception:
+            failures += 1
+            name = mod.__name__.split(".")[-1]
+            print(f"{name}.ERROR,0,{traceback.format_exc(limit=1)!r}",
+                  flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,83 @@
+"""End-to-end driver: train a ~100M-param llama-style model for a few
+hundred steps through the full production stack (sharded step, watchdog,
+async atomic checkpoints, deterministic resumable data), then analyze the
+step's latency tolerance with LLAMP.
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.core import dag, sensitivity
+from repro.core.tracer import TraceSpec, trace_step
+from repro.data import DataConfig, DataIterator
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim import OptConfig
+from repro.runtime import StepWatchdog, build_train_step
+from repro.runtime.steps import init_train_state
+
+CFG_100M = ModelConfig(
+    name="llama-100m", family="dense", n_layers=8, d_model=512, n_heads=8,
+    n_kv_heads=4, d_ff=1536, vocab=8192, dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m_ckpt")
+    args = ap.parse_args()
+
+    cfg = CFG_100M
+    n_params = cfg.param_count()
+    print(f"model: {cfg.name} ≈ {n_params / 1e6:.0f}M params")
+
+    opt_cfg = OptConfig(lr=1e-3, weight_decay=0.0)
+    st = init_train_state(cfg, jax.random.key(0), opt_cfg).tree()
+    step_fn = jax.jit(build_train_step(cfg, opt_cfg, total_steps=args.steps),
+                      donate_argnums=(0,))
+    data = DataIterator(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                   global_batch=args.batch, seed=0))
+    ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+    wd = StepWatchdog(120.0, on_timeout=lambda i: print(f"[watchdog] {i}"))
+
+    t0 = time.time()
+    losses = []
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in data.next().items()}
+        wd.arm(i)
+        st, m = step_fn(st, batch, jnp.asarray(i, jnp.int32))
+        wd.disarm()
+        losses.append(float(m["loss"]))
+        if i % 25 == 0:
+            print(f"step {i:4d}  loss {losses[-1]:.4f}  "
+                  f"({(time.time() - t0):.0f}s)", flush=True)
+        if (i + 1) % 100 == 0:
+            ckpt.save_async(i + 1, {"state": st, "data": data.state()})
+    ckpt.wait()
+    print(f"\nloss: {losses[0]:.3f} → {losses[-1]:.3f} "
+          f"over {args.steps} steps; ckpts at {ckpt.all_steps()}")
+    if args.steps >= 200:  # the learning bar is calibrated for a full run
+        assert losses[-1] < losses[0] - 1.0, "training failed to learn"
+    else:
+        assert losses[-1] < losses[0], "loss should trend down even briefly"
+
+    # LLAMP: what would this step tolerate on a 2-pod production mesh?
+    shape = ShapeConfig("train", args.seq, 256, "train")
+    ts = TraceSpec(pods=2, data=4, model=4, mfu=0.5)
+    g = trace_step(cfg, shape, ts)
+    p = ts.params()
+    tol = sensitivity.latency_tolerance(g, p, (0.01, 0.05), cls=1)
+    print(f"\nLLAMP: on a 2×4×4 mesh this step tolerates "
+          f"ΔL_dcn ≤ {tol[0.01]:.0f} µs (+1%) / {tol[0.05]:.0f} µs (+5%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Atomic, async, mesh-elastic checkpointing.
+
+Fault-tolerance contract (the §large-scale-runnability requirements):
+  - **Atomicity**: writes go to ``step_N.tmp/`` then a single rename —
+    a crash mid-save never corrupts the latest checkpoint; ``latest``
+    resolution scans only committed directories.
+  - **Async**: ``save_async`` snapshots to host memory synchronously
+    (cheap), then writes in a daemon thread; training continues. ``wait()``
+    joins before the next save or exit.
+  - **Elastic reshard**: arrays are stored *unsharded* (gathered) with the
+    tree structure in a manifest; ``restore(shardings=...)`` device_puts
+    into any mesh topology — restarting 512→256 chips or reshaping
+    (pod,data,model) just works. (At real 1000+-node scale the store would
+    be sharded per-host; the manifest/commit protocol stays identical.)
+  - **Retention**: keep the newest ``keep`` checkpoints, delete older ones
+    only after a newer commit (never drop the only good copy).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ---------------------------------------------------------------- save --
+    def save(self, step: int, tree: Any) -> str:
+        """Synchronous atomic save. Returns the committed path."""
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        return self._write(step, host_tree)
+
+    def save_async(self, step: int, tree: Any) -> None:
+        """Snapshot now, write in the background."""
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)  # sync snapshot
+
+        def run():
+            try:
+                self._write(step, host_tree)
+            except BaseException as e:  # surfaced on wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _write(self, step: int, host_tree: Any) -> str:
+        tmp = os.path.join(self.dir, f"step_{step:010d}.tmp")
+        final = os.path.join(self.dir, f"step_{step:010d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        leaves, treedef = jax.tree.flatten(host_tree)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{f"leaf_{i}": l for i, l in enumerate(leaves)})
+        manifest = {
+            "step": step,
+            "n_leaves": len(leaves),
+            "treedef": str(treedef),
+            "time": time.time(),
+            "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+            "shapes": [list(np.asarray(l).shape) for l in leaves],
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)          # commit point
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"), ignore_errors=True)
+
+    # ------------------------------------------------------------- restore --
+    def all_steps(self) -> list:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.dir, d, "manifest.json")):
+                    out.append(int(d[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Any, shardings: Any = None) -> Any:
+        """Restore into the structure of `like`; optionally device_put with
+        `shardings` (a matching tree of NamedSharding) — elastic reshard."""
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            leaves = [z[f"leaf_{i}"] for i in range(len(z.files))]
+        _, treedef = jax.tree.flatten(like)
+        like_leaves = jax.tree.leaves(like)
+
+        def coerce(saved, ref):
+            if isinstance(ref, (int, float)):      # python scalars (counters)
+                return type(ref)(np.asarray(saved).item())
+            return np.asarray(saved).astype(np.asarray(ref).dtype)
+
+        tree = jax.tree.unflatten(
+            treedef, [coerce(l, ll) for l, ll in zip(leaves, like_leaves)])
+        if shardings is not None:
+            tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+        return tree

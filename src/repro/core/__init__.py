@@ -1,0 +1,19 @@
+"""LLAMP core: execution graphs + LogGPS + LP = latency tolerance analysis.
+
+Public API:
+    graph.GraphBuilder / ExecutionGraph      — Schedgen-style DAGs
+    loggps.LogGPS / cluster_params / tpu_pod_params
+    collectives.allreduce / all_gather / ...  — collective → p2p expansion
+    dag.evaluate / tolerance / breakpoints   — exact parametric engine
+    lp.build_lp / predict_runtime / tolerance_lp  — Algorithm 1 + HiGHS
+    ipm.solve_ipm                            — Mehrotra barrier solver
+    simulator.simulate                       — LogGOPSim-analog DES + injector
+    sensitivity.analyze / latency_curve / latency_tolerance
+    topology / placement / synth / tracer / hlo
+"""
+
+from . import (collectives, dag, graph, hlo, ipm, loggps, lp, placement,  # noqa: F401
+               sensitivity, simulator, synth, topology)
+from .graph import ExecutionGraph, GraphBuilder  # noqa: F401
+from .loggps import LogGPS, cluster_params, tpu_pod_params  # noqa: F401
+from .sensitivity import analyze, latency_curve, latency_tolerance  # noqa: F401

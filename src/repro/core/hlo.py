@@ -1,0 +1,138 @@
+"""Compiled-HLO analysis: collective inventory + byte counts.
+
+`cost_analysis()` exposes FLOPs and bytes but not collective traffic, so we
+parse the optimized HLO text (``compiled.as_text()``): every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute
+instruction contributes its result-buffer bytes (tuples summed).
+
+Caveats handled:
+  - while-loop bodies appear once in HLO; callers scale by trip count via
+    the two-point lowering protocol (see launch/dryrun.py);
+  - ``replica_groups`` are parsed so per-op participant counts are known
+    (used to classify ops as intra-pod (ICI) vs pod-crossing (DCN) and by
+    the LogGPS tracer to expand them into p2p rounds);
+  - fusion-wrapped collectives (-start/-done pairs) are deduplicated by
+    counting only the ``-start`` op of a pair.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                    "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    bytes: float
+    group_size: int
+    shapes: list
+
+    @property
+    def wire_bytes(self) -> float:
+        """Per-device link-traffic estimate from the result-buffer size.
+
+        Ring-algorithm conventions (what XLA uses along a mesh axis):
+          all-gather   : result = full buffer → recv (g-1)/g of it
+          reduce-scatter: result = one shard → send (g-1)·shard
+          all-reduce   : ring RS+AG → 2·(g-1)/g · full
+          all-to-all   : exchange (g-1)/g of the local buffer
+          collective-permute: the whole buffer crosses one link
+        """
+        g = max(self.group_size, 1)
+        if g == 1:
+            return 0.0
+        if self.kind == "all-gather":
+            return self.bytes * (g - 1) / g
+        if self.kind == "reduce-scatter":
+            return self.bytes * (g - 1)
+        if self.kind == "all-reduce":
+            return 2.0 * self.bytes * (g - 1) / g
+        if self.kind == "all-to-all":
+            return self.bytes * (g - 1) / g
+        return self.bytes  # collective-permute
+
+
+def _parse_result_bytes(result_part: str) -> tuple:
+    total = 0.0
+    shapes = []
+    for dt, dims in _SHAPE_RE.findall(result_part):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            n = int(np.prod([int(x) for x in dims.split(",") if x]))
+        total += n * _DTYPE_BYTES[dt]
+        shapes.append(f"{dt}[{dims}]")
+    return total, shapes
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0]
+        ids = [x for x in first.replace("{", "").split(",") if x.strip() != ""]
+        return max(len(ids), 1)
+    return 1
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Returns {kind: {count, bytes}, 'ops': [CollectiveOp], 'total_bytes': x}."""
+    stats = defaultdict(lambda: {"count": 0, "bytes": 0.0})
+    ops = []
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if " = " not in s:
+            continue
+        lhs, rhs = s.split(" = ", 1)
+        kind = None
+        mop = None
+        for k in COLLECTIVE_KINDS:
+            # match "<shape> <kind>(" and async "-start(" forms; skip "-done"
+            mop = re.search(rf"\s{k}(-start)?\(", rhs)
+            if mop:
+                kind = k
+                break
+        if kind is None:
+            continue
+        # result type is everything before the opcode (may be a tuple)
+        result_part = rhs[:mop.start()]
+        nbytes, shapes = _parse_result_bytes(result_part)
+        g = _group_size(s)
+        op = CollectiveOp(kind=kind, bytes=nbytes, group_size=g, shapes=shapes)
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += nbytes
+        stats[kind].setdefault("wire_bytes", 0.0)
+        stats[kind]["wire_bytes"] += op.wire_bytes
+        ops.append(op)
+    total = sum(v["bytes"] for v in stats.values())
+    wire = sum(v.get("wire_bytes", 0.0) for v in stats.values())
+    return {"by_kind": dict(stats), "ops": ops, "total_bytes": total,
+            "wire_bytes": wire}
+
+
+def while_trip_counts(hlo_text: str) -> list:
+    """Best-effort: known trip counts XLA annotates on while loops."""
+    out = []
+    for m in re.finditer(r'known_trip_count=\{?"?n"?[:=](\d+)', hlo_text):
+        out.append(int(m.group(1)))
+    return out

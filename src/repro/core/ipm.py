@@ -1,0 +1,131 @@
+"""Mehrotra predictor–corrector interior-point solver.
+
+The paper solves its LPs with Gurobi's barrier ("interior point") algorithm
+(§II-D3).  No commercial solver ships in this container, so we implement the
+same class of method: a primal–dual Mehrotra predictor–corrector IPM for
+
+    min c·x   s.t.  A x ≤ b,   lb ≤ x ≤ ub
+
+Bounds are folded into A as explicit rows (the LPs here have few finite
+bounds: the ℓ_c lower bounds, t ≥ 0, and the optional T budget), keeping the
+KKT system in pure inequality form:
+
+    r_d = c + Aᵀz = 0,   s = b − Ax ≥ 0,   z ≥ 0,   s∘z = 0.
+
+Newton system per step (d⁻¹ = z/s):
+
+    Aᵀ diag(d⁻¹) A Δx = −r_d − Aᵀ(d⁻¹ ∘ r_p) + Aᵀ(r_c / s)
+    Δs = −r_p − A Δx
+    Δz = (−r_c − z∘Δs) / s
+
+with r_c = s∘z − σμ𝟙 (+ ΔS_aff ΔZ_aff 𝟙 for the corrector).  The constraint
+matrix from Algorithm 1 is a node–arc incidence matrix, so AᵀD⁻¹A is a graph
+Laplacian — sparse, solved with scipy splu.  Duals z expose the tight rows;
+the reduced cost of ℓ_c is the dual of its lower-bound row (λ_L, §II-D1).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import scipy.sparse as sp
+import scipy.sparse.linalg as spla
+
+from .lp import LPProblem, LPSolution
+
+
+def _fold_bounds(prob: LPProblem):
+    """Append finite bounds of x as rows of A. Returns (A, b, lb_row_idx)."""
+    A, b = prob.A, prob.b
+    n = prob.nvars
+    m0 = A.shape[0]
+
+    lo_j = np.nonzero(np.isfinite(prob.lb))[0]
+    hi_j = np.nonzero(np.isfinite(prob.ub))[0]
+    nlo, nhi = lo_j.shape[0], hi_j.shape[0]
+    rows = np.arange(nlo + nhi)
+    cols = np.concatenate([lo_j, hi_j])
+    vals = np.concatenate([-np.ones(nlo), np.ones(nhi)])
+    eb = np.concatenate([-prob.lb[lo_j], prob.ub[hi_j]])
+    E = sp.csr_matrix((vals, (rows, cols)), shape=(nlo + nhi, n))
+    A = sp.vstack([A, E]).tocsr()
+    b = np.concatenate([b, eb])
+
+    lb_row = {int(j): m0 + k for k, j in enumerate(lo_j)}
+    return A, b, lb_row
+
+
+def solve_ipm(prob: LPProblem, tol: float = 1e-8, max_iter: int = 120,
+              verbose: bool = False) -> LPSolution:
+    A, b, lb_row = _fold_bounds(prob)
+    c = prob.c.copy()
+    m, n = A.shape
+    AT = A.T.tocsr()
+    bscale = 1.0 + float(np.abs(b).max(initial=0.0))
+
+    # infeasible warm start: x = 0 clipped into bounds, s/z positive
+    x = np.clip(np.zeros(n), np.where(np.isfinite(prob.lb), prob.lb, 0.0),
+                np.where(np.isfinite(prob.ub), prob.ub, 0.0))
+    s = np.maximum(b - A @ x, 1.0)
+    z = np.ones(m)
+
+    it = 0
+    for it in range(max_iter):
+        r_d = c + AT @ z
+        r_p = A @ x + s - b
+        mu = float(s @ z) / m
+        if (max(np.abs(r_p).max(initial=0), np.abs(r_d).max(initial=0))
+                < tol * bscale and mu < tol * bscale):
+            break
+
+        d_inv = z / s
+
+        def solve_newton(lu, r_c):
+            rhs = -r_d - AT @ (d_inv * r_p) + AT @ (r_c / s)
+            dx = lu.solve(rhs)
+            ds = -r_p - A @ dx
+            dz = (-r_c - z * ds) / s
+            return dx, ds, dz
+
+        M = (AT @ sp.diags(d_inv) @ A).tocsc() + sp.eye(n) * 1e-10
+        lu = spla.splu(M)
+
+        # predictor
+        r_c_aff = s * z
+        dx_a, ds_a, dz_a = solve_newton(lu, r_c_aff)
+
+        def max_step(v, dv):
+            neg = dv < -1e-300
+            return 1.0 if not neg.any() else min(1.0, float(np.min(-v[neg] / dv[neg])))
+
+        a_p = max_step(s, ds_a)
+        a_d = max_step(z, dz_a)
+        mu_aff = float((s + a_p * ds_a) @ (z + a_d * dz_a)) / m
+        sigma = (mu_aff / mu) ** 3 if mu > 0 else 0.1
+
+        # corrector
+        r_c = s * z - sigma * mu + ds_a * dz_a
+        dx, ds, dz = solve_newton(lu, r_c)
+
+        a_p = min(1.0, 0.995 * max_step(s, ds))
+        a_d = min(1.0, 0.995 * max_step(z, dz))
+        x += a_p * dx
+        s += a_p * ds
+        z += a_d * dz
+        s = np.maximum(s, 1e-300)
+        z = np.maximum(z, 1e-300)
+
+        if verbose:
+            print(f"it={it} mu={mu:.3e} rp={np.abs(r_p).max():.3e} "
+                  f"rd={np.abs(r_d).max():.3e} obj={c @ x:.6f}")
+
+    lam = np.zeros(prob.nclass)
+    for cls in range(prob.nclass):
+        r = lb_row.get(cls)
+        if r is not None:
+            lam[cls] = z[r]
+
+    if prob.c[prob.idx_T] == 1.0:
+        val = float(x[prob.idx_T])
+    else:
+        val = float(-(c @ x))
+    return LPSolution(T=val, x=x, lam=lam, status="optimal", iterations=it + 1)

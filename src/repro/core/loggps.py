@@ -1,0 +1,105 @@
+"""LogGPS parameter sets (paper §II-A) with link classes.
+
+The paper's LogGPS has scalar L/o/g/G/S.  We generalize L and G to *link
+classes* so a single parameter object covers:
+  - homogeneous clusters (1 class — the paper's main experiments),
+  - TPU pods (class 0 = ICI intra-pod, class 1 = DCN pod-crossing), and
+  - the heterogeneous HLogGP variant of Appendix I (arbitrary rank→class map).
+
+o (per-message CPU overhead) and g (msg gap) stay scalar as in the paper
+("we assume o, g and computational power are the same across all ranks",
+Appendix I).  The paper omits g because o > g on their testbed; we keep it
+available but default it to 0 for graph analyses (the DES honors it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LogGPS:
+    """All times in µs, G in µs/byte, S in bytes."""
+
+    L: tuple = (1.0,)           # per-class base latency (µs)
+    G: tuple = (2.0e-5,)        # per-class gap/byte (µs/B); 2e-5 µs/B = 50 GB/s
+    o: float = 0.5              # per-message CPU overhead (µs)
+    g: float = 0.0              # inter-message gap (µs); 0 = omitted (o > g)
+    S: float = 256e3            # rendezvous threshold (bytes)
+    class_names: tuple = ("net",)
+    # rank → class mapping for p2p links; default: single class
+    rank_of_class: Optional[Callable[[int, int], int]] = None
+
+    @property
+    def nclass(self) -> int:
+        return len(self.L)
+
+    def link_class(self, src_rank: int, dst_rank: int) -> int:
+        if self.rank_of_class is None:
+            return 0
+        return self.rank_of_class(src_rank, dst_rank)
+
+    def gap_cost(self, nbytes: float, src_rank: int = 0, dst_rank: int = 0) -> float:
+        """(s-1)·G for the link's class, in µs."""
+        c = self.link_class(src_rank, dst_rank)
+        return max(nbytes - 1.0, 0.0) * self.G[c]
+
+    def with_delta(self, dL, cls: Optional[int] = None) -> "LogGPS":
+        """Return params with ΔL (µs) added to one class (or all if None)."""
+        L = list(self.L)
+        if cls is None:
+            L = [x + dL for x in L]
+        else:
+            L[cls] = L[cls] + dL
+        return dataclasses.replace(self, L=tuple(L))
+
+    def replace(self, **kw) -> "LogGPS":
+        return dataclasses.replace(self, **kw)
+
+
+def cluster_params(L_us: float = 3.0, G_ns_per_byte: float = 0.018,
+                   o_us: float = 5.0, S_bytes: float = 256e3) -> LogGPS:
+    """The paper's CSCS testbed constants (§III-B): L=3µs, G=0.018ns/B, S=256KB.
+
+    o was matched per application (5–32 µs); default to LULESH's 5 µs.
+    """
+    return LogGPS(L=(L_us,), G=(G_ns_per_byte * 1e-3,), o=o_us, S=S_bytes,
+                  class_names=("ib",))
+
+
+def tpu_pod_params(pod_size: int, L_ici_us: float = 1.0, L_dcn_us: float = 10.0,
+                   ici_gbps: float = 50.0, dcn_gbps: float = 25.0,
+                   o_us: float = 0.5, S_bytes: float = 1e9) -> LogGPS:
+    """Two-class TPU parameters: class 0 = ICI (intra-pod), class 1 = DCN.
+
+    ``pod_size`` ranks per pod; ranks are laid out pod-major.  S defaults to
+    effectively-infinite: XLA collectives are one-sided DMA (no rendezvous
+    handshake at the LogGPS level).
+    """
+    G_ici = 1.0 / (ici_gbps * 1e3)   # µs per byte (GB/s → B/µs is 1e3·GB/s)
+    G_dcn = 1.0 / (dcn_gbps * 1e3)
+
+    def link_class(a: int, b: int) -> int:
+        return 0 if (a // pod_size) == (b // pod_size) else 1
+
+    return LogGPS(L=(L_ici_us, L_dcn_us), G=(G_ici, G_dcn), o=o_us, S=S_bytes,
+                  class_names=("ici", "dcn"), rank_of_class=link_class)
+
+
+def edge_costs(graph, params: LogGPS) -> tuple[np.ndarray, np.ndarray]:
+    """Evaluate edge costs for a parameter assignment.
+
+    Returns (w_const, w_total):
+      w_const[e] = econst (already includes (s-1)G from build time)
+      w_total[e] = w_const + Σ_c elat[e,c] · L_c
+    Build-time G is used (graphs embed (s-1)G into econst via add_message);
+    analyses that vary G should rebuild or use `rescale_G`.
+    """
+    Lvec = np.asarray(params.L, dtype=np.float64)
+    if graph.nclass != Lvec.shape[0]:
+        raise ValueError(f"graph has {graph.nclass} latency classes, params {Lvec.shape[0]}")
+    w = graph.econst + graph.elat.astype(np.float64) @ Lvec
+    return graph.econst, w

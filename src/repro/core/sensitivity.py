@@ -1,0 +1,83 @@
+"""High-level sensitivity / tolerance API (paper §II-B, §II-D, Figs 1 & 9).
+
+Wraps the DAG engine (default, exact & fast) and the explicit-LP solvers
+(HiGHS / our IPM — the paper-faithful path) behind one interface:
+
+    report = analyze(graph, params)           # T, λ_L, ρ_L at the base point
+    curve  = latency_curve(graph, params, deltas)   # Fig 9 top panels
+    tol    = latency_tolerance(graph, params, 0.01) # Fig 1 green zone
+    lcs    = critical_latencies(graph, params, lo, hi)  # Algorithm 2
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from . import dag
+from .graph import ExecutionGraph
+from .loggps import LogGPS
+
+
+@dataclasses.dataclass
+class SensitivityReport:
+    T: float                     # predicted runtime (µs)
+    lam: np.ndarray              # λ per latency class (messages on critical path)
+    rho: np.ndarray              # ρ per class (latency share of critical path)
+    params: LogGPS
+
+    def __str__(self):
+        rows = [f"T = {self.T:.3f} µs"]
+        for c, name in enumerate(self.params.class_names):
+            rows.append(f"  λ_L[{name}] = {self.lam[c]:.1f}   "
+                        f"ρ_L[{name}] = {100 * self.rho[c]:.2f}%")
+        return "\n".join(rows)
+
+
+def analyze(g: ExecutionGraph, params: LogGPS,
+            plan: Optional[dag.LevelPlan] = None) -> SensitivityReport:
+    s = dag.evaluate(g, params, plan=plan)
+    return SensitivityReport(T=s.T, lam=s.lam.copy(), rho=s.rho(), params=params)
+
+
+@dataclasses.dataclass
+class LatencyCurve:
+    deltas: np.ndarray
+    T: np.ndarray
+    lam: np.ndarray
+    rho: np.ndarray
+
+    def rrmse_vs(self, measured: np.ndarray) -> float:
+        """Relative RMSE (paper Fig 9 / Table II metric)."""
+        m = np.asarray(measured, dtype=np.float64)
+        return float(np.sqrt(np.mean((self.T - m) ** 2)) / np.mean(m))
+
+
+def latency_curve(g: ExecutionGraph, params: LogGPS, deltas: Sequence[float],
+                  cls: int = 0, plan: Optional[dag.LevelPlan] = None) -> LatencyCurve:
+    plan = plan or dag.LevelPlan(g)
+    Ts, lams, rhos = [], [], []
+    for d in deltas:
+        s = plan.forward(params.with_delta(float(d), cls))
+        Ts.append(s.T)
+        lams.append(float(s.lam[cls]))
+        rhos.append(float(s.rho()[cls]))
+    return LatencyCurve(deltas=np.asarray(deltas, dtype=np.float64),
+                        T=np.asarray(Ts), lam=np.asarray(lams), rho=np.asarray(rhos))
+
+
+def latency_tolerance(g: ExecutionGraph, params: LogGPS,
+                      degradations: Sequence[float] = (0.01, 0.02, 0.05),
+                      cls: int = 0, plan: Optional[dag.LevelPlan] = None) -> dict:
+    """The Fig 1 colored zones: ΔL tolerable before each p% degradation."""
+    plan = plan or dag.LevelPlan(g)
+    return {p: dag.tolerance(g, params, p, cls=cls, plan=plan)
+            for p in degradations}
+
+
+def critical_latencies(g: ExecutionGraph, params: LogGPS, L_min: float,
+                       L_max: float, cls: int = 0,
+                       plan: Optional[dag.LevelPlan] = None) -> list:
+    return dag.breakpoints(g, params, L_min, L_max, cls=cls, plan=plan)

@@ -1,0 +1,125 @@
+"""Discrete-event LogGPS simulator — the LogGOPSim role (paper §II-D3, Fig 7).
+
+Replays an :class:`ExecutionGraph` with a priority queue, modeling per-rank
+CPU occupancy (o per message vertex, calc costs) and the message gap g.
+This is the *baseline* LLAMP outperforms; it also powers the validation
+loop: the latency injector variants of Fig 8 are implemented here, so we can
+"measure" runtimes under injected ΔL and compare with LP predictions
+(§III) without physical hardware.
+
+Injector modes (Fig 8):
+  "flow"      — (D) our delay-thread design: ΔL added per message at the
+                flow level; neither sender nor receiver progress is blocked.
+  "sender"    — (B) Underwood-style: the *send* operation itself is delayed
+                by ΔL, stalling the sender's op chain.
+  "progress"  — (C) single progress thread on the receiver: delays are
+                serialized per receiving rank (ΔL-busy server), so
+                back-to-back messages accumulate ~2ΔL.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Optional
+
+import numpy as np
+
+from .graph import ExecutionGraph, SEND, RECV
+from .loggps import LogGPS
+
+
+@dataclasses.dataclass
+class SimResult:
+    T: float
+    t_start: np.ndarray
+    t_end: np.ndarray
+    events: int
+
+
+def simulate(g: ExecutionGraph, params: LogGPS, delta_L: float = 0.0,
+             injector: str = "flow", inject_class: Optional[int] = None,
+             model_gap: bool = True) -> SimResult:
+    """Event-driven replay. delta_L (µs) is injected per message edge.
+
+    inject_class: restrict injection to one latency class (None = all).
+    """
+    nv = g.num_vertices
+    Lvec = np.asarray(params.L, dtype=np.float64)
+    # per-edge latency cost and message-ness
+    lat_edge = g.elat.astype(np.float64) @ Lvec
+    is_msg = g.ebytes > 0
+    n_lat = (g.elat.sum(axis=1) if inject_class is None
+             else g.elat[:, inject_class]).astype(np.float64)
+
+    indeg = np.bincount(g.edst, minlength=nv).astype(np.int64)
+    # CSR by source
+    order = np.argsort(g.esrc, kind="stable")
+    out_edge = order
+    counts = np.bincount(g.esrc, minlength=nv)
+    out_ptr = np.zeros(nv + 1, dtype=np.int64)
+    np.cumsum(counts, out=out_ptr[1:])
+
+    t_ready = np.zeros(nv)            # max over arrived deps
+    t_start = np.zeros(nv)
+    t_end = np.zeros(nv)
+    rank_free = np.zeros(g.nranks)    # CPU availability per rank
+    rank_gap = np.zeros(g.nranks)     # g-gap: earliest next message op
+    delay_server = np.zeros(g.nranks)  # Fig 8C progress-thread serialization
+
+    heap: list = []
+    events = 0
+    for v in np.nonzero(indeg == 0)[0]:
+        heapq.heappush(heap, (0.0, int(v)))
+
+    kind = g.kind
+    vcost = g.vcost
+    vrank = g.vrank
+    ggap = params.g if model_gap else 0.0
+
+    while heap:
+        t_avail, v = heapq.heappop(heap)
+        events += 1
+        r = vrank[v]
+        start = max(t_avail, t_ready[v], rank_free[r])
+        if ggap and kind[v] in (SEND, RECV):
+            start = max(start, rank_gap[r])
+            rank_gap[r] = start + ggap
+        cost = vcost[v]
+        if injector == "sender" and kind[v] == SEND and delta_L > 0:
+            cost = cost + delta_L  # Fig 8B: the send op itself stalls ΔL
+        t_start[v] = start
+        end = start + cost
+        t_end[v] = end
+        rank_free[r] = end
+
+        # deliver to successors
+        for k in range(out_ptr[v], out_ptr[v + 1]):
+            e = out_edge[k]
+            w = g.edst[e]
+            arr = end + g.econst[e] + lat_edge[e]
+            if is_msg[e] and delta_L > 0 and n_lat[e] > 0:
+                if injector == "flow":
+                    arr += delta_L * n_lat[e]          # Fig 8D: pure flow delay
+                elif injector == "progress":
+                    # Fig 8C: per-receiver delay server busy ΔL per message
+                    rr = vrank[w]
+                    rel = max(arr, delay_server[rr]) + delta_L
+                    delay_server[rr] = rel
+                    arr = rel
+                # "sender" already applied at the send vertex
+            t_ready[w] = max(t_ready[w], arr)
+            indeg_w = indeg[w] - 1
+            indeg[w] = indeg_w
+            if indeg_w == 0:
+                heapq.heappush(heap, (t_ready[w], int(w)))
+
+    return SimResult(T=float(t_end.max(initial=0.0)), t_start=t_start,
+                     t_end=t_end, events=events)
+
+
+def runtime_sweep(g: ExecutionGraph, params: LogGPS, deltas,
+                  injector: str = "flow") -> np.ndarray:
+    """Measured-runtime curve under injected ΔL (the paper's x-axis)."""
+    return np.asarray([simulate(g, params, float(d), injector=injector).T
+                       for d in deltas])

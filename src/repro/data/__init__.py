@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, DataIterator  # noqa: F401

@@ -1,0 +1,94 @@
+"""Deterministic, resumable, shardable synthetic-token pipeline.
+
+Production properties we keep even though the corpus is synthetic:
+  - **Counter-based determinism**: batch for step s is a pure function of
+    (seed, s) — restart/elastic-rescale never replays or skips data.
+  - **Host-shardable**: ``shard(host_id, n_hosts)`` views produce disjoint
+    slices of the same global batch, so multi-host dataloading is a slice,
+    not a coordination problem.
+  - **Checkpointable**: ``state()``/``restore()`` round-trips the cursor.
+
+The "corpus" is a structured Markov-ish stream (not uniform noise) so that
+cross-entropy actually decreases during the end-to-end example runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    embed_dim: Optional[int] = None   # set → emit 'embeds' instead of tokens
+    n_modes: int = 64                 # latent "topic" count of the synthetic corpus
+
+
+class DataIterator:
+    def __init__(self, cfg: DataConfig, step: int = 0, host_id: int = 0,
+                 n_hosts: int = 1):
+        assert cfg.global_batch % n_hosts == 0
+        self.cfg = cfg
+        self._step = step
+        self.host_id = host_id
+        self.n_hosts = n_hosts
+        # fixed per-mode transition tables (derived from seed, not stateful)
+        root = np.random.default_rng(cfg.seed)
+        self._mode_shift = root.integers(1, cfg.vocab, size=cfg.n_modes)
+        self._mode_mul = root.integers(1, 7, size=cfg.n_modes) * 2 + 1
+
+    # -- checkpointable cursor -------------------------------------------------
+    def state(self) -> dict:
+        return {"step": self._step, "seed": self.cfg.seed}
+
+    def restore(self, state: dict) -> None:
+        assert state["seed"] == self.cfg.seed, "data seed changed across restore"
+        self._step = int(state["step"])
+
+    @property
+    def step(self) -> int:
+        return self._step
+
+    # -- batch generation --------------------------------------------------------
+    def _gen_tokens(self, step: int, lo: int, hi: int) -> np.ndarray:
+        """Rows [lo, hi) of the global batch for `step` (pure function)."""
+        cfg = self.cfg
+        rng = np.random.default_rng((cfg.seed, step))
+        modes = rng.integers(0, cfg.n_modes, size=cfg.global_batch)
+        starts = rng.integers(0, cfg.vocab, size=cfg.global_batch)
+        noise = rng.integers(0, cfg.vocab, size=(cfg.global_batch, cfg.seq_len + 1))
+        keep = rng.random((cfg.global_batch, cfg.seq_len + 1)) < 0.9
+        t = np.arange(cfg.seq_len + 1)
+        seq = (starts[:, None] + self._mode_mul[modes][:, None] * t
+               + self._mode_shift[modes][:, None]) % cfg.vocab
+        seq = np.where(keep, seq, noise)
+        return seq[lo:hi].astype(np.int32)
+
+    def next(self) -> dict:
+        cfg = self.cfg
+        per_host = cfg.global_batch // self.n_hosts
+        lo = self.host_id * per_host
+        seq = self._gen_tokens(self._step, lo, lo + per_host)
+        self._step += 1
+        batch = {"tokens": seq[:, :-1], "labels": seq[:, 1:].astype(np.int32)}
+        if cfg.embed_dim is not None:
+            rng = np.random.default_rng((cfg.seed, self._step, 7))
+            emb = rng.standard_normal(
+                (per_host, cfg.seq_len, cfg.embed_dim)).astype(np.float32)
+            # keep labels correlated with embeddings so loss can decrease
+            batch = {"embeds": emb,
+                     "labels": (np.abs(emb[..., 0]) * cfg.vocab).astype(np.int32)
+                     % cfg.vocab}
+        return batch
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        return self.next()

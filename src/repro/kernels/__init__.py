@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+  flash_attention/  — blocked online-softmax attention (GQA, causal):
+                      the train/prefill hot spot of every attention arch.
+  linear_scan/      — chunked diagonal-decay state scan: the Mamba/RWKV6
+                      recurrence (jamba, rwkv6 at 500k context).
+  maxplus/          — (max,+)-semiring blocked mat-vec: the LLAMP DAG
+                      engine's level-relaxation inner loop for dense-banded
+                      execution graphs (parameter sweeps batch over the
+                      lane dimension).
+
+Kernels are written against TPU BlockSpec/VMEM tiling and validated in
+``interpret=True`` mode on CPU (this container has no TPU); ``ops.py``
+wrappers auto-select interpret mode off-TPU.
+"""
+
+from .flash_attention.ops import flash_attention  # noqa: F401
+from .linear_scan.ops import linear_scan  # noqa: F401
+from .maxplus.ops import maxplus_matvec  # noqa: F401

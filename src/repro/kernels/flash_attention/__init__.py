@@ -1,0 +1,2 @@
+from .ops import flash_attention  # noqa: F401
+from .ref import flash_attention_ref  # noqa: F401

@@ -1,0 +1,103 @@
+"""Blocked online-softmax (flash) attention, TPU Pallas.
+
+TPU adaptation of the FlashAttention blocking: instead of CUDA warps and
+shared memory, tiles live in VMEM and the (bq × d)·(d × bk) score matmul
+feeds the MXU; the running max/denominator recurrence is VPU work.  The KV
+axis is the innermost grid dimension with "arbitrary" semantics, so the
+m/l/acc carry lives in VMEM scratch across KV steps (the TPU equivalent of
+keeping the accumulator in registers across the k-loop).
+
+Layouts: q [BH, Tq, d], k/v [BHkv, Tk, d]; GQA folds the head-group mapping
+into the k/v index_map (query head h reads kv head h // n_rep) — no
+jnp.repeat materialization.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, causal: bool, bq: int, bk: int, n_k: int,
+                 kv_len: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale            # [bq, d]
+    k = k_ref[0].astype(jnp.float32)                    # [bk, d]
+    v = v_ref[0].astype(jnp.float32)                    # [bk, dv]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [bq, bk]
+
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < kv_len
+    if causal:
+        mask = mask & (kpos <= qpos)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                  # [bq]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal: bool = True, bq: int = 128,
+                           bk: int = 128, kv_len=None, interpret: bool = False):
+    """q: [BH, Tq, d]; k/v: [BHkv, Tk, d/dv]. Returns [BH, Tq, dv]."""
+    BH, Tq, d = q.shape
+    BHkv, Tk, dv = v.shape
+    n_rep = BH // BHkv
+    bq = min(bq, Tq)
+    bk = min(bk, Tk)
+    assert Tq % bq == 0 and Tk % bk == 0, (Tq, bq, Tk, bk)
+    n_q, n_k = Tq // bq, Tk // bk
+    kv_len = Tk if kv_len is None else int(kv_len)
+    scale = 1.0 / np.sqrt(q.shape[-1])
+
+    grid = (BH, n_q, n_k)
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, bq=bq, bk=bk, n_k=n_k,
+        kv_len=kv_len)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, iq, ik: (b // n_rep, ik, 0)),
+            pl.BlockSpec((1, bk, dv), lambda b, iq, ik: (b // n_rep, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dv), lambda b, iq, ik: (b, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Tq, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

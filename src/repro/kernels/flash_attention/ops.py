@@ -1,0 +1,35 @@
+"""jit'd public wrapper for the flash attention kernel.
+
+Accepts model-layout tensors [B, T, H, D] and handles GQA head folding;
+interpret mode is selected automatically off-TPU (kernel-body-in-Python
+validation, per the container's CPU-only setup).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
+                    bk: int = 128, interpret: bool = None):
+    """q: [B, Tq, H, d]; k/v: [B, Tk, Hkv, d/dv] → [B, Tq, H, dv]."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, Tq, H, d = q.shape
+    _, Tk, Hkv, dv = v.shape
+    qf = jnp.moveaxis(q, 2, 1).reshape(B * H, Tq, d)
+    kf = jnp.moveaxis(k, 2, 1).reshape(B * Hkv, Tk, k.shape[-1])
+    vf = jnp.moveaxis(v, 2, 1).reshape(B * Hkv, Tk, dv)
+    of = flash_attention_kernel(qf, kf, vf, causal=causal, bq=bq, bk=bk,
+                                interpret=interpret)
+    return jnp.moveaxis(of.reshape(B, H, Tq, dv), 1, 2)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, kv_len=None):
+    """q: [BH, Tq, d]; k/v: [BHkv, Tk, d/dv] → [BH, Tq, dv] (f32 math)."""
+    BH, Tq, d = q.shape
+    BHkv, Tk, dv = v.shape
+    n_rep = BH // BHkv
+    k = jnp.repeat(k, n_rep, axis=0)
+    v = jnp.repeat(v, n_rep, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(d)
+    kpos = jnp.arange(Tk)
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask = mask & (kpos[None, :] <= jnp.arange(Tq)[:, None])
+    if kv_len is not None:
+        mask = mask & (kpos[None, :] < kv_len)
+    s = jnp.where(mask[None], s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,88 @@
+"""Chunked diagonal-decay state scan (Mamba/RWKV6 recurrence), TPU Pallas.
+
+Computes, per (batch, channel d, state s):
+    h_t = a_t ⊙ h_{t-1} + b_t          (h_0 given)
+    y_t[d] = Σ_s h_t[d,s] · c_t[s]
+
+GPU Mamba kernels split the scan across warps with shuffle-based prefix
+products; the TPU adaptation instead tiles channels onto the 8×128 VPU
+lanes and walks time *sequentially inside the kernel* over a VMEM-resident
+time chunk, carrying h in VMEM scratch across chunk grid steps (innermost
+grid dim = time, "arbitrary" semantics).  Channel blocks are the parallel
+grid dims; the d_state axis (≤16) rides the sublane dimension.
+
+Grid: (B, D/bd, T/ct);  blocks: a,b [ct, bd, S], c [ct, S] → y [ct, bd].
+h carry: VMEM scratch [bd, S] — written back to HBM at the final chunk.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(a_ref, b_ref, c_ref, h0_ref, y_ref, hout_ref, h_ref, *,
+                 ct: int, n_t: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)       # [ct, bd, S]
+    b = b_ref[0].astype(jnp.float32)
+    c = c_ref[0].astype(jnp.float32)       # [ct, S]
+
+    def body(t, h):
+        h = a[t] * h + b[t]                # [bd, S]
+        y_ref[0, t] = jnp.sum(h * c[t][None, :], axis=1).astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, ct, body, h_ref[...])
+    h_ref[...] = h
+
+    @pl.when(it == n_t - 1)
+    def _finish():
+        hout_ref[0] = h.astype(hout_ref.dtype)
+
+
+def linear_scan_kernel(a, b, c, h0, *, bd: int = 128, ct: int = 128,
+                       interpret: bool = False):
+    """a,b: [B, T, D, S]; c: [B, T, S]; h0: [B, D, S].
+
+    Returns (y [B, T, D], h_final [B, D, S]).
+    """
+    B, T, D, S = a.shape
+    bd = min(bd, D)
+    ct = min(ct, T)
+    assert D % bd == 0 and T % ct == 0
+    n_d, n_t = D // bd, T // ct
+    grid = (B, n_d, n_t)
+
+    kernel = functools.partial(_scan_kernel, ct=ct, n_t=n_t)
+    # time-major blocks for the scan: use [1, ct, bd, S] slices
+    y, h_final = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, ct, bd, S), lambda ib, id_, it: (ib, it, id_, 0)),
+            pl.BlockSpec((1, ct, bd, S), lambda ib, id_, it: (ib, it, id_, 0)),
+            pl.BlockSpec((1, ct, S), lambda ib, id_, it: (ib, it, 0)),
+            pl.BlockSpec((1, bd, S), lambda ib, id_, it: (ib, id_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, ct, bd), lambda ib, id_, it: (ib, it, id_)),
+            pl.BlockSpec((1, bd, S), lambda ib, id_, it: (ib, id_, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, D), a.dtype),
+            jax.ShapeDtypeStruct((B, D, S), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, S), jnp.float32)],
+        interpret=interpret,
+    )(a, b, c, h0)
+    return y, h_final

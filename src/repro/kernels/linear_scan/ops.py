@@ -1,0 +1,17 @@
+"""jit'd wrapper for the linear scan kernel (auto-interpret off-TPU)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import linear_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "ct", "interpret"))
+def linear_scan(a, b, c, h0, *, bd: int = 128, ct: int = 128,
+                interpret: bool = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return linear_scan_kernel(a, b, c, h0, bd=bd, ct=ct, interpret=interpret)

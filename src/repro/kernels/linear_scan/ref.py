@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the linear scan kernel (sequential lax.scan)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan_ref(a, b, c, h0):
+    """a,b: [B,T,D,S]; c: [B,T,S]; h0: [B,D,S] → (y [B,T,D], h [B,D,S])."""
+
+    def step(h, inp):
+        a_t, b_t, c_t = inp
+        h = a_t * h + b_t
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    aT = jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+    bT = jnp.moveaxis(b.astype(jnp.float32), 1, 0)
+    cT = jnp.moveaxis(c.astype(jnp.float32), 1, 0)
+    h, yT = jax.lax.scan(step, h0.astype(jnp.float32), (aT, bT, cT))
+    return jnp.moveaxis(yT, 0, 1).astype(a.dtype), h

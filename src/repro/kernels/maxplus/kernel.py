@@ -1,0 +1,66 @@
+"""(max,+)-semiring blocked mat-vec — LLAMP's level-relaxation hot loop.
+
+The DAG engine's inner operation per topological level is
+    t'[i] = max_j (A[i,j] + t[j])
+over the level's dense-banded adjacency (A = cost of edge j→i, -inf when
+absent).  A latency *sweep* evaluates K parameter points at once, so t is
+[N, K] and the kernel is a (max,+) "matmul" — the TPU twist is that the MXU
+can't run semirings, so the reduction runs on the VPU with the same
+[bm × bn] VMEM blocking a matmul would use; K rides the 128-wide lane axis
+(sweep points are embarrassingly lane-parallel).
+
+Grid: (M/bm, N/bn) with N innermost; acc [bm, K] VMEM scratch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _maxplus_kernel(A_ref, t_ref, o_ref, acc_ref, *, n_n: int):
+    jn = pl.program_id(1)
+
+    @pl.when(jn == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, NEG_INF)
+
+    A = A_ref[...]                       # [bm, bn]
+    t = t_ref[...]                       # [bn, K]
+    # (max,+) product: acc[i,k] = max(acc[i,k], max_j A[i,j] + t[j,k])
+    cand = jnp.max(A[:, :, None] + t[None, :, :], axis=1)
+    acc_ref[...] = jnp.maximum(acc_ref[...], cand)
+
+    @pl.when(jn == n_n - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def maxplus_matvec_kernel(A, t, *, bm: int = 128, bn: int = 128,
+                          interpret: bool = False):
+    """A: [M, N] (−inf = no edge); t: [N, K] → [M, K]."""
+    M, N = A.shape
+    _, K = t.shape
+    bm = min(bm, M)
+    bn = min(bn, N)
+    assert M % bm == 0 and N % bn == 0
+    grid = (M // bm, N // bn)
+    kernel = functools.partial(_maxplus_kernel, n_n=N // bn)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, K), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, K), t.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, K), jnp.float32)],
+        interpret=interpret,
+    )(A, t)

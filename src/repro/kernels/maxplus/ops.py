@@ -1,0 +1,16 @@
+"""jit'd wrapper for the (max,+) mat-vec (auto-interpret off-TPU)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import maxplus_matvec_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def maxplus_matvec(A, t, *, bm: int = 128, bn: int = 128, interpret: bool = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return maxplus_matvec_kernel(A, t, bm=bm, bn=bn, interpret=interpret)

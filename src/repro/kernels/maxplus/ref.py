@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the (max,+) mat-vec."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def maxplus_matvec_ref(A, t):
+    """A: [M, N]; t: [N, K] → out[i,k] = max_j A[i,j] + t[j,k]."""
+    return jnp.max(A[:, :, None] + t[None, :, :], axis=1)

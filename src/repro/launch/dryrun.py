@@ -1,0 +1,264 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver:
+  1. builds the step program (train_step / prefill / serve_step),
+  2. jits with explicit in/out shardings on the production mesh,
+  3. ``.lower(**input_specs).compile()`` — success proves the sharding
+     config is coherent (no mismatched collectives, divisibility, layouts),
+  4. prints ``memory_analysis()`` (fits-in-HBM evidence) and
+     ``cost_analysis()`` (FLOPs/bytes for §Roofline),
+  5. parses collective bytes from the compiled HLO,
+  6. runs the two-point scan-correction protocol (see roofline_util),
+  7. appends a JSON record consumed by benchmarks/roofline.py.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  python -m repro.launch.dryrun --all                  # single-pod 16×16
+  python -m repro.launch.dryrun --all --multi-pod      # 2×16×16
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as PSpec
+
+from repro import configs
+from repro.core import hlo as hlomod
+from repro.launch import roofline_util as ru
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (input_specs, mesh_policy, runtime_knobs,
+                                spec_shardings)
+from repro.models import config as mc
+from repro.optim import OptConfig
+from repro.runtime import build_serve_step, build_train_step
+from repro.runtime.steps import build_prefill_step
+
+SHAPES = {s.name: s for s in mc.ALL_SHAPES}
+
+
+def _mem_dict(m) -> dict:
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {}
+    for k in keys:
+        try:
+            out[k] = int(getattr(m, k))
+        except Exception:
+            pass
+    return out
+
+
+def _cost_dict(c) -> dict:
+    if isinstance(c, (list, tuple)):
+        c = c[0]
+    return {k: float(v) for k, v in dict(c).items()
+            if isinstance(v, (int, float))
+            and k in ("flops", "bytes accessed", "transcendentals")}
+
+
+def build_step(cfg, shape, mesh, opt_cfg):
+    policy = mesh_policy(cfg, shape, mesh)
+    specs = input_specs(cfg, shape, opt_cfg)
+    shards = spec_shardings(cfg, shape, mesh, specs)
+    repl = NamedSharding(mesh, PSpec())
+
+    if shape.mode == "train":
+        knobs = runtime_knobs(cfg)
+        fn = build_train_step(cfg, opt_cfg, policy=policy,
+                              n_microbatches=knobs["n_microbatches"],
+                              unroll_microbatches=not cfg.scan_layers)
+        args = (specs["state"], specs["batch"], specs["step"])
+        in_sh = (shards["state"], shards["batch"], repl)
+        out_sh = (shards["state"], None)
+        donate = (0,)
+    elif shape.mode == "prefill":
+        fn = build_prefill_step(cfg, policy=policy)
+        args = (specs["params"], specs["batch"])
+        in_sh = (shards["params"], shards["batch"])
+        out_sh = None
+        donate = ()
+    else:
+        fn = build_serve_step(cfg, policy=policy)
+        args = (specs["params"], specs["batch"], specs["cache"],
+                specs["cache_index"])
+        in_sh = (shards["params"], shards["batch"], shards["cache"], repl)
+        out_sh = (None, shards["cache"])
+        donate = (2,)
+
+    jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=donate)
+    return jitted, args
+
+
+def lower_compile(cfg, shape, mesh, opt_cfg):
+    jitted, args = build_step(cfg, shape, mesh, opt_cfg)
+    t0 = time.time()
+    lowered = jitted.lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    return lowered, compiled, {"lower_s": t1 - t0, "compile_s": t2 - t1}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             skip_two_point: bool = False) -> dict:
+    cfg, _ = configs.get(arch)
+    shape = SHAPES[shape_name]
+    skips = configs.shape_skips(arch)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "mode": shape.mode, "status": "ok"}
+    if shape_name in skips:
+        rec["status"] = "skip"
+        rec["reason"] = skips[shape_name]
+        print(f"[dryrun] SKIP {arch} × {shape_name}: {skips[shape_name]}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    opt_cfg = OptConfig(state_dtype=runtime_knobs(cfg)["state_dtype"])
+
+    try:
+        lowered, compiled, times = lower_compile(cfg, shape, mesh, opt_cfg)
+        mem = compiled.memory_analysis()
+        print(f"[dryrun] {arch} × {shape_name} × {mesh_name} memory_analysis:")
+        print(mem)
+        cost = compiled.cost_analysis()
+        print(f"[dryrun] cost_analysis: flops={_cost_dict(cost).get('flops', 0):.3e} "
+              f"bytes={_cost_dict(cost).get('bytes accessed', 0):.3e}")
+        text = compiled.as_text()
+        coll = hlomod.collective_stats(text)
+
+        rec.update({
+            "n_chips": n_chips,
+            "times": times,
+            "memory_per_device": _mem_dict(mem),
+            "cost_raw_per_device": _cost_dict(cost),
+            "collectives_raw": {k: v for k, v in coll["by_kind"].items()},
+            "collective_bytes_raw": coll["total_bytes"],
+            "wire_bytes_raw": coll["wire_bytes"],
+            "hlo_bytes": len(text),
+            "n_collective_ops": len(coll["ops"]),
+            "coll_group_sizes": sorted({o.group_size for o in coll["ops"]}),
+        })
+
+        # ---- two-point scan correction (all values per-device) ---------------
+        if not skip_two_point and cfg.n_periods > 2:
+            f, b, w = {}, {}, {}
+            for n in (1, 2):
+                cfg_n = ru.with_n_periods(cfg, n)
+                _, comp_n, _ = lower_compile(cfg_n, shape, mesh, opt_cfg)
+                cd = _cost_dict(comp_n.cost_analysis())
+                cs = hlomod.collective_stats(comp_n.as_text())
+                f[n] = cd.get("flops", 0.0)
+                b[n] = cd.get("bytes accessed", 0.0)
+                w[n] = cs["wire_bytes"]
+            n = cfg.n_periods
+            rec["cost_corrected_per_device"] = {
+                "flops": f[1] + (n - 1) * (f[2] - f[1]),
+                "bytes": b[1] + (n - 1) * (b[2] - b[1]),
+                "wire_bytes": w[1] + (n - 1) * (w[2] - w[1]),
+                "two_point": {"f": f, "b": b, "w": w},
+            }
+        else:
+            cd = rec["cost_raw_per_device"]
+            rec["cost_corrected_per_device"] = {
+                "flops": cd.get("flops", 0.0),
+                "bytes": cd.get("bytes accessed", 0.0),
+                "wire_bytes": coll["wire_bytes"],
+            }
+
+        # token-axis scan correction is a GLOBAL count → convert per-device
+        tok_corr = ru.token_scan_flop_correction(cfg, shape) / n_chips
+        rec["cost_corrected_per_device"]["flops"] += tok_corr
+        rec["token_scan_flop_correction_per_device"] = tok_corr
+        rec["model_flops_global"] = ru.model_flops(cfg, shape)
+
+        # ---- roofline terms (per-chip) ----------------------------------------
+        wb = rec["cost_corrected_per_device"]["wire_bytes"]
+        # classify ICI vs DCN traffic: any collective whose group spans pods
+        # (group_size > 256, or the 2-element pod-axis groups) crosses DCN.
+        dcn_frac = 0.0
+        if multi_pod:
+            tot = sum(o.wire_bytes for o in coll["ops"]) or 1.0
+            dcn = sum(o.wire_bytes for o in coll["ops"]
+                      if o.group_size > 256 or o.group_size == 2)
+            dcn_frac = dcn / tot
+        rec["dcn_wire_fraction"] = dcn_frac
+        rec["roofline"] = ru.roofline_terms(
+            rec["cost_corrected_per_device"]["flops"],
+            rec["cost_corrected_per_device"]["bytes"],
+            wb * (1 - dcn_frac), wb * dcn_frac)
+        hlo_global = rec["cost_corrected_per_device"]["flops"] * n_chips
+        rec["roofline"]["model_vs_hlo"] = (
+            rec["model_flops_global"] / max(hlo_global, 1.0))
+        print(f"[dryrun] roofline: {rec['roofline']}")
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] ERROR {arch} × {shape_name} × {mesh_name}: {rec['error']}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-two-point", action="store_true")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells whose JSON already exists with ok/skip")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    if args.all:
+        for arch in configs.all_archs():
+            for sname in SHAPES:
+                cells.append((arch, sname))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape)]
+
+    mesh_name = "2x16x16" if args.multi_pod else "16x16"
+    ok = skip = err = 0
+    for arch, sname in cells:
+        fn = os.path.join(args.out, f"{arch}__{sname}__{mesh_name}.json")
+        if args.resume and os.path.exists(fn):
+            try:
+                with open(fn) as fh:
+                    prev = json.load(fh)
+                if prev.get("status") in ("ok", "skip"):
+                    ok += prev["status"] == "ok"
+                    skip += prev["status"] == "skip"
+                    print(f"[dryrun] RESUME-SKIP {arch} × {sname} × {mesh_name}")
+                    continue
+            except Exception:
+                pass
+        rec = run_cell(arch, sname, args.multi_pod,
+                       skip_two_point=args.skip_two_point)
+        fn = os.path.join(args.out, f"{arch}__{sname}__{mesh_name}.json")
+        with open(fn, "w") as fh:
+            json.dump(rec, fh, indent=1)
+        ok += rec["status"] == "ok"
+        skip += rec["status"] == "skip"
+        err += rec["status"] == "error"
+        print(f"[dryrun] {arch} × {sname} × {mesh_name} → {rec['status']}  "
+              f"(ok={ok} skip={skip} err={err})", flush=True)
+    print(f"[dryrun] DONE ok={ok} skip={skip} err={err}")
+    return 0 if err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

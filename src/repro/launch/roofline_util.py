@@ -1,0 +1,110 @@
+"""Roofline accounting helpers.
+
+XLA's ``cost_analysis()`` counts a while-loop body ONCE (verified
+empirically: a 10-step scanned matmul reports 1 matmul of FLOPs), so raw
+HLO numbers undercount scanned compute.  Correction protocol:
+
+  1. **Layer scan** (dominant): two-point lowering — compile the model at
+     n_periods ∈ {1, 2}; per-period cost Δ = F(2) − F(1) is exact, and
+     F_corrected(n) = F(1) + (n−1)·Δ.  Applies to FLOPs, bytes and
+     collective bytes alike.
+  2. **Token-axis scans** (inside one layer, so invisible to (1)):
+     analytic formulas below — exact for our own model code since we wrote
+     the scan bodies: Mamba recurrence (4·Di·S flops/token), RWKV6 state
+     update (6·H·hd² flops/token), and the chunked-softmax KV loop
+     ((nchunks−1)/nchunks of total attention flops).
+
+MODEL_FLOPS uses the standard 6·N_active·D for training (2 fwd + 4 bwd) and
+2·N_active per token for inference steps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..models import config as mc
+
+# TPU v5e constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link (≈4.5e10 usable)
+DCN_BW = 25e9                # B/s per chip slice (cross-pod)
+
+SDPA_CHUNK = 1024            # must match models.layers.sdpa default
+
+
+def with_n_periods(cfg: mc.ModelConfig, n: int) -> mc.ModelConfig:
+    """Two-point probe config: n periods, layer loop UNROLLED.
+
+    XLA counts a while body once regardless of trip count, so probes must
+    not use lax.scan — with scan_layers=False all n periods' FLOPs/bytes/
+    collectives appear in the HLO and Δ = F(2) − F(1) is the exact
+    per-period cost.
+    """
+    return dataclasses.replace(
+        cfg, n_layers=cfg.n_prefix_layers + n * cfg.period_len,
+        scan_layers=False)
+
+
+def token_scan_flop_correction(cfg: mc.ModelConfig, shape: mc.ShapeConfig) -> float:
+    """FLOPs hidden inside token-axis while loops (counted once by XLA)."""
+    B = shape.global_batch
+    mode = shape.mode
+    mult = 3.0 if mode == "train" else 1.0          # bwd ≈ 2× fwd
+    D = cfg.d_model
+    corr = 0.0
+    if mode == "decode":
+        Tq, Tk = 1, shape.seq_len
+    else:
+        Tq = Tk = shape.seq_len
+    for i in range(cfg.n_layers):
+        mixer, _ = cfg.layer_spec(i)
+        if mixer == "mamba" and mode != "decode":
+            Di = cfg.ssm_expand * D
+            corr += mult * B * (Tq - 1) * 4 * Di * cfg.ssm_state_dim
+        elif mixer == "rwkv" and mode != "decode":
+            H = D // cfg.rwkv_head_dim
+            corr += mult * B * (Tq - 1) * 6 * H * cfg.rwkv_head_dim ** 2
+        elif mixer == "attn":
+            # chunked-softmax loop engages when the KV length > 2048
+            kv_total = Tk
+            if (mode == "decode" or Tq > 2048) and kv_total > SDPA_CHUNK:
+                nch = int(np.ceil(kv_total / SDPA_CHUNK))
+                if cfg.attn_type == "mla":
+                    dk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+                    dv = cfg.v_head_dim
+                else:
+                    dk = dv = cfg.head_dim
+                ctx = kv_total / 2 if (mode != "decode" and cfg.causal) else kv_total
+                attn_total = mult * B * cfg.n_heads * Tq * ctx * 2 * (dk + dv)
+                corr += attn_total * (nch - 1) / nch
+    return corr
+
+
+def model_flops(cfg: mc.ModelConfig, shape: mc.ShapeConfig) -> float:
+    """6·N_active·D for train; 2·N_active per generated/processed token else."""
+    N = cfg.active_param_count()
+    if shape.mode == "train":
+        return 6.0 * N * shape.global_batch * shape.seq_len
+    if shape.mode == "prefill":
+        return 2.0 * N * shape.global_batch * shape.seq_len
+    return 2.0 * N * shape.global_batch  # decode: one token per sequence
+
+
+def roofline_terms(flops_per_chip: float, hbm_bytes_per_chip: float,
+                   wire_bytes_ici_per_chip: float,
+                   wire_bytes_dcn_per_chip: float) -> dict:
+    """The three §Roofline terms, in seconds.
+
+    All inputs are per-chip quantities (XLA cost/memory analysis of an SPMD
+    module is per-device; HLO collective result shapes are per-device)."""
+    t_compute = flops_per_chip / PEAK_FLOPS
+    t_memory = hbm_bytes_per_chip / HBM_BW
+    t_coll = (wire_bytes_ici_per_chip / ICI_BW
+              + wire_bytes_dcn_per_chip / DCN_BW)
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    return {"t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "dominant": dominant}

@@ -1,0 +1,73 @@
+"""Batched serving driver: prefill a batch of prompts, decode greedily.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
+      --batch 4 --prompt-len 32 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import decode_step, init_cache, init_params
+from repro.runtime import build_serve_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    full, smoke = configs.get(args.arch)
+    cfg = smoke if args.smoke else full
+    if not cfg.embed_input:
+        raise SystemExit(f"{args.arch}: encoder/stub-frontend arch has no "
+                         f"autoregressive serving path")
+    if not cfg.causal:
+        raise SystemExit(f"{args.arch}: encoder-only, no decode")
+
+    key = jax.random.key(args.seed)
+    params = init_params(cfg, key)
+    B, P, G = args.batch, args.prompt_len, args.gen
+    max_seq = P + G
+    prompts = jax.random.randint(jax.random.key(1), (B, P), 0, cfg.vocab)
+    cache = init_cache(cfg, B, max_seq)
+
+    serve = jax.jit(build_serve_step(cfg), donate_argnums=(2,),
+                    static_argnums=())
+
+    # prefill token-by-token through the serve step (exercises the exact
+    # program the dry-run lowers); a batched prefill would use forward()
+    t0 = time.time()
+    tok = None
+    for t in range(P):
+        logits, cache = serve(params, {"tokens": prompts[:, t:t + 1]}, cache,
+                              jnp.asarray(t, jnp.int32))
+    tok = jnp.argmax(logits, axis=-1)[:, None]
+    t1 = time.time()
+    out = [tok]
+    for t in range(P, P + G - 1):
+        logits, cache = serve(params, {"tokens": tok}, cache,
+                              jnp.asarray(t, jnp.int32))
+        tok = jnp.argmax(logits, axis=-1)[:, None]
+        out.append(tok)
+    gen = jnp.concatenate(out, axis=1)
+    t2 = time.time()
+    print(f"[serve] prefill {P} tok × {B} seqs in {t1 - t0:.2f}s; "
+          f"decoded {G} tok in {t2 - t1:.2f}s "
+          f"({B * G / max(t2 - t1, 1e-9):.1f} tok/s)")
+    print("[serve] sample:", gen[0, :16].tolist())
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every step program input.
+
+No device allocation — the dry-run lowers against these (the shannon/kernels
+pattern: weak-type-correct, shardable structs).  For [audio]/[vlm] archs the
+modality frontend is a stub per the assignment: specs provide precomputed
+frame/patch embeddings instead of raw waveforms/pixels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as PSpec
+
+from ..models import config as mc
+from ..models.model import init_params, init_cache
+from ..optim import OptConfig, adamw_init
+from ..parallel import api as P
+from ..parallel.sharding import (batch_axes, batch_shardings, cache_shardings,
+                                 param_shardings)
+
+
+def runtime_knobs(cfg: mc.ModelConfig) -> dict:
+    """Per-arch runtime defaults (giants: bf16 optimizer state; everyone
+    microbatches train_4k 4× to bound period-boundary activation saves)."""
+    giant = cfg.param_count() > 50e9
+    return {
+        "state_dtype": "bfloat16" if giant else "float32",
+        "n_microbatches": 4,
+    }
+
+
+def batch_specs(cfg: mc.ModelConfig, shape: mc.ShapeConfig, *, with_labels: bool):
+    B = shape.global_batch
+    T = shape.seq_len if shape.mode != "decode" else 1
+    specs = {}
+    if cfg.embed_input:
+        specs["tokens"] = jax.ShapeDtypeStruct((B, T), jnp.int32)
+    else:
+        specs["embeds"] = jax.ShapeDtypeStruct((B, T, cfg.d_model), jnp.bfloat16)
+    if with_labels:
+        specs["labels"] = jax.ShapeDtypeStruct((B, T), jnp.int32)
+    return specs
+
+
+def state_specs(cfg: mc.ModelConfig, opt_cfg: OptConfig):
+    def build():
+        params = init_params(cfg, jax.random.key(0))
+        opt = adamw_init(params, opt_cfg)
+        return {"params": params, "opt": opt}
+
+    return jax.eval_shape(build)
+
+
+def cache_specs(cfg: mc.ModelConfig, shape: mc.ShapeConfig):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+def input_specs(cfg: mc.ModelConfig, shape: mc.ShapeConfig,
+                opt_cfg: Optional[OptConfig] = None) -> dict:
+    """All step-program inputs for (arch × shape) as ShapeDtypeStructs.
+
+    train  : {state, batch(tokens/embeds+labels), step}
+    prefill: {params, batch}
+    decode : {params, batch(1 token), cache, cache_index}
+    """
+    if shape.mode == "train":
+        opt_cfg = opt_cfg or OptConfig(state_dtype=runtime_knobs(cfg)["state_dtype"])
+        return {
+            "state": state_specs(cfg, opt_cfg),
+            "batch": batch_specs(cfg, shape, with_labels=True),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    params = jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+    if shape.mode == "prefill":
+        return {"params": params,
+                "batch": batch_specs(cfg, shape, with_labels=False)}
+    return {
+        "params": params,
+        "batch": batch_specs(cfg, shape, with_labels=False),
+        "cache": cache_specs(cfg, shape),
+        "cache_index": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def spec_shardings(cfg: mc.ModelConfig, shape: mc.ShapeConfig, mesh,
+                   specs: dict) -> dict:
+    """NamedSharding tree matching input_specs."""
+    repl = NamedSharding(mesh, PSpec())
+    bspec = batch_shardings(mesh, shape.global_batch)
+    out = {}
+    if "state" in specs:
+        pshard = param_shardings(specs["state"]["params"], cfg, mesh)
+        out["state"] = {
+            "params": pshard,
+            "opt": {"m": pshard, "v": pshard, "step": repl},
+        }
+        out["step"] = repl
+    if "params" in specs:
+        out["params"] = param_shardings(specs["params"], cfg, mesh,
+                                        mode=shape.mode)
+    out["batch"] = jax.tree.map(lambda s: bspec(len(s.shape)), specs["batch"])
+    if "cache" in specs:
+        out["cache"] = cache_shardings(specs["cache"], cfg, mesh,
+                                       shape.global_batch)
+        out["cache_index"] = repl
+    return out
+
+
+def mesh_policy(cfg: mc.ModelConfig, shape: mc.ShapeConfig, mesh) -> P.MeshPolicy:
+    ba = batch_axes(mesh)
+    size = int(np.prod([mesh.shape[a] for a in ba]))
+    if shape.global_batch % size != 0:
+        ba = ("data",) if ("data" in mesh.shape
+                           and shape.global_batch % mesh.shape["data"] == 0) else ()
+    kv_axes = ("model",) if ba else ("data", "model")
+    return P.MeshPolicy(mesh=mesh, batch_axes=ba, model_axis="model",
+                        kv_seq_axes=kv_axes,
+                        shard_logits_vocab=(cfg.vocab % mesh.shape["model"] == 0))

@@ -1,0 +1,1 @@
+from .model import init_params, forward, loss_fn, init_cache, decode_step  # noqa: F401

@@ -1,0 +1,268 @@
+"""Composable model: pattern-cycled blocks, scanned periods, train/decode.
+
+A model is a stack of *periods* (one cycle of ``cfg.block_pattern`` ×
+MoE cadence); the period stack runs under ``lax.scan`` so the HLO stays
+layer-count-independent (critical for compiling 72-layer/398B configs on the
+dry-run host) and so FSDP param all-gathers pipeline with compute.
+
+Everything is a pure function over nested-dict params.  Sharding hints are
+injected through ``repro.parallel.api`` (no-ops outside a mesh policy), so
+the same code runs single-device smoke tests and 512-chip dry-runs.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from . import ssm as S
+from .config import ModelConfig
+from ..parallel import api as P
+
+Array = jax.Array
+
+
+# -- single block ---------------------------------------------------------------
+
+def _norm_init(cfg, dtype):
+    if cfg.norm_type == "layer":
+        return {"w": jnp.ones((cfg.d_model,), dtype), "b": jnp.zeros((cfg.d_model,), dtype)}
+    return {"w": jnp.ones((cfg.d_model,), dtype)}
+
+
+def _norm_apply(p, cfg, x):
+    if cfg.norm_type == "layer":
+        return L.layer_norm(x, p["w"], p["b"], cfg.norm_eps)
+    return L.rms_norm(x, p["w"], cfg.norm_eps)
+
+
+def block_init(key, cfg: ModelConfig, spec: tuple, dtype):
+    mixer, ffn = spec
+    k1, k2 = jax.random.split(key)
+    p = {"norm1": _norm_init(cfg, dtype), "norm2": _norm_init(cfg, dtype)}
+    if mixer == "attn":
+        p["mixer"] = (L.mla_init(k1, cfg, dtype) if cfg.attn_type == "mla"
+                      else L.gqa_init(k1, cfg, dtype))
+    elif mixer == "mamba":
+        p["mixer"] = S.mamba_init(k1, cfg, dtype)
+    elif mixer == "rwkv":
+        p["mixer"] = S.rwkv6_init(k1, cfg, dtype)
+    else:
+        raise ValueError(mixer)
+    if ffn == "moe":
+        p["ffn"] = L.moe_init(k2, cfg, dtype)
+    elif ffn == "gelu":
+        p["ffn"] = L.gelu_mlp_init(k2, cfg.d_model, cfg.d_ff, dtype)
+    elif ffn == "rwkv_cm":
+        p["ffn"] = S.rwkv_channel_mix_init(k2, cfg, dtype)
+    else:
+        p["ffn"] = L.swiglu_init(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def block_apply(p, cfg: ModelConfig, spec: tuple, x: Array, positions,
+                cache=None, cache_index=None):
+    """Returns (x, new_cache, aux_loss)."""
+    mixer, ffn = spec
+    aux = jnp.zeros((), jnp.float32)
+    h = _norm_apply(p["norm1"], cfg, x)
+    if mixer == "attn":
+        fn = L.mla_apply if cfg.attn_type == "mla" else L.gqa_apply
+        mo, new_cache = fn(p["mixer"], cfg, h, positions, cache=cache,
+                           cache_index=cache_index, causal=cfg.causal)
+    elif mixer == "mamba":
+        mo, new_cache = S.mamba_apply(p["mixer"], cfg, h, state=cache,
+                                      mode=cfg.ssm_mode if cache is None else "scan")
+    elif mixer == "rwkv":
+        mo, new_cache = S.rwkv6_apply(p["mixer"], cfg, h, state=cache)
+    else:
+        raise ValueError(mixer)
+    x = x + P.shard_act(mo)
+    h = _norm_apply(p["norm2"], cfg, x)
+    if ffn == "moe":
+        fo, aux = L.moe_apply(p["ffn"], cfg, h)
+    elif ffn == "gelu":
+        fo = L.gelu_mlp_apply(p["ffn"], h)
+    elif ffn == "rwkv_cm":
+        fo, cm_shift = S.rwkv_channel_mix_apply(
+            p["ffn"], cfg, h, shift=None if cache is None else cache.get("cm_shift"))
+        if new_cache is not None:
+            new_cache = dict(new_cache)
+            new_cache["cm_shift"] = cm_shift
+    else:
+        fo = L.swiglu_apply(p["ffn"], h)
+    x = x + P.shard_act(fo)
+    return x, new_cache, aux
+
+
+# -- cache ------------------------------------------------------------------------
+
+def block_cache_init(cfg: ModelConfig, spec: tuple, batch: int, max_seq: int, dtype):
+    mixer, ffn = spec
+    if mixer == "attn":
+        if cfg.attn_type == "mla":
+            c = {"ckv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+                 "krope": jnp.zeros((batch, max_seq, 1, cfg.qk_rope_head_dim), dtype)}
+        else:
+            c = {"k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+                 "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype)}
+    elif mixer == "mamba":
+        c = S.mamba_init_state(cfg, batch, dtype)
+    elif mixer == "rwkv":
+        c = S.rwkv6_init_state(cfg, batch, dtype)
+    else:
+        raise ValueError(mixer)
+    if ffn == "rwkv_cm":
+        c["cm_shift"] = jnp.zeros((batch, cfg.d_model), dtype)
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    """Stacked cache matching the scanned period layout."""
+    dtype = dtype or cfg.jnp_dtype
+    prefix = [block_cache_init(cfg, cfg.layer_spec(i), batch, max_seq, dtype)
+              for i in range(cfg.n_prefix_layers)]
+    period = []
+    for li, spec in enumerate(cfg.period_specs()):
+        one = block_cache_init(cfg, spec, batch, max_seq, dtype)
+        period.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_periods,) + a.shape), one))
+    return {"prefix": prefix, "period": tuple(period)}
+
+
+# -- params -----------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key, dtype=None):
+    dtype = dtype or cfg.jnp_dtype
+    keys = jax.random.split(key, 8)
+    params = {}
+    if cfg.embed_input:
+        params["embed"] = L.embed_init(keys[0], (cfg.vocab, cfg.d_model), dtype)
+    params["final_norm"] = _norm_init(cfg, dtype)
+    params["lm_head"] = L.dense_init(keys[1], (cfg.d_model, cfg.vocab), dtype)
+
+    params["prefix"] = tuple(
+        block_init(jax.random.fold_in(keys[2], i), cfg, cfg.layer_spec(i), dtype)
+        for i in range(cfg.n_prefix_layers))
+
+    period_specs = cfg.period_specs()
+    stacked = []
+    for li, spec in enumerate(period_specs):
+        base = jax.random.fold_in(keys[3], li)
+        pkeys = jax.random.split(base, cfg.n_periods)
+        stacked.append(jax.vmap(lambda k: block_init(k, cfg, spec, dtype))(pkeys))
+    params["period"] = tuple(stacked)
+    return params
+
+
+# -- forward ------------------------------------------------------------------------
+
+def _embed(params, cfg: ModelConfig, batch: dict) -> Array:
+    if cfg.embed_input and "tokens" in batch:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    else:
+        x = batch["embeds"].astype(cfg.jnp_dtype)
+    return P.shard_act(x)
+
+
+def _positions(cfg: ModelConfig, batch: dict, T: int, offset=0) -> Array:
+    if "positions" in batch:
+        return batch["positions"]
+    ref = batch.get("tokens", batch.get("embeds"))
+    B = ref.shape[0]
+    pos = offset + jnp.arange(T)[None, :]
+    pos = jnp.broadcast_to(pos, (B, T))
+    if cfg.mrope:
+        return jnp.broadcast_to(pos[None], (3, B, T))   # text-only stub: t=h=w
+    return pos
+
+
+def forward(params, cfg: ModelConfig, batch: dict, cache=None, cache_index=0):
+    """Returns (logits, new_cache, aux). cache=None → full-sequence forward."""
+    x = _embed(params, cfg, batch)
+    B, T = x.shape[0], x.shape[1]
+    positions = _positions(cfg, batch, T, offset=cache_index if cache is not None else 0)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    new_prefix_caches = []
+    for i in range(cfg.n_prefix_layers):
+        c = cache["prefix"][i] if cache is not None else None
+        x, nc, aux = block_apply(params["prefix"][i], cfg, cfg.layer_spec(i), x,
+                                 positions, cache=c, cache_index=cache_index)
+        aux_total += aux
+        new_prefix_caches.append(nc)
+
+    period_specs = cfg.period_specs()
+
+    def period_fn(carry, xs):
+        x, aux_acc = carry
+        new_caches = []
+        for li, spec in enumerate(period_specs):
+            pl = xs["p"][li]
+            cl = xs["c"][li] if cache is not None else None
+            x, nc, aux = block_apply(pl, cfg, spec, x, positions,
+                                     cache=cl, cache_index=cache_index)
+            aux_acc += aux
+            new_caches.append(nc)
+        ys = {"c": tuple(new_caches)} if cache is not None else {}
+        return (x, aux_acc), ys
+
+    body = period_fn
+    if cfg.remat:
+        # full per-period remat: save ONLY the scan carry (residual stream at
+        # period boundaries); everything inside a period is recomputed in the
+        # backward pass.  With `dots...saveable` policies XLA kept f32 copies
+        # of every projection output per period — 10× the activation budget.
+        body = jax.checkpoint(period_fn)
+
+    xs = {"p": params["period"]}
+    if cache is not None:
+        xs["c"] = cache["period"]
+    if cfg.scan_layers:
+        (x, aux_total), ys = jax.lax.scan(body, (x, aux_total), xs)
+    else:
+        # unrolled layer loop: used by the dry-run's FLOP-exact probes
+        # (XLA cost analysis counts while bodies once; unrolling restores
+        # true counts) and available for small models.
+        ys_list = []
+        carry = (x, aux_total)
+        for i in range(cfg.n_periods):
+            xs_i = jax.tree.map(lambda a: a[i], xs)
+            carry, ys_i = body(carry, xs_i)
+            ys_list.append(ys_i)
+        (x, aux_total) = carry
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys_list) if ys_list and cache is not None else {}
+
+    x = _norm_apply(params["final_norm"], cfg, x)
+    logits = P.shard_logits(x @ params["lm_head"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"prefix": new_prefix_caches, "period": ys["c"]}
+    return logits, new_cache, aux_total
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, aux_weight: float = 0.01,
+            z_weight: float = 1e-4):
+    """Vocab-parallel-friendly CE: logsumexp over (possibly sharded) V in f32."""
+    logits, _, aux = forward(params, cfg, batch)
+    labels = batch["labels"]
+    lg = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    mask = batch.get("loss_mask", jnp.ones_like(nll))
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    zloss = z_weight * ((lse * mask) ** 2).sum() / jnp.maximum(mask.sum(), 1.0)
+    total = loss + aux_weight * aux + zloss
+    return total, {"ce": loss, "aux": aux, "z": zloss}
+
+
+def decode_step(params, cfg: ModelConfig, batch: dict, cache, cache_index):
+    """One-token serve step. batch: {'tokens': [B,1]} or {'embeds': [B,1,D]}."""
+    logits, new_cache, _ = forward(params, cfg, batch, cache=cache,
+                                   cache_index=cache_index)
+    return logits[:, -1], new_cache

@@ -1,0 +1,274 @@
+"""State-space / linear-recurrence blocks: Mamba (Jamba) and RWKV6 (Finch).
+
+Each block exposes three paths:
+  *_apply(..., mode="scan")    — exact sequential recurrence via lax.scan
+                                  (reference; also the decode single-step)
+  *_apply(..., mode="chunked") — chunk-parallel form (associative scan inside
+                                  chunks, state carried across) — the XLA twin
+                                  of kernels/linear_scan; tested ≡ "scan".
+  decode step                  — O(1) state update for serving.
+
+Shapes follow the papers: Mamba (arXiv:2312.00752) with diagonal A, per-
+channel Δ; RWKV6 (arXiv:2404.05892) with data-dependent per-channel decay w_t
+and bonus u.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import dense_init, rms_norm
+
+Array = jax.Array
+
+
+def checkpointed_scan(body, carry, xs, chunk: int):
+    """lax.scan with remat at chunk boundaries.
+
+    A T-step scan's VJP saves the carry at EVERY step (for Mamba-1 that is
+    h[B,Di,S] f32 × T ≈ 17 GB/layer at 4k ctx — the §Perf-1 memory bug).
+    Chunking the scan and rematting the chunk body keeps only T/chunk
+    boundary carries and recomputes inside each chunk on the backward pass.
+    """
+    T = jax.tree.leaves(xs)[0].shape[0]
+    chunk = min(chunk, T)
+    if T % chunk != 0 or T == chunk:
+        return jax.lax.scan(body, carry, xs)
+    n = T // chunk
+
+    def outer(c, xc):
+        return jax.lax.scan(body, c, xc)
+
+    xs_c = jax.tree.map(
+        lambda a: a.reshape((n, chunk) + a.shape[1:]), xs)
+    carry, ys_c = jax.lax.scan(jax.checkpoint(outer), carry, xs_c)
+    ys = jax.tree.map(
+        lambda a: a.reshape((T,) + a.shape[2:]), ys_c)
+    return carry, ys
+
+
+# ---------------------------------------------------------------- Mamba -----
+
+def mamba_init(key, cfg, dtype):
+    D = cfg.d_model
+    Di = cfg.ssm_expand * D
+    S = cfg.ssm_state_dim
+    dtr = max(Di // 16, 1)
+    ks = jax.random.split(key, 8)
+    A = jnp.tile(jnp.arange(1, S + 1, dtype=jnp.float32)[None, :], (Di, 1))
+    return {
+        "w_in": dense_init(ks[0], (D, 2 * Di), dtype),            # x and z
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv_dim, Di), dtype, scale=0.5),
+        "conv_b": jnp.zeros((Di,), dtype),
+        "w_bcdt": dense_init(ks[2], (Di, 2 * S + dtr), dtype),    # B, C, dt_rank
+        "w_dt": dense_init(ks[3], (dtr, Di), dtype),
+        "dt_bias": jnp.asarray(
+            np.log(np.expm1(np.random.default_rng(0).uniform(1e-3, 0.1, Di))),
+            dtype=jnp.float32),
+        "A_log": jnp.log(A),                                      # [Di, S] f32
+        "D": jnp.ones((Di,), jnp.float32),
+        "w_out": dense_init(ks[4], (Di, D), dtype),
+    }
+
+
+def _mamba_scan_seq(a: Array, bx: Array, C: Array, h0: Array,
+                    chunk: int = 128):
+    """Sequential recurrence. a,bx: [B,T,Di,S]; C: [B,T,S]; h0: [B,Di,S]."""
+
+    def step(h, inp):
+        a_t, bx_t, c_t = inp
+        h = a_t * h + bx_t
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    aT = jnp.moveaxis(a, 1, 0)
+    bxT = jnp.moveaxis(bx, 1, 0)
+    cT = jnp.moveaxis(C, 1, 0)
+    h, yT = checkpointed_scan(step, h0, (aT, bxT, cT), chunk)
+    return jnp.moveaxis(yT, 0, 1), h          # y: [B,T,Di], h final
+
+
+def _mamba_scan_chunked(a: Array, bx: Array, C: Array, h0: Array, chunk: int = 128):
+    """Chunk-parallel: associative scan within chunks, carry across."""
+    B, T, Di, S = a.shape
+    nch = (T + chunk - 1) // chunk
+    pad = nch * chunk - T
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+        bx = jnp.pad(bx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    ac = jnp.moveaxis(a.reshape(B, nch, chunk, Di, S), 1, 0)
+    bc = jnp.moveaxis(bx.reshape(B, nch, chunk, Di, S), 1, 0)
+    cc = jnp.moveaxis(C.reshape(B, nch, chunk, S), 1, 0)
+
+    def combine(l, r):
+        (al, bl), (ar, br) = l, r
+        return al * ar, ar * bl + br
+
+    def chunk_step(h, inp):
+        a_i, b_i, c_i = inp                    # [B, chunk, Di, S]
+        cum_a, cum_b = jax.lax.associative_scan(combine, (a_i, b_i), axis=1)
+        h_t = cum_a * h[:, None] + cum_b       # [B, chunk, Di, S]
+        y = jnp.einsum("btds,bts->btd", h_t, c_i)
+        return h_t[:, -1], y
+
+    # remat the chunk body: backward recomputes the intra-chunk associative
+    # scan instead of saving its [B, chunk, Di, S] internals per chunk
+    h, yc = jax.lax.scan(jax.checkpoint(chunk_step), h0, (ac, bc, cc))
+    y = jnp.moveaxis(yc, 0, 1).reshape(B, nch * chunk, Di)
+    return y[:, :T], h
+
+
+def mamba_apply(p, cfg, x: Array, state=None, mode: str = "scan"):
+    """x: [B,T,D]. state (decode) = {'h': [B,Di,S], 'conv': [B,K-1,Di]}.
+
+    Returns (out, new_state). With state!=None, T is the decode step length
+    (typically 1) and the conv window is stitched from the cached tail.
+    """
+    B, T, D = x.shape
+    Di = cfg.ssm_expand * D
+    S = cfg.ssm_state_dim
+    K = cfg.ssm_conv_dim
+    dtr = max(Di // 16, 1)
+
+    xz = x @ p["w_in"]
+    xs, z = jnp.split(xz, 2, axis=-1)          # [B,T,Di]
+
+    # depthwise causal conv over time (feature-grouped conv: no window copies)
+    if state is not None:
+        xs_full = jnp.concatenate([state["conv"].astype(xs.dtype), xs], axis=1)
+        new_conv = xs_full[:, -(K - 1):]
+    else:
+        xs_full = jnp.pad(xs, ((0, 0), (K - 1, 0), (0, 0)))
+        new_conv = xs_full[:, -(K - 1):]
+    conv_kernel = p["conv_w"].astype(xs.dtype)[:, None, :]       # [K, 1, Di]
+    xs = jax.lax.conv_general_dilated(
+        xs_full, conv_kernel, window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=Di)
+    xs = jax.nn.silu(xs + p["conv_b"])
+
+    bcdt = xs @ p["w_bcdt"]
+    Bm, Cm, dt_r = jnp.split(bcdt, [S, 2 * S], axis=-1)
+    dt = jax.nn.softplus((dt_r @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])  # [B,T,Di]
+    A = -jnp.exp(p["A_log"])                   # [Di, S]
+    a = jnp.exp(dt[..., None] * A)             # [B,T,Di,S]
+    bx = (dt * xs.astype(jnp.float32))[..., None] * Bm.astype(jnp.float32)[:, :, None, :]
+
+    h0 = state["h"] if state is not None else jnp.zeros((B, Di, S), jnp.float32)
+    if mode == "chunked" and state is None:
+        y, h = _mamba_scan_chunked(a, bx, Cm.astype(jnp.float32), h0,
+                                   chunk=cfg.ssm_chunk)
+    else:
+        y, h = _mamba_scan_seq(a, bx, Cm.astype(jnp.float32), h0)
+    y = y + xs.astype(jnp.float32) * p["D"]
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["w_out"]
+    new_state = {"h": h, "conv": new_conv} if state is not None else None
+    return out, new_state
+
+
+def mamba_init_state(cfg, batch: int, dtype=jnp.float32):
+    Di = cfg.ssm_expand * cfg.d_model
+    return {"h": jnp.zeros((batch, Di, cfg.ssm_state_dim), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm_conv_dim - 1, Di), dtype)}
+
+
+# ---------------------------------------------------------------- RWKV6 -----
+
+def rwkv6_init(key, cfg, dtype):
+    D = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    lora = max(D // 16, 32)
+    ks = jax.random.split(key, 10)
+    return {
+        # token-shift mixing coefficients (static part; LoRA data-dependent part)
+        "mu_r": jnp.full((D,), 0.5, dtype), "mu_k": jnp.full((D,), 0.5, dtype),
+        "mu_v": jnp.full((D,), 0.5, dtype), "mu_w": jnp.full((D,), 0.5, dtype),
+        "w_r": dense_init(ks[0], (D, D), dtype),
+        "w_k": dense_init(ks[1], (D, D), dtype),
+        "w_v": dense_init(ks[2], (D, D), dtype),
+        "w_g": dense_init(ks[3], (D, D), dtype),
+        # data-dependent decay LoRA (Finch): w_t = exp(-exp(base + lora(x)))
+        "decay_base": jnp.zeros((D,), jnp.float32) - 0.5,
+        "decay_lora_a": dense_init(ks[4], (D, lora), dtype),
+        "decay_lora_b": dense_init(ks[5], (lora, D), dtype, scale=0.01),
+        "bonus_u": dense_init(ks[6], (H, hd), jnp.float32, scale=0.1),
+        "w_out": dense_init(ks[7], (D, D), dtype),
+        "ln_w": jnp.ones((D,), dtype),
+    }
+
+
+def rwkv6_apply(p, cfg, x: Array, state=None):
+    """RWKV6 time-mix. x: [B,T,D]. state = {'S': [B,H,hd,hd], 'shift': [B,D]}.
+
+    Recurrence per head (k,v,r ∈ R^hd):
+        S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+        y_t = r_tᵀ (S_{t-1} + diag(u) k_t v_tᵀ)
+    """
+    B, T, D = x.shape
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+
+    prev = state["shift"][:, None] if state is not None else \
+        jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :T]
+    if state is not None:
+        prev = jnp.concatenate([prev, x[:, :-1]], axis=1) if T > 1 else prev
+
+    def mix(mu):
+        return x * mu + prev * (1 - mu)
+
+    r = (mix(p["mu_r"]) @ p["w_r"]).reshape(B, T, H, hd)
+    k = (mix(p["mu_k"]) @ p["w_k"]).reshape(B, T, H, hd)
+    v = (mix(p["mu_v"]) @ p["w_v"]).reshape(B, T, H, hd)
+    g = jax.nn.silu(mix(p["mu_w"]) @ p["w_g"])
+    dec_in = mix(p["mu_w"])
+    lora = jnp.tanh(dec_in @ p["decay_lora_a"]) @ p["decay_lora_b"]
+    logw = -jnp.exp(jnp.clip(p["decay_base"] + lora.astype(jnp.float32), -8.0, 4.0))
+    w = jnp.exp(logw).reshape(B, T, H, hd)     # decay ∈ (0,1)
+
+    S0 = state["S"] if state is not None else jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp               # [B,H,hd]
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S + p["bonus_u"][None, :, :, None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, y
+
+    rT, kT, vT, wT = (jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w))
+    # chunk-rematted scan: avoids saving S [B,H,hd,hd] f32 per token for bwd
+    S, yT = checkpointed_scan(step, S0, (rT, kT, vT, wT), chunk=64)
+    y = jnp.moveaxis(yT, 0, 1).reshape(B, T, D).astype(x.dtype)
+    y = rms_norm(y, p["ln_w"], cfg.norm_eps) * g
+    out = y @ p["w_out"]
+    new_state = {"S": S, "shift": x[:, -1]} if state is not None else None
+    return out, new_state
+
+
+def rwkv6_init_state(cfg, batch: int, dtype):
+    hd = cfg.rwkv_head_dim
+    H = cfg.d_model // hd
+    return {"S": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "shift": jnp.zeros((batch, cfg.d_model), dtype)}
+
+
+def rwkv_channel_mix_init(key, cfg, dtype):
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 2)
+    return {
+        "mu": jnp.full((D,), 0.5, dtype),
+        "w_in": dense_init(ks[0], (D, F), dtype),
+        "w_out": dense_init(ks[1], (F, D), dtype),
+    }
+
+
+def rwkv_channel_mix_apply(p, cfg, x: Array, shift=None):
+    prev = shift[:, None] if shift is not None else \
+        jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, : x.shape[1]]
+    if shift is not None and x.shape[1] > 1:
+        prev = jnp.concatenate([prev, x[:, :-1]], axis=1)
+    xm = x * p["mu"] + prev * (1 - p["mu"])
+    h = jnp.square(jax.nn.relu(xm @ p["w_in"]))
+    return h @ p["w_out"], x[:, -1]

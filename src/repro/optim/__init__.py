@@ -1,0 +1,3 @@
+from .adamw import adamw_init, adamw_update, OptConfig  # noqa: F401
+from .schedule import warmup_cosine  # noqa: F401
+from .compress import quantize_int8, dequantize_int8, compressed_psum  # noqa: F401

@@ -1,0 +1,56 @@
+"""Int8 gradient compression with error feedback, for the DCN (pod) axis.
+
+Cross-pod gradient reduction is the only DCN-bandwidth-bound collective in
+the training step; int8 quantization cuts those bytes 4× (vs f32) / 2×
+(vs bf16) at the cost of quantization noise, which error feedback folds
+back into the next step (1-bit-Adam-style residual accumulation).
+
+`compressed_psum` runs inside shard_map over the pod axis so the wire
+really carries int8: quantize → psum(int8 partial sums in int32) → dequant.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array):
+    """Per-tensor symmetric int8. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(g: jax.Array, residual: jax.Array):
+    """Error feedback: quantize (g + residual); residual keeps the error."""
+    target = g.astype(jnp.float32) + residual
+    q, scale = quantize_int8(target)
+    deq = dequantize_int8(q, scale)
+    new_residual = target - deq
+    return q, scale, deq, new_residual
+
+
+def compressed_psum(g: jax.Array, axis_name: str, residual: jax.Array):
+    """Quantized cross-axis mean with error feedback (use under shard_map).
+
+    Protocol: (1) pmax the local amax → one shared scale (8 bytes on the
+    wire), (2) every shard quantizes with the SHARED scale so the int32
+    psum is an exact homomorphism of the quantized values (headroom: 2^23
+    summands), (3) decode with the shared scale; per-shard rounding error
+    (≤ s/2) goes into the error-feedback residual.
+    """
+    target = g.astype(jnp.float32) + residual
+    amax = jnp.max(jnp.abs(target))
+    s = jax.lax.pmax(amax, axis_name) / 127.0
+    s = jnp.maximum(s, 1e-30)
+    q = jnp.clip(jnp.round(target / s), -127, 127).astype(jnp.int8)
+    new_residual = target - q.astype(jnp.float32) * s
+    n = jax.lax.psum(1, axis_name)
+    acc = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return (acc.astype(jnp.float32) * s / n).astype(g.dtype), new_residual

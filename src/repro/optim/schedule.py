@@ -1,0 +1,15 @@
+"""LR schedules (functional, step-indexed)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup_steps: int = 100, total_steps: int = 10_000,
+                  min_ratio: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = (step + 1.0) / jnp.maximum(warmup_steps, 1)  # nonzero LR at step 0
+    prog = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1),
+                    0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup_steps, warm, cos)

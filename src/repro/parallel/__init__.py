@@ -1,0 +1,2 @@
+from . import api  # noqa: F401
+from .sharding import param_shardings, batch_shardings, cache_shardings  # noqa: F401

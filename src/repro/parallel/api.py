@@ -1,0 +1,107 @@
+"""Ambient sharding policy: models call these hints; they no-op off-mesh.
+
+The policy names logical activation axes; the runtime binds them to mesh
+axes per (shape, mesh).  Keeping hints in model code (rather than only
+in/out shardings) pins GSPMD to the intended layout at the points where it
+matters (residual stream, logits, KV cache) — the dry-run §Perf iterations
+tune these bindings.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as PSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPolicy:
+    mesh: object                              # jax.sharding.Mesh
+    batch_axes: Tuple[str, ...] = ("data",)   # activation batch dim
+    model_axis: str = "model"                 # TP axis
+    seq_axes: Tuple[str, ...] = ()            # sequence-parallel axes (long ctx)
+    kv_seq_axes: Tuple[str, ...] = ()         # KV-cache sequence sharding
+    shard_logits_vocab: bool = True
+
+
+_POLICY: contextvars.ContextVar[Optional[MeshPolicy]] = \
+    contextvars.ContextVar("mesh_policy", default=None)
+
+
+def current_policy() -> Optional[MeshPolicy]:
+    return _POLICY.get()
+
+
+@contextlib.contextmanager
+def use_policy(policy: Optional[MeshPolicy]):
+    tok = _POLICY.set(policy)
+    try:
+        yield
+    finally:
+        _POLICY.reset(tok)
+
+
+def _constrain(x, spec: PSpec):
+    pol = _POLICY.get()
+    if pol is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(pol.mesh, spec))
+    except Exception:
+        return x
+
+
+def shard_act(x):
+    """Residual-stream activations [B, T, D] (or [B, T, ...])."""
+    pol = _POLICY.get()
+    if pol is None:
+        return x
+    spec = [pol.batch_axes if pol.batch_axes else None,
+            pol.seq_axes if pol.seq_axes else None]
+    spec += [None] * (x.ndim - 2)
+    return _constrain(x, PSpec(*spec))
+
+
+def shard_logits(x):
+    """[B, T, V]: V over the model axis (vocab-parallel CE)."""
+    pol = _POLICY.get()
+    if pol is None:
+        return x
+    v_axis = pol.model_axis if pol.shard_logits_vocab else None
+    spec = [pol.batch_axes if pol.batch_axes else None]
+    spec += [None] * (x.ndim - 2)
+    spec += [v_axis]
+    return _constrain(x, PSpec(*spec))
+
+
+def shard_kv_cache(x):
+    """KV cache [B, S, ...]: S over kv_seq_axes (decode at long context).
+
+    Pinned on BOTH sides of the dynamic-update-slice in the decode path:
+    without it GSPMD re-shards the cache to head-sharding to match the
+    incoming token's projection layout — an involuntary full
+    rematerialization of a multi-GB buffer (observed on jamba long_500k
+    multi-pod)."""
+    pol = _POLICY.get()
+    if pol is None:
+        return x
+    spec = [pol.batch_axes if pol.batch_axes else None,
+            pol.kv_seq_axes if pol.kv_seq_axes else None]
+    spec += [None] * (x.ndim - 2)
+    return _constrain(x, PSpec(*spec))
+
+
+def shard_decode_head_replicated(x):
+    """Decode-path q/k/v new-token tensors [B, 1, H, d]: replicate heads so
+    attention against the S-sharded cache stays S-sharded (scores psum over
+    the sequence shards instead of gathering the cache)."""
+    pol = _POLICY.get()
+    if pol is None:
+        return x
+    spec = [pol.batch_axes if pol.batch_axes else None]
+    spec += [None] * (x.ndim - 1)
+    return _constrain(x, PSpec(*spec))

@@ -1,0 +1,212 @@
+"""Parameter / batch / cache sharding rules (FSDP + TP + EP).
+
+Layout convention on the production mesh (pod, data, model):
+  - "data"  : FSDP/ZeRO-3 — every weight's d_model-like dim is sharded here,
+              so params, grads and optimizer states are all fully sharded;
+              XLA all-gathers weights per scanned block (overlapped).
+  - "model" : TP — head dims, FFN hidden, vocab, expert dim (EP), Mamba
+              channels, RWKV heads.
+  - "pod"   : pure DP across pods (DCN): joins the batch axes.
+
+Dims that don't divide an axis fall back to replication (e.g. HuBERT's
+vocab=504, Grok's 8 experts on a 16-way model axis → expert-TP instead).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PSpec
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return True
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    return dim % size == 0
+
+
+def _guard(spec: PSpec, shape, mesh: Mesh) -> PSpec:
+    """Drop axes that don't divide the corresponding dim."""
+    out = []
+    for d, axes in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        out.append(axes if (axes and _fits(d, mesh, axes)) else None)
+    return PSpec(*out)
+
+
+# rule table: matched by leaf name (last path key), returns raw spec builder
+def _param_rule(name: str, shape, cfg, mesh: Mesh, mode: str = "train") -> PSpec:
+    fsdp, tp = "data", "model"
+    nd = len(shape)
+
+    if mode == "decode":
+        # §Perf-3: decode must not all-gather weights (activations are tiny,
+        # weights are huge). FFN/MoE/Mamba-channel weights go weight-
+        # stationary 2D-TP: OUTPUT dim sharded over (data×model) on the up
+        # projection, CONTRACTION dim on the down projection — the only
+        # collective left is a psum of [B,1,·] activations.
+        both = ("data", "model")
+        if name in ("w_gate", "w_up") and nd == 3:        # MoE [E, D, F]
+            return PSpec(None, None, both)
+        if name == "w_down" and nd == 3:                  # [E, F, D]
+            return PSpec(None, both, None)
+        if name in ("w_gate", "w_up", "w_in") and nd == 2:  # dense [D, F]
+            return PSpec(None, both)
+        if name == "w_down" and nd == 2:                  # [F, D]
+            return PSpec(both, None)
+        if name == "b_in":
+            return PSpec(both)
+        # Mamba channel axis (Di) over both axes: conv/scan are elementwise
+        # in Di; w_bcdt/w_out contract Di → tiny activation psums
+        if name == "w_bcdt":
+            return PSpec(both, None)
+        if name == "conv_w":
+            return PSpec(None, both)
+        if name in ("conv_b", "dt_bias", "D"):
+            return PSpec(both)
+        if name == "A_log":
+            return PSpec(both, None)
+        if name == "w_dt":
+            return PSpec(None, both)
+        if name == "w_out" and nd == 2 and shape[1] == cfg.d_model \
+                and shape[0] == cfg.ssm_expand * cfg.d_model:
+            return PSpec(both, None)                      # mamba out proj
+
+    if name == "embed":
+        return PSpec(tp, fsdp)
+    if name == "lm_head":
+        return PSpec(fsdp, tp)
+
+    # attention / generic projections
+    if name in ("wq", "wk", "wv", "wkv_a", "wkv_b", "w_in", "w_gate_dense",
+                "w_r", "w_k", "w_v", "w_g", "decay_lora_a", "w_bcdt"):
+        if name == "w_bcdt":        # [Di, 2S+dtr]: Di is the TP dim
+            return PSpec(tp, None)
+        return PSpec(fsdp, tp)
+    if name in ("wo", "w_out", "w_down_dense"):
+        return PSpec(tp, fsdp)
+    if name in ("w_gate", "w_up", "w_down") and nd == 3:  # MoE experts [E, ., .]
+        E = shape[0]
+        if _fits(E, mesh, tp):      # expert parallel
+            return PSpec(tp, fsdp, None) if name != "w_down" else PSpec(tp, None, fsdp)
+        # expert-TP fallback (Grok: 8 experts, 16-way model axis)
+        return PSpec(None, fsdp, tp) if name != "w_down" else PSpec(None, tp, fsdp)
+    if name in ("w_gate", "w_up") and nd == 2:   # dense swiglu
+        return PSpec(fsdp, tp)
+    if name == "w_down" and nd == 2:
+        return PSpec(tp, fsdp)
+    if name == "router":
+        return PSpec(fsdp, None)
+    if name == "w_dt":              # [dtr, Di]
+        return PSpec(None, tp)
+    if name in ("conv_w",):         # [K, Di]
+        return PSpec(None, tp)
+    if name in ("conv_b", "dt_bias", "D"):
+        return PSpec(tp)
+    if name == "A_log":             # [Di, S]
+        return PSpec(tp, None)
+    if name == "decay_lora_b":      # [lora, D]
+        return PSpec(None, tp)
+    if name == "bonus_u":           # [H, hd]
+        return PSpec(tp, None)
+    if name == "b_in":              # gelu mlp bias [F]
+        return PSpec(tp)
+    # norms, biases, mixing coefficients: replicated
+    return PSpec(*([None] * nd))
+
+
+def param_shardings(params, cfg, mesh: Mesh, mode: str = "train"):
+    """Tree of NamedShardings mirroring the params tree.
+
+    mode="decode" switches FFN/MoE/Mamba weights to weight-stationary 2D-TP
+    (no data-axis weight all-gathers; see _param_rule)."""
+
+    def visit(path, leaf):
+        name = None
+        stacked = False
+        for k in path:
+            key = getattr(k, "key", getattr(k, "idx", None))
+            if key == "period":
+                stacked = True
+            if isinstance(key, str):
+                name = key
+        shape = leaf.shape
+        if stacked:
+            inner = _param_rule(name, shape[1:], cfg, mesh, mode)
+            spec = PSpec(None, *tuple(inner))
+        else:
+            spec = _param_rule(name, shape, cfg, mesh, mode)
+        return NamedSharding(mesh, _guard(spec, shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_shardings(mesh: Mesh, global_batch: int):
+    """Sharding for [B, T]-like inputs: B over (pod, data) when divisible."""
+    ba = batch_axes(mesh)
+    size = int(np.prod([mesh.shape[a] for a in ba]))
+    if global_batch % size != 0:
+        # try data-only, else replicate the batch dim
+        if "data" in mesh.shape and global_batch % mesh.shape["data"] == 0:
+            ba = ("data",)
+        else:
+            ba = ()
+    def spec(ndim: int) -> NamedSharding:
+        s = [ba if ba else None] + [None] * (ndim - 1)
+        return NamedSharding(mesh, PSpec(*s))
+    return spec
+
+
+def cache_shardings(cache, cfg, mesh: Mesh, global_batch: int):
+    """KV/state cache shardings.
+
+    KV caches [*, B, S, Hkv, hd] (stacked period leaves have the extra
+    leading n_periods dim): B over batch axes when divisible, S over the
+    model axis; if B is unshardable (long_500k B=1) S takes (data, model).
+    Mamba/RWKV states shard their channel/head dim over model.
+    """
+    ba = batch_axes(mesh)
+    bsize = int(np.prod([mesh.shape[a] for a in ba]))
+    b_ok = global_batch % bsize == 0 and global_batch >= bsize
+    seq_axes = ("model",) if b_ok else ("data", "model")
+    bspec = ba if b_ok else None
+
+    def visit(path, leaf):
+        name = None
+        stacked = False
+        for k in path:
+            key = getattr(k, "key", getattr(k, "idx", None))
+            if key == "period":
+                stacked = True
+            if isinstance(key, str):
+                name = key
+        shape = leaf.shape
+        lead = (None,) if stacked else ()
+        body = shape[1:] if stacked else shape
+        if name in ("k", "v"):            # [B, S, Hkv, hd]
+            spec = lead + (bspec, seq_axes, None, None)
+        elif name == "ckv":               # [B, S, r]
+            spec = lead + (bspec, seq_axes, None)
+        elif name == "krope":             # [B, S, 1, dr]
+            spec = lead + (bspec, seq_axes, None, None)
+        elif name == "h":                 # mamba [B, Di, S]
+            spec = lead + (bspec, "model", None)
+        elif name == "conv":              # [B, K-1, Di]
+            spec = lead + (bspec, None, "model")
+        elif name == "S":                 # rwkv [B, H, hd, hd]
+            spec = lead + (bspec, "model", None, None)
+        elif name in ("shift", "cm_shift"):  # [B, D]
+            spec = lead + (bspec, None)
+        else:
+            spec = lead + tuple(None for _ in body)
+        return NamedSharding(mesh, _guard(PSpec(*spec), shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(visit, cache)

@@ -1,0 +1,2 @@
+from .steps import build_train_step, build_serve_step, TrainState  # noqa: F401
+from .watchdog import StepWatchdog  # noqa: F401

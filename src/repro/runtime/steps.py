@@ -1,0 +1,154 @@
+"""Train / serve step builders (the programs the dry-run lowers).
+
+``build_train_step``: loss → grad → (optional microbatch accumulation) →
+(optional int8 cross-pod compression, numeric path) → AdamW.  Under a mesh
+policy, all activation hints in the model fire and GSPMD lays out the
+collectives; donated state keeps the giants within HBM.
+
+``build_serve_step``: one decode token for the whole batch with a donated
+KV/state cache (the ``decode_*``/``long_*`` shape programs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import config as mc
+from ..models import forward, loss_fn, decode_step
+from ..optim import OptConfig, adamw_init, adamw_update, warmup_cosine
+from ..optim.compress import compress_with_feedback
+from ..parallel import api as P
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    residual: Any = None          # int8-compression error feedback
+
+    def tree(self):
+        t = {"params": self.params, "opt": self.opt}
+        if self.residual is not None:
+            t["residual"] = self.residual
+        return t
+
+
+def init_train_state(cfg: mc.ModelConfig, key, opt_cfg: OptConfig,
+                     compression: bool = False) -> TrainState:
+    from ..models import init_params
+    params = init_params(cfg, key)
+    opt = adamw_init(params, opt_cfg)
+    residual = (jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+                if compression else None)
+    return TrainState(params=params, opt=opt, residual=residual)
+
+
+def build_train_step(cfg: mc.ModelConfig, opt_cfg: OptConfig,
+                     *, n_microbatches: int = 1, compression: bool = False,
+                     total_steps: int = 10_000,
+                     unroll_microbatches: bool = False,
+                     policy: Optional[P.MeshPolicy] = None) -> Callable:
+    """Returns train_step(state_tree, batch) -> (state_tree, metrics).
+
+    state_tree is the dict form (jit-friendly); batch: {tokens|embeds, labels}.
+    unroll_microbatches: python loop instead of lax.scan — used by the
+    dry-run FLOP probes (XLA counts while bodies once).
+    """
+
+    def loss_wrapped(params, batch):
+        with P.use_policy(policy):
+            return loss_fn(params, cfg, batch)
+
+    grad_fn = jax.value_and_grad(loss_wrapped, has_aux=True)
+
+    def compute_grads(params, batch):
+        if n_microbatches == 1:
+            (loss, parts), grads = grad_fn(params, batch)
+            return loss, parts, grads
+
+        # grad accumulation: split batch on the leading axis, scan
+        def split(x):
+            B = x.shape[0]
+            assert B % n_microbatches == 0
+            return x.reshape(n_microbatches, B // n_microbatches, *x.shape[1:])
+
+        mb = jax.tree.map(split, batch)
+
+        def acc_fn(carry, mbatch):
+            acc, loss_acc = carry
+            (loss, parts), grads = grad_fn(params, mbatch)
+            acc = jax.tree.map(jnp.add, acc, grads)
+            return (acc, loss_acc + loss), parts
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if unroll_microbatches:
+            carry = (zeros, 0.0)
+            parts = None
+            for i in range(n_microbatches):
+                carry, parts = acc_fn(carry, jax.tree.map(lambda x: x[i], mb))
+            gsum, loss_sum = carry
+        else:
+            (gsum, loss_sum), parts_all = jax.lax.scan(acc_fn, (zeros, 0.0), mb)
+            parts = jax.tree.map(lambda x: x[-1], parts_all)
+        grads = jax.tree.map(lambda g: g / n_microbatches, gsum)
+        return loss_sum / n_microbatches, parts, grads
+
+    def train_step(state_tree, batch, step):
+        params = state_tree["params"]
+        loss, parts, grads = compute_grads(params, batch)
+
+        new_residual = None
+        if compression:
+            # int8 + error feedback on the DCN-bound gradient payload.
+            # (Numeric path; the wire-level int8 psum variant lives in
+            # optim.compress.compressed_psum for shard_map deployments.)
+            res = state_tree["residual"]
+            flat_g, tdef = jax.tree.flatten(grads)
+            flat_r = jax.tree.leaves(res)
+            deqs, new_res = [], []
+            for g, r in zip(flat_g, flat_r):
+                _, _, deq, nr = compress_with_feedback(g, r)
+                deqs.append(deq.astype(g.dtype))
+                new_res.append(nr)
+            grads = jax.tree.unflatten(tdef, deqs)
+            new_residual = jax.tree.unflatten(tdef, new_res)
+
+        lr_scale = warmup_cosine(step, total_steps=total_steps)
+        new_params, new_opt, om = adamw_update(grads, state_tree["opt"], params,
+                                               opt_cfg, lr_scale=lr_scale)
+        out = {"params": new_params, "opt": new_opt}
+        if new_residual is not None:
+            out["residual"] = new_residual
+        metrics = {"loss": loss, "ce": parts["ce"], "aux": parts["aux"],
+                   "grad_norm": om["grad_norm"], "lr_scale": lr_scale}
+        return out, metrics
+
+    return train_step
+
+
+def build_serve_step(cfg: mc.ModelConfig,
+                     policy: Optional[P.MeshPolicy] = None) -> Callable:
+    """serve_step(params, batch, cache, cache_index) -> (logits, new_cache)."""
+
+    def serve_step(params, batch, cache, cache_index):
+        with P.use_policy(policy):
+            return decode_step(params, cfg, batch, cache, cache_index)
+
+    return serve_step
+
+
+def build_prefill_step(cfg: mc.ModelConfig,
+                       policy: Optional[P.MeshPolicy] = None) -> Callable:
+    """prefill(params, batch) -> logits — the ``prefill_*`` shape program."""
+
+    def prefill(params, batch):
+        with P.use_policy(policy):
+            logits, _, _ = forward(params, cfg, batch)
+            return logits
+
+    return prefill

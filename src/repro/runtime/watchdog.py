@@ -1,0 +1,55 @@
+"""Step watchdog: straggler / hang detection for the train loop.
+
+At 1000+ nodes the common failure is not a crash but a *slow or silent*
+step (flaky HBM, a wedged host, a degraded ICI link).  The watchdog arms a
+timer around each step; on expiry it fires a callback (default: record the
+incident; production: abort the step via the coordinator so the job
+restarts from the last checkpoint — the restart path is exercised in
+tests/test_fault_tolerance.py).
+
+Straggler *mitigation* at the step level is handled by construction:
+deterministic data (no repeated work after restart), checkpoint/restore,
+and — because XLA steps are SPMD-synchronous — the watchdog's job is only
+detection + restart, matching the standard TPU pod playbook.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Optional
+
+
+class StepWatchdog:
+    def __init__(self, timeout_s: float, on_timeout: Optional[Callable] = None):
+        self.timeout_s = timeout_s
+        self.on_timeout = on_timeout or (lambda info: None)
+        self.incidents: list = []
+        self._timer: Optional[threading.Timer] = None
+        self._step = -1
+        self._armed_at = 0.0
+
+    def arm(self, step: int) -> None:
+        self.disarm()
+        self._step = step
+        self._armed_at = time.time()
+        self._timer = threading.Timer(self.timeout_s, self._fire)
+        self._timer.daemon = True
+        self._timer.start()
+
+    def disarm(self) -> None:
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None
+
+    def _fire(self) -> None:
+        info = {"step": self._step, "armed_at": self._armed_at,
+                "elapsed": time.time() - self._armed_at}
+        self.incidents.append(info)
+        self.on_timeout(info)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        self.disarm()

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# smoke tests and benches must see ONE device; only launch/dryrun.py sets
+# the 512-placeholder-device flag (per spec). Pipeline/dryrun tests that
+# need multiple devices spawn subprocesses with their own XLA_FLAGS.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

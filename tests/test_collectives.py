@@ -1,0 +1,87 @@
+"""Collective-expansion tests (Schedgen analog) + the Fig 10 ordering."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import collectives as coll
+from repro.core import dag, synth
+from repro.core.graph import GraphBuilder
+from repro.core.loggps import LogGPS
+
+
+@pytest.fixture
+def params():
+    return LogGPS(L=(1.0,), G=(1e-5,), o=0.1, S=1e9)
+
+
+def expand(algo_fn, P, params, **kw):
+    b = GraphBuilder(P, 1)
+    algo_fn(b, list(range(P)), 1024.0, params, **kw)
+    return b.finalize()
+
+
+def test_message_counts(params):
+    P = 8
+    cases = {
+        "ring": 2 * (P - 1) * P,
+        "recursive_doubling": int(math.log2(P)) * P,
+        "recursive_halving": 2 * int(math.log2(P)) * P,
+        "tree": 2 * (P - 1),
+    }
+    for algo, want in cases.items():
+        g = expand(coll.allreduce, P, params, algo=algo)
+        n_msgs = int((g.ebytes > 0).sum())
+        assert n_msgs == want, algo
+
+
+@pytest.mark.parametrize("algo,rounds", [
+    ("ring", 14), ("recursive_doubling", 3), ("recursive_halving", 6),
+    ("tree", 6)])
+def test_lambda_equals_dependent_rounds(params, algo, rounds):
+    """λ_L of a lone allreduce == its serialized round count — the analytic
+    fact behind Fig 10 (ring λ ≫ recursive-doubling λ)."""
+    P = 8
+    g = expand(coll.allreduce, P, params, algo=algo)
+    s = dag.evaluate(g, params)
+    assert s.lam[0] == pytest.approx(rounds)
+    assert coll.round_bound_latency_hops(algo, P) == rounds
+
+
+def test_ring_vs_recdoub_tolerance_ordering(params):
+    """ICON case study: ring allreduce ⇒ lower latency tolerance."""
+    P = 16
+    g_ring = synth.allreduce_chain(P, 3, comp_us=500.0, params=params,
+                                   algo="ring")
+    g_rd = synth.allreduce_chain(P, 3, comp_us=500.0, params=params,
+                                 algo="recursive_doubling")
+    tol_ring = dag.tolerance(g_ring, params, 0.05)
+    tol_rd = dag.tolerance(g_rd, params, 0.05)
+    assert tol_ring < tol_rd
+    lam_ring = dag.evaluate(g_ring, params).lam[0]
+    lam_rd = dag.evaluate(g_rd, params).lam[0]
+    assert lam_ring > 3 * lam_rd
+
+
+def test_all_gather_bruck_rounds(params):
+    P = 8
+    g = expand(coll.all_gather, P, params, algo="bruck")
+    s = dag.evaluate(g, params)
+    assert s.lam[0] == pytest.approx(math.ceil(math.log2(P)))
+
+
+def test_all_to_all_pairwise(params):
+    P = 4
+    g = expand(coll.all_to_all, P, params)
+    n_msgs = int((g.ebytes > 0).sum())
+    assert n_msgs == P * (P - 1)
+
+
+def test_bandwidth_bytes_on_wire(params):
+    """ring allreduce moves 2·(P-1)/P·s bytes per rank."""
+    P = 4
+    s_bytes = 1024.0   # expand() uses 1024-byte payloads
+    g = expand(coll.allreduce, P, params, algo="ring")
+    per_rank = g.ebytes[g.ebytes > 0].sum() / P
+    assert per_rank == pytest.approx(2 * (P - 1) / P * s_bytes)

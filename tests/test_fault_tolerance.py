@@ -1,0 +1,67 @@
+"""Fault-tolerance paths: watchdog, crash-restart, elastic reshard."""
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.checkpoint import CheckpointManager
+from repro.runtime import StepWatchdog
+
+
+def test_watchdog_fires_on_stall():
+    fired = threading.Event()
+    wd = StepWatchdog(0.05, on_timeout=lambda info: fired.set())
+    wd.arm(step=7)
+    time.sleep(0.15)
+    assert fired.is_set()
+    assert wd.incidents and wd.incidents[0]["step"] == 7
+    wd.disarm()
+
+
+def test_watchdog_quiet_on_fast_steps():
+    wd = StepWatchdog(0.5)
+    for i in range(5):
+        wd.arm(i)
+        time.sleep(0.01)
+        wd.disarm()
+    time.sleep(0.1)
+    assert not wd.incidents
+
+
+def test_elastic_reshard_roundtrip(tmp_path):
+    """Checkpoints are mesh-agnostic: save from one sharding layout, restore
+    into another (the 512→256-chip restart path, scaled down to 1 CPU)."""
+    _, cfg = configs.get("yi-6b")
+    from repro.models import init_params
+    params = init_params(cfg, jax.random.key(0))
+    ckpt = CheckpointManager(str(tmp_path / "ck"))
+    ckpt.save(1, params)
+
+    # restore with explicit single-device shardings (the degenerate mesh)
+    dev = jax.devices()[0]
+    shardings = jax.tree.map(lambda _: jax.sharding.SingleDeviceSharding(dev),
+                             params)
+    out = ckpt.restore(1, params, shardings=shardings)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(out)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+
+
+def test_crash_mid_save_never_corrupts(tmp_path):
+    """Only committed (renamed) checkpoints are visible."""
+    ckpt = CheckpointManager(str(tmp_path / "ck"))
+    tree = {"w": np.ones(8)}
+    ckpt.save(10, tree)
+    # simulate a crash mid-write: partial tmp dir with junk
+    import os
+    tmp = tmp_path / "ck" / "step_0000000020.tmp"
+    os.makedirs(tmp)
+    (tmp / "arrays.npz").write_bytes(b"garbage")
+    assert ckpt.latest_step() == 10       # junk invisible
+    out = ckpt.restore(10, tree)
+    np.testing.assert_array_equal(out["w"], tree["w"])

@@ -1,0 +1,77 @@
+"""Graph builder invariants + HLO collective parser."""
+
+import numpy as np
+import pytest
+
+from repro.core import hlo
+from repro.core.graph import GraphBuilder, _ragged_arange, _topo_levels
+from repro.core.loggps import LogGPS
+
+
+def test_ragged_arange():
+    np.testing.assert_array_equal(
+        _ragged_arange(np.array([3, 0, 2, 1])), [0, 1, 2, 0, 1, 0])
+    assert _ragged_arange(np.array([0, 0])).size == 0
+
+
+def test_topo_levels_chain_and_diamond():
+    # chain 0→1→2 plus diamond 0→3, 1→3
+    esrc = np.array([0, 1, 0, 1])
+    edst = np.array([1, 2, 3, 3])
+    lv = _topo_levels(4, esrc, edst)
+    assert list(lv) == [0, 1, 2, 2]
+
+
+def test_cycle_detection():
+    p = LogGPS()
+    b = GraphBuilder(1, 1)
+    a = b.add_calc(0, 1.0)
+    c = b.add_calc(0, 1.0)
+    b.add_dep(c, a)  # back edge → cycle
+    with pytest.raises(ValueError):
+        b.finalize()
+
+
+def test_program_order_chaining():
+    p = LogGPS()
+    b = GraphBuilder(2, 1)
+    v1 = b.add_calc(0, 1.0)
+    v2 = b.add_calc(0, 2.0)
+    g = b.finalize()
+    assert g.level[v2] > g.level[v1]
+
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %p0 = bf16[128,256]{1,0} parameter(0)
+  %ag = bf16[128,4096]{1,0} all-gather(bf16[128,256]{1,0} %p0), replica_groups=[32,16]<=[512], dimensions={1}
+  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = bf16[64,256]{1,0} reduce-scatter(bf16[1024,256]{1,0} %y), replica_groups=[2,16]<=[32]
+  %cp = bf16[32,32]{1,0} collective-permute(bf16[32,32]{1,0} %z), source_target_pairs={{0,1}}
+  %a2a = (f32[16,16]{1,0}, f32[16,16]{1,0}) all-to-all(f32[16,16]{1,0} %u, f32[16,16]{1,0} %v), replica_groups={{0,1}}
+}
+"""
+
+
+def test_collective_parser():
+    st = hlo.collective_stats(HLO_SAMPLE)
+    by = st["by_kind"]
+    assert by["all-gather"]["count"] == 1
+    assert by["all-gather"]["bytes"] == 128 * 4096 * 2
+    assert by["all-reduce"]["bytes"] == 1024 * 4
+    assert by["reduce-scatter"]["bytes"] == 64 * 256 * 2
+    assert by["collective-permute"]["bytes"] == 32 * 32 * 2
+    assert by["all-to-all"]["bytes"] == 2 * 16 * 16 * 4   # tuple summed
+    # group sizes parsed from both iota and explicit forms
+    ags = [o for o in st["ops"] if o.kind == "all-gather"][0]
+    assert ags.group_size == 16
+    ar = [o for o in st["ops"] if o.kind == "all-reduce"][0]
+    assert ar.group_size == 4
+
+
+def test_wire_bytes_conventions():
+    st = hlo.collective_stats(HLO_SAMPLE)
+    ar = [o for o in st["ops"] if o.kind == "all-reduce"][0]
+    assert ar.wire_bytes == pytest.approx(2 * 4096 * 3 / 4)
+    ag = [o for o in st["ops"] if o.kind == "all-gather"][0]
+    assert ag.wire_bytes == pytest.approx(128 * 4096 * 2 * 15 / 16)

@@ -1,0 +1,67 @@
+"""Latency-injector semantics (paper Fig 8): the delay-thread design is the
+only one matching the intended L₀+ΔL behavior; the two flawed designs the
+paper analyzes show their characteristic artifacts."""
+
+import pytest
+
+from repro.core import dag, simulator
+from repro.core.graph import GraphBuilder
+from repro.core.loggps import LogGPS
+
+
+def back_to_back(params):
+    """R0 sends two eager messages; R1 posted both recvs (Fig 8A setup)."""
+    b = GraphBuilder(2, 1)
+    b.add_message(0, 1, 100.0, params)
+    b.add_message(0, 1, 100.0, params)
+    b.add_calc(1, 0.001)
+    return b.finalize()
+
+
+@pytest.fixture
+def params():
+    return LogGPS(L=(2.0,), G=(1e-3,), o=1.0, S=1e9)
+
+
+def test_flow_injector_matches_intended(params):
+    """(D): runtime equals the analytical model at L₀+ΔL exactly."""
+    g = back_to_back(params)
+    for dL in (0.0, 5.0, 25.0):
+        got = simulator.simulate(g, params, dL, injector="flow").T
+        want = dag.evaluate(g, params.with_delta(dL)).T
+        assert got == pytest.approx(want, rel=1e-12)
+
+
+def test_sender_injector_delays_consecutive_sends(params):
+    """(B): delaying the send op stalls the sender's chain — runtime exceeds
+    the intended value by ~ΔL (the second send waits for the first)."""
+    g = back_to_back(params)
+    dL = 10.0
+    intended = dag.evaluate(g, params.with_delta(dL)).T
+    got = simulator.simulate(g, params, dL, injector="sender").T
+    assert got > intended + 0.5 * dL
+
+
+def test_progress_injector_accumulates_delay(params):
+    """(C): a single delay-serving thread makes the 2nd message wait ~2ΔL
+    when ΔL exceeds o."""
+    g = back_to_back(params)
+    dL = 10.0                      # >> o = 1
+    intended = dag.evaluate(g, params.with_delta(dL)).T
+    got = simulator.simulate(g, params, dL, injector="progress").T
+    assert got > intended + 0.5 * dL
+    # and approaches the 2ΔL characteristic
+    assert got == pytest.approx(intended + dL, rel=0.3)
+
+
+def test_injectors_agree_when_messages_sparse(params):
+    """With one message there is no queueing: progress == flow."""
+    b = GraphBuilder(2, 1)
+    b.add_calc(0, 5.0)
+    b.add_message(0, 1, 64.0, params)
+    b.add_calc(1, 1.0)
+    g = b.finalize()
+    dL = 7.0
+    f = simulator.simulate(g, params, dL, injector="flow").T
+    pr = simulator.simulate(g, params, dL, injector="progress").T
+    assert f == pytest.approx(pr, rel=1e-12)

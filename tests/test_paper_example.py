@@ -1,0 +1,78 @@
+"""The paper's running example (Fig 4/5/6, Eq 2/5/6) — exact numbers.
+
+Two ranks; rank0: c0 → send → c1; rank1: c2 → recv → c3.
+s=4 B, G=5 ns/B, o=0.  With c0=c1=c3=1 µs, c2=0.5 µs: T = L + 2.015 µs and
+λ_L = 1 for all L.  With c0=0.1 µs: T = max(L+1.115, 1.5), critical latency
+L_c = 0.385 µs, T(0.5)=1.615 µs (Fig 5), and the maximize-ℓ LP with budget
+T ≤ 2 µs returns ℓ* = 0.885 µs (Fig 6).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import dag, lp, sensitivity, simulator
+from repro.core.graph import GraphBuilder
+from repro.core.loggps import LogGPS
+
+
+def build_example(c0=1.0):
+    p = LogGPS(L=(0.0,), G=(5e-3,), o=0.0, S=1e9)
+    b = GraphBuilder(2, 1)
+    b.add_calc(0, c0)
+    b.add_calc(1, 0.5)
+    b.add_message(0, 1, 4.0, p)
+    b.add_calc(0, 1.0)
+    b.add_calc(1, 1.0)
+    return b.finalize(), p
+
+
+def T_at(g, p, L):
+    return dag.evaluate(g, p.replace(L=(L,))).T
+
+
+def test_late_sender_T_is_L_plus_2015():
+    g, p = build_example(c0=1.0)
+    for L in (0.0, 0.2, 0.5, 1.0, 3.0):
+        assert T_at(g, p, L) == pytest.approx(L + 2.015, abs=1e-9)
+        s = dag.evaluate(g, p.replace(L=(L,)))
+        assert s.lam[0] == pytest.approx(1.0)
+
+
+def test_early_sender_piecewise():
+    g, p = build_example(c0=0.1)
+    assert T_at(g, p, 0.2) == pytest.approx(1.5, abs=1e-9)     # overlapped
+    assert T_at(g, p, 0.5) == pytest.approx(1.615, abs=1e-9)   # Fig 5 point
+    s_low = dag.evaluate(g, p.replace(L=(0.2,)))
+    s_high = dag.evaluate(g, p.replace(L=(0.5,)))
+    assert s_low.lam[0] == pytest.approx(0.0)
+    assert s_high.lam[0] == pytest.approx(1.0)
+
+
+def test_critical_latency_0385():
+    g, p = build_example(c0=0.1)
+    bps = dag.breakpoints(g, p.replace(L=(0.2,)), 0.2, 0.5)
+    assert len(bps) == 1
+    assert bps[0] == pytest.approx(0.385, abs=1e-6)            # Algorithm 2
+
+
+def test_tolerance_lp_0885():
+    g, p = build_example(c0=0.1)
+    # Fig 6: maximize ℓ subject to t ≤ 2 µs → 0.885 µs
+    got = dag.tolerance(g, p.replace(L=(0.5,)), budget=2.0) + 0.5
+    assert got == pytest.approx(0.885, abs=1e-6)
+    # same via the explicit LP (HiGHS)
+    prob = lp.build_lp(g, p.replace(L=(0.5,)), objective="tolerance",
+                       max_cls=0, T_budget=2.0)
+    sol = lp.solve_highs(prob)
+    assert sol.T == pytest.approx(0.885, abs=1e-6)
+
+
+def test_all_engines_agree_on_example():
+    g, p0 = build_example(c0=0.1)
+    for L in (0.1, 0.385, 0.6, 2.0):
+        p = p0.replace(L=(L,))
+        t_dag = dag.evaluate(g, p).T
+        t_sim = simulator.simulate(g, p).T
+        t_lp = lp.predict_runtime(g, p, solver="highs").T
+        assert t_dag == pytest.approx(t_sim, abs=1e-9)
+        assert t_dag == pytest.approx(t_lp, abs=1e-7)

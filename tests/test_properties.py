@@ -1,0 +1,107 @@
+"""Hypothesis property tests on LLAMP's invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dag, lp, simulator, synth
+from repro.core.loggps import LogGPS
+
+
+@st.composite
+def random_graph(draw):
+    seed = draw(st.integers(0, 2**31 - 1))
+    nranks = draw(st.integers(2, 6))
+    nops = draw(st.integers(8, 80))
+    p_msg = draw(st.floats(0.1, 0.7))
+    params = LogGPS(L=(draw(st.floats(0.1, 10.0)),),
+                    G=(draw(st.floats(1e-6, 1e-3)),),
+                    o=draw(st.floats(0.0, 5.0)), S=1e9)
+    rng = np.random.default_rng(seed)
+    g = synth.random_dag(rng, nranks=nranks, nops=nops, p_msg=p_msg,
+                         params=params)
+    return g, params
+
+
+@given(random_graph())
+@settings(max_examples=40, deadline=None)
+def test_dag_equals_des_random(gp):
+    g, params = gp
+    assert dag.evaluate(g, params).T == pytest.approx(
+        simulator.simulate(g, params).T, rel=1e-12)
+
+
+@given(random_graph())
+@settings(max_examples=25, deadline=None)
+def test_dag_equals_lp_random(gp):
+    g, params = gp
+    sol = lp.predict_runtime(g, params, solver="highs")
+    assert sol.T == pytest.approx(dag.evaluate(g, params).T, rel=1e-8)
+
+
+@given(random_graph(), st.lists(st.floats(0.0, 100.0), min_size=3, max_size=6))
+@settings(max_examples=25, deadline=None)
+def test_T_monotone_convex_in_L(gp, deltas):
+    """T(L) is nondecreasing and convex piecewise-linear in L."""
+    g, params = gp
+    plan = dag.LevelPlan(g)
+    ds = sorted(set(deltas))
+    Ts = [plan.forward(params.with_delta(d)).T for d in ds]
+    for a, b in zip(Ts[:-1], Ts[1:]):
+        assert b >= a - 1e-9                      # monotone
+    # convexity: slopes nondecreasing
+    slopes = [(Ts[i + 1] - Ts[i]) / (ds[i + 1] - ds[i])
+              for i in range(len(ds) - 1) if ds[i + 1] > ds[i]]
+    for a, b in zip(slopes[:-1], slopes[1:]):
+        assert b >= a - 1e-6
+
+
+@given(random_graph())
+@settings(max_examples=20, deadline=None)
+def test_lambda_is_right_derivative(gp):
+    g, params = gp
+    plan = dag.LevelPlan(g)
+    s = plan.forward(params)
+    eps = 1e-4
+    T_eps = plan.forward(params.with_delta(eps)).T
+    assert (T_eps - s.T) / eps == pytest.approx(s.lam[0], abs=1e-3)
+
+
+@given(random_graph(), st.floats(0.005, 0.1))
+@settings(max_examples=20, deadline=None)
+def test_tolerance_inversion_random(gp, p):
+    g, params = gp
+    plan = dag.LevelPlan(g)
+    T0 = plan.forward(params).T
+    tol = dag.tolerance(g, params, p, plan=plan)
+    if np.isinf(tol):
+        # λ stays 0: runtime independent of L — verify at a huge L
+        assert plan.forward(params.with_delta(1e6)).T == pytest.approx(
+            T0, rel=1e-9)
+    else:
+        assert plan.forward(params.with_delta(tol)).T == pytest.approx(
+            (1 + p) * T0, rel=1e-5)
+
+
+@given(random_graph())
+@settings(max_examples=15, deadline=None)
+def test_ipm_duality(gp):
+    """IPM primal equals HiGHS primal; duals feasible (λ ≥ 0)."""
+    g, params = gp
+    prob = lp.build_lp(g, params)
+    from repro.core.ipm import solve_ipm
+    sol = solve_ipm(prob)
+    ref = lp.solve_highs(prob)
+    assert sol.T == pytest.approx(ref.T, rel=1e-4, abs=1e-4)
+    assert (sol.lam >= -1e-6).all()
+
+
+@given(st.integers(2, 5), st.integers(1, 4))
+@settings(max_examples=10, deadline=None)
+def test_injection_equivalence(pdim, iters):
+    """DES with flow injection ΔL ≡ analytical model at L+ΔL (Fig 8D)."""
+    params = LogGPS(L=(2.0,), G=(1e-4,), o=1.0, S=1e9)
+    g = synth.stencil2d(pdim, pdim, iters, params=params)
+    for dL in (0.0, 3.5, 17.0):
+        assert simulator.simulate(g, params, dL, injector="flow").T == \
+            pytest.approx(dag.evaluate(g, params.with_delta(dL)).T, rel=1e-12)

@@ -1,0 +1,112 @@
+"""Solver-equivalence tests: DAG engine ≡ DES ≡ HiGHS LP ≡ our IPM."""
+
+import numpy as np
+import pytest
+
+from repro.core import dag, ipm, lp, sensitivity, simulator, synth
+from repro.core.loggps import LogGPS, cluster_params
+
+
+WORKLOADS = [
+    ("stencil2d", lambda p: synth.stencil2d(3, 3, 4, params=p)),
+    ("cg", lambda p: synth.cg_like(2, 2, 3, params=p)),
+    ("sweep", lambda p: synth.sweep2d(3, 3, 2, params=p)),
+    ("allreduce_ring", lambda p: synth.allreduce_chain(8, 3, params=p, algo="ring")),
+    ("allreduce_rd", lambda p: synth.allreduce_chain(
+        8, 3, params=p, algo="recursive_doubling")),
+    ("pipeline", lambda p: synth.ring_pipeline(5, 4, params=p)),
+]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return cluster_params(L_us=3.0, o_us=5.0)
+
+
+@pytest.mark.parametrize("name,builder", WORKLOADS)
+def test_dag_equals_des(name, builder, params):
+    g = builder(params)
+    for dL in (0.0, 7.0, 42.0):
+        t_dag = dag.evaluate(g, params.with_delta(dL)).T
+        t_sim = simulator.simulate(g, params, dL).T
+        assert t_dag == pytest.approx(t_sim, rel=1e-12), (name, dL)
+
+
+@pytest.mark.parametrize("name,builder", WORKLOADS[:4])
+def test_dag_equals_highs(name, builder, params):
+    g = builder(params)
+    sol = lp.predict_runtime(g, params, solver="highs")
+    s = dag.evaluate(g, params)
+    assert sol.T == pytest.approx(s.T, rel=1e-9)
+    assert sol.lam[0] == pytest.approx(s.lam[0], abs=1e-6)
+
+
+@pytest.mark.parametrize("name,builder", WORKLOADS[:3])
+def test_ipm_agrees(name, builder, params):
+    g = builder(params)
+    prob = lp.build_lp(g, params)
+    sol = ipm.solve_ipm(prob)
+    s = dag.evaluate(g, params)
+    assert sol.T == pytest.approx(s.T, rel=1e-5)
+
+
+def test_tolerance_dag_equals_lp(params):
+    g = synth.cg_like(2, 2, 4, params=params)
+    for p in (0.01, 0.05):
+        t_dag = dag.tolerance(g, params, p)
+        t_lp = lp.tolerance_lp(g, params, p)
+        assert t_dag == pytest.approx(t_lp, rel=1e-5)
+
+
+def test_tolerance_definition(params):
+    """T(L0 + tol_p) == (1+p)·T(L0) exactly (tolerance inversion property)."""
+    g = synth.stencil2d(3, 3, 4, params=params, jitter=0.3, seed=3)
+    plan = dag.LevelPlan(g)
+    T0 = plan.forward(params).T
+    for p in (0.01, 0.02, 0.05):
+        tol = dag.tolerance(g, params, p, plan=plan)
+        T_at = plan.forward(params.with_delta(tol)).T
+        assert T_at == pytest.approx((1 + p) * T0, rel=1e-6)
+
+
+def test_breakpoints_bracket_lambda_changes(params):
+    g = synth.stencil2d(3, 3, 3, params=params, jitter=0.5, seed=7)
+    lo, hi = 0.1, 200.0
+    bps = dag.breakpoints(g, params, lo, hi)
+    plan = dag.LevelPlan(g)
+    # λ must be constant between consecutive breakpoints
+    edges = [lo] + bps + [hi]
+    for a, b in zip(edges[:-1], edges[1:]):
+        la = plan.forward(params.replace(L=(a + 1e-6,))).lam[0]
+        lb = plan.forward(params.replace(L=(b - 1e-6,))).lam[0]
+        assert la == pytest.approx(lb, abs=1e-6), (a, b)
+
+
+def test_rendezvous_protocol(params):
+    """Messages above S synchronize sender and receiver (Appendix B)."""
+    small = params.replace(S=1e9)
+    large = params.replace(S=8.0)     # force rendezvous
+    from repro.core.graph import GraphBuilder
+
+    def build(p):
+        b = GraphBuilder(2, 1)
+        b.add_calc(0, 1.0)
+        b.add_calc(1, 50.0)           # late receiver
+        b.add_message(0, 1, 1000.0, p)
+        b.add_calc(1, 1.0)
+        return b.finalize()
+
+    t_eager = dag.evaluate(build(small), small).T
+    t_rdvz = dag.evaluate(build(large), large).T
+    # rendezvous waits for the late receiver to post, then pays another L
+    assert t_rdvz > t_eager
+    s = dag.evaluate(build(large), large)
+    assert s.lam[0] >= 1.0
+
+
+def test_rho_fraction(params):
+    g = synth.allreduce_chain(4, 2, comp_us=10.0, params=params)
+    s = dag.evaluate(g, params)
+    rho = s.rho()[0]
+    assert 0.0 < rho < 1.0
+    assert rho == pytest.approx(params.L[0] * s.lam[0] / s.T)

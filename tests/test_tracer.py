@@ -1,0 +1,77 @@
+"""Tracer tests: framework steps → execution graphs → LLAMP metrics."""
+
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import dag, sensitivity
+from repro.core.tracer import TraceSpec, trace_step
+from repro.models.config import DECODE_32K, PREFILL_32K, TRAIN_4K
+
+
+@pytest.fixture(scope="module")
+def ts():
+    return TraceSpec(pods=2, data=2, model=4, mfu=0.5)
+
+
+def test_train_graph_structure(ts):
+    full, _ = configs.get("yi-6b")
+    g = trace_step(full, TRAIN_4K, ts)
+    assert g.nranks == ts.n_devices
+    assert g.num_edges > g.num_vertices / 2
+    s = dag.evaluate(g, ts.params())
+    assert s.T > 0
+    assert s.lam[0] > 0                       # ICI messages on critical path
+
+
+def test_dcn_class_only_from_pod_axis(ts):
+    full, _ = configs.get("yi-6b")
+    g = trace_step(full, TRAIN_4K, ts)
+    # DCN edges exist (pod-axis gradient allreduce)
+    assert (g.elat[:, 1] > 0).any()
+    ts1 = TraceSpec(pods=1, data=2, model=4)
+    g1 = trace_step(full, TRAIN_4K, ts1)
+    assert not (g1.elat[:, 1] > 0).any()
+
+
+def test_ring_vs_recdoub_on_arch(ts):
+    """Fig 10 replicated on an assigned arch: ring allreduce ⇒ λ↑, tolerance↓."""
+    full, _ = configs.get("deepseek-7b")
+    p = ts.params()
+    g_ring = trace_step(full, TRAIN_4K,
+                        TraceSpec(pods=2, data=2, model=4, allreduce_algo="ring"))
+    g_rd = trace_step(full, TRAIN_4K,
+                      TraceSpec(pods=2, data=2, model=4,
+                                allreduce_algo="recursive_doubling"))
+    lam_ring = dag.evaluate(g_ring, p).lam[0]
+    lam_rd = dag.evaluate(g_rd, p).lam[0]
+    assert lam_ring > lam_rd
+    tol_ring = dag.tolerance(g_ring, p, 0.05)
+    tol_rd = dag.tolerance(g_rd, p, 0.05)
+    assert tol_ring <= tol_rd
+
+
+def test_decode_more_latency_sensitive_than_train(ts):
+    """Decode steps are small: a µs of ICI latency is a larger fraction of
+    the step ⇒ ρ_L(decode) > ρ_L(train)."""
+    full, _ = configs.get("yi-6b")
+    p = ts.params()
+    rho_train = sensitivity.analyze(trace_step(full, TRAIN_4K, ts), p).rho[0]
+    rho_dec = sensitivity.analyze(trace_step(full, DECODE_32K, ts), p).rho[0]
+    assert rho_dec > rho_train
+
+
+def test_prefill_graph_is_fwd_only(ts):
+    full, _ = configs.get("yi-6b")
+    g_train = trace_step(full, TRAIN_4K, ts)
+    g_pre = trace_step(full, PREFILL_32K, ts)
+    assert g_pre.num_vertices < g_train.num_vertices
+
+
+def test_moe_arch_has_alltoall_traffic(ts):
+    full, _ = configs.get("deepseek-v2-lite-16b")
+    g = trace_step(full, TRAIN_4K, ts)
+    full_d, _ = configs.get("yi-6b")
+    g_d = trace_step(full_d, TRAIN_4K, ts)
+    # MoE graphs carry more messages per layer (dispatch+combine a2a)
+    assert (g.num_edges / full.n_layers) > 0.8 * (g_d.num_edges / full_d.n_layers)
