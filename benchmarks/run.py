@@ -7,6 +7,8 @@ Prints ``name,us_per_call,derived`` CSV lines:
   bench_collectives    — Fig 10           (ring vs recursive doubling)
   bench_topology       — Fig 11           (fat-tree/dragonfly/torus wires)
   bench_placement      — Fig 20           (Algorithm 3 rank placement)
+  bench_sweep          — repro.sweep      (1k-scenario batched grid vs
+                                           scalar LevelPlan loop; cache)
 """
 
 from __future__ import annotations
@@ -17,12 +19,14 @@ import traceback
 
 def main() -> None:
     from . import (bench_collectives, bench_placement, bench_solver_speed,
-                   bench_tolerance, bench_topology, bench_validation)
+                   bench_sweep, bench_tolerance, bench_topology,
+                   bench_validation)
 
     print("name,us_per_call,derived")
     failures = 0
     for mod in (bench_solver_speed, bench_validation, bench_tolerance,
-                bench_collectives, bench_topology, bench_placement):
+                bench_collectives, bench_topology, bench_placement,
+                bench_sweep):
         try:
             mod.run(lambda line: print(line, flush=True))
         except Exception:

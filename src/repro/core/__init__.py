@@ -10,6 +10,14 @@ Public API:
     simulator.simulate                       — LogGOPSim-analog DES + injector
     sensitivity.analyze / latency_curve / latency_tolerance
     topology / placement / synth / tracer / hlo
+
+Batched scenario sweeps live in the sibling package ``repro.sweep``: a
+SweepEngine compiles an ExecutionGraph once into padded per-level tensors
+and evaluates thousands of LogGPS parameter points (latency deltas ×
+bandwidth scales, plus stamped collective/topology graph variants) in one
+jit+vmap max-plus pass, with results identical to ``dag.evaluate``.  The
+``sensitivity`` wrappers here dispatch to it automatically for multi-point
+queries and fall back to the scalar engine when JAX is unavailable.
 """
 
 from . import (collectives, dag, graph, hlo, ipm, loggps, lp, placement,  # noqa: F401

@@ -22,6 +22,7 @@ marginals and equal λ_L (§II-D1).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional
 
 import numpy as np
@@ -161,7 +162,13 @@ def predict_runtime(g: ExecutionGraph, params: LogGPS, solver: str = "highs") ->
 
 def tolerance_lp(g: ExecutionGraph, params: LogGPS, degradation: float,
                  cls: int = 0, solver: str = "highs") -> float:
-    """The paper's §II-D2 flipped LP. Returns ΔL tolerance (L* − L₀)."""
+    """The paper's §II-D2 flipped LP. Returns ΔL tolerance (L* − L₀).
+
+    Unbounded LPs (no class-``cls`` latency term ever reaches the critical
+    path, e.g. a graph with no latency-bearing edges) mean infinite
+    tolerance: ``math.inf`` is returned explicitly rather than an
+    ``inf − L₀`` arithmetic artifact.
+    """
     base = predict_runtime(g, params, solver=solver)
     budget = (1.0 + degradation) * base.T
     prob = build_lp(g, params, objective="tolerance", max_cls=cls, T_budget=budget)
@@ -170,4 +177,6 @@ def tolerance_lp(g: ExecutionGraph, params: LogGPS, degradation: float,
     else:
         from .ipm import solve_ipm
         sol = solve_ipm(prob)
+    if sol.status == "unbounded" or not np.isfinite(sol.T):
+        return math.inf
     return float(sol.T - params.L[cls])

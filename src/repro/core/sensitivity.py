@@ -7,6 +7,14 @@ Wraps the DAG engine (default, exact & fast) and the explicit-LP solvers
     curve  = latency_curve(graph, params, deltas)   # Fig 9 top panels
     tol    = latency_tolerance(graph, params, 0.01) # Fig 1 green zone
     lcs    = critical_latencies(graph, params, lo, hi)  # Algorithm 2
+
+Multi-point queries dispatch to the batched scenario-sweep engine
+(``repro.sweep``: one jit+vmap max-plus pass over the whole grid) whenever
+it pays off — ≥ :data:`SWEEP_MIN_POINTS` curve points, ≥
+:data:`SWEEP_MIN_DEGRADATIONS` tolerance levels, or large graphs for the
+breakpoint search.  ``engine="scalar"`` forces the numpy path,
+``engine="sweep"`` forces (and surfaces errors from) the batched path;
+the default ``"auto"`` falls back to scalar if JAX is unavailable.
 """
 
 from __future__ import annotations
@@ -55,29 +63,114 @@ class LatencyCurve:
         return float(np.sqrt(np.mean((self.T - m) ** 2)) / np.mean(m))
 
 
+#: dispatch thresholds for the batched sweep engine (repro.sweep)
+SWEEP_MIN_POINTS = 8
+SWEEP_MIN_DEGRADATIONS = 4
+SWEEP_MIN_EDGES_BREAKPOINTS = 20_000
+
+
+def _check_engine_arg(engine: str) -> None:
+    if engine not in ("auto", "scalar", "sweep"):
+        raise ValueError(f"engine must be 'auto', 'scalar' or 'sweep', "
+                         f"got {engine!r}")
+
+
+def _sweep_engine(g: ExecutionGraph, params: LogGPS):
+    """Build (or reuse) a batched SweepEngine; None if JAX is unavailable.
+
+    Compiled engines are memoized on the graph object per parameter set, so
+    repeated sensitivity calls on one graph pay compile_plan once.
+    """
+    try:
+        from repro.sweep import SweepEngine
+    except ImportError:
+        return None
+    memo = getattr(g, "_sweep_engines", None)
+    if memo is None:
+        memo = {}
+        object.__setattr__(g, "_sweep_engines", memo)
+    key = (tuple(params.L), tuple(params.G), params.o, params.S,
+           id(params.rank_of_class))
+    eng = memo.get(key)
+    if eng is None:
+        eng = memo[key] = SweepEngine(g, params)
+    return eng
+
+
 def latency_curve(g: ExecutionGraph, params: LogGPS, deltas: Sequence[float],
-                  cls: int = 0, plan: Optional[dag.LevelPlan] = None) -> LatencyCurve:
+                  cls: int = 0, plan: Optional[dag.LevelPlan] = None,
+                  engine: str = "auto") -> LatencyCurve:
+    _check_engine_arg(engine)
+    deltas_arr = np.asarray(deltas, dtype=np.float64)
+    want_sweep = (engine == "sweep"
+                  or (engine == "auto" and deltas_arr.size >= SWEEP_MIN_POINTS))
+    if want_sweep:
+        try:
+            from repro.sweep import latency_grid
+            eng = _sweep_engine(g, params)
+            if eng is not None:
+                res = eng.run(latency_grid(params, deltas_arr, cls=cls))
+                return LatencyCurve(deltas=deltas_arr, T=res.T,
+                                    lam=res.lam[:, cls], rho=res.rho[:, cls])
+        except Exception:
+            if engine == "sweep":
+                raise
     plan = plan or dag.LevelPlan(g)
     Ts, lams, rhos = [], [], []
-    for d in deltas:
+    for d in deltas_arr:
         s = plan.forward(params.with_delta(float(d), cls))
         Ts.append(s.T)
         lams.append(float(s.lam[cls]))
         rhos.append(float(s.rho()[cls]))
-    return LatencyCurve(deltas=np.asarray(deltas, dtype=np.float64),
+    return LatencyCurve(deltas=deltas_arr,
                         T=np.asarray(Ts), lam=np.asarray(lams), rho=np.asarray(rhos))
 
 
 def latency_tolerance(g: ExecutionGraph, params: LogGPS,
                       degradations: Sequence[float] = (0.01, 0.02, 0.05),
-                      cls: int = 0, plan: Optional[dag.LevelPlan] = None) -> dict:
-    """The Fig 1 colored zones: ΔL tolerable before each p% degradation."""
+                      cls: int = 0, plan: Optional[dag.LevelPlan] = None,
+                      engine: str = "auto") -> dict:
+    """The Fig 1 colored zones: ΔL tolerable before each p% degradation.
+
+    With ≥ :data:`SWEEP_MIN_DEGRADATIONS` levels the bisections run in
+    lockstep on the batched engine — one sweep call per probe round instead
+    of one scalar forward per probe per level.
+    """
+    _check_engine_arg(engine)
+    degr = list(degradations)
+    want_sweep = (engine == "sweep"
+                  or (engine == "auto" and len(degr) >= SWEEP_MIN_DEGRADATIONS))
+    if want_sweep:
+        try:
+            from repro.sweep import tolerance_batched
+            eng = _sweep_engine(g, params)
+            if eng is not None:
+                return tolerance_batched(eng, params, degr, cls=cls)
+        except Exception:
+            if engine == "sweep":
+                raise
     plan = plan or dag.LevelPlan(g)
     return {p: dag.tolerance(g, params, p, cls=cls, plan=plan)
-            for p in degradations}
+            for p in degr}
 
 
 def critical_latencies(g: ExecutionGraph, params: LogGPS, L_min: float,
                        L_max: float, cls: int = 0,
-                       plan: Optional[dag.LevelPlan] = None) -> list:
+                       plan: Optional[dag.LevelPlan] = None,
+                       engine: str = "auto") -> list:
+    """Algorithm 2's kink search; big graphs probe whole interval frontiers
+    per batched sweep call instead of one scalar forward per interval."""
+    _check_engine_arg(engine)
+    want_sweep = (engine == "sweep"
+                  or (engine == "auto"
+                      and g.num_edges >= SWEEP_MIN_EDGES_BREAKPOINTS))
+    if want_sweep:
+        try:
+            from repro.sweep import breakpoints_batched
+            eng = _sweep_engine(g, params)
+            if eng is not None:
+                return breakpoints_batched(eng, params, L_min, L_max, cls=cls)
+        except Exception:
+            if engine == "sweep":
+                raise
     return dag.breakpoints(g, params, L_min, L_max, cls=cls, plan=plan)

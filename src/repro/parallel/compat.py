@@ -1,0 +1,24 @@
+"""JAX version compatibility shims for the parallel stack."""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """``jax.shard_map`` across JAX versions.
+
+    Newer JAX exposes it at the top level with a ``check_vma`` flag; older
+    releases only have ``jax.experimental.shard_map.shard_map`` where the
+    same switch is named ``check_rep``.
+    """
+    sm = getattr(jax, "shard_map", None)
+    kw = {}
+    if sm is not None:
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as esm
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    return esm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

@@ -1,0 +1,34 @@
+"""repro.sweep — batched scenario-sweep engine (JAX/Pallas max-plus).
+
+LLAMP's workhorse loop is "re-evaluate one execution graph under many
+LogGPS parameter points" (latency curves, tolerance bisections, the
+Algorithm-2 breakpoint search).  The scalar path pays a full Python/numpy
+level walk per point; this subsystem compiles the graph ONCE into padded
+dense per-level tensors and evaluates a whole scenario grid in a single
+jit+vmap max-plus forward pass:
+
+    from repro import sweep
+    eng  = sweep.SweepEngine(graph, params)          # compile once
+    grid = sweep.latency_grid(params, deltas)        # or cartesian_grid(...)
+    res  = eng.run(grid)                             # T/λ/ρ for every scenario
+
+Modules:
+    compile    — LevelPlan → CompiledPlan (bucketed rectangular tensors)
+    engine     — SweepEngine (+ tolerance_batched / breakpoints_batched)
+    scenarios  — ScenarioBatch grids; GraphVariant stamping (collectives,
+                 topologies) for axes that change the graph itself
+    cache      — content-hash LRU memo of sweep results
+
+Results match ``core.dag`` exactly (same argmax tie-breaks, float64), and
+λ matches the explicit LP's reduced costs; ``core.sensitivity`` dispatches
+here automatically for multi-point sweeps.  The Pallas ``maxplus`` kernel
+is available as the inner-scatter backend (``backend="pallas"``).
+"""
+
+from .cache import DEFAULT_CACHE, SweepCache  # noqa: F401
+from .compile import CompiledPlan, compile_plan  # noqa: F401
+from .engine import (SweepEngine, SweepResult, breakpoints_batched,  # noqa: F401
+                     tolerance_batched)
+from .scenarios import (GraphVariant, ScenarioBatch, bandwidth_grid,  # noqa: F401
+                        base_batch, cartesian_grid, collective_variants,
+                        latency_grid, sweep_variants, topology_variants)

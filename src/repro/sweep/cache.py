@@ -1,0 +1,74 @@
+"""Content-addressed memoization of sweep results.
+
+Key = SHA1(compiled-plan tensors) ⊕ SHA1(scenario grid ⊕ flags): two
+structurally identical graphs (however they were built) with the same
+parameter grid share one entry, so re-running a study script — or the
+breakpoint search re-probing a grid it has already seen — costs a hash
+instead of a forward pass.  LRU-bounded and in-memory; results are small
+([S] + [S, nclass] float64), the *inputs* were the expensive part.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Optional
+
+
+def result_key(plan_hash: str, scenarios, compute_lam: bool,
+               backend: str) -> str:
+    sha = hashlib.sha1(plan_hash.encode())
+    sha.update(scenarios.L.tobytes())
+    sha.update(scenarios.gscale.tobytes())
+    sha.update(f"|{int(compute_lam)}|{backend}".encode())
+    return sha.hexdigest()
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+
+class SweepCache:
+    """LRU map: result_key → SweepResult."""
+
+    def __init__(self, capacity: int = 64):
+        self.capacity = capacity
+        self._store: OrderedDict = OrderedDict()
+        self.stats = CacheStats()
+
+    def get(self, key: str):
+        hit = self._store.get(key)
+        if hit is None:
+            self.stats.misses += 1
+            return None
+        self._store.move_to_end(key)
+        self.stats.hits += 1
+        return hit
+
+    def put(self, key: str, value) -> None:
+        self._store[key] = value
+        self._store.move_to_end(key)
+        while len(self._store) > self.capacity:
+            self._store.popitem(last=False)
+            self.stats.evictions += 1
+
+    def clear(self) -> None:
+        self._store.clear()
+        self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+
+#: Shared default instance (engines opt out with ``cache=None`` or
+#: ``run(use_cache=False)``).
+DEFAULT_CACHE = SweepCache()

@@ -1,0 +1,255 @@
+"""LevelPlan → padded dense per-level tensors (the sweep engine's "program").
+
+The scalar engine (``core.dag.LevelPlan``) walks topological levels with
+ragged numpy slices and ``np.maximum.at`` scatters — great for one
+evaluation, hostile to XLA.  This module re-lays the same schedule out as
+*rectangular* tensors in two views:
+
+Per-vertex view (the fast ``segment`` backend): every vertex owns a padded
+row of in-edges, and vertices live at level-major *flat slots*
+(``slot = level·Vmax + offset``), so one jit'd ``fori_loop`` iteration is a
+pure gather → max-reduce → ``dynamic_update_slice`` — no scatter anywhere:
+
+    vsrc    [nlv, Vmax, Dmax]      flat slot of each in-edge's source
+    vmaskd  [nlv, Vmax, Dmax]      real-edge mask
+    vconst  [nlv, Vmax, Dmax]      constant edge cost incl. build-time (s-1)G
+    vgap    [nlv, Vmax, Dmax]      the (s-1)·G share (bandwidth sweeps)
+    vgclass [nlv, Vmax, Dmax]      latency class of the gap term
+    vlat    [nlv, Vmax, Dmax, nc]  latency-class multiplicities
+    vcost_lv[nlv, Vmax]            vertex cost by slot
+
+Per-edge view (the Pallas ``maxplus`` backend): edges grouped by level with
+level-local destination ids, from which :meth:`CompiledPlan.dense_indicator`
+derives the 0/−inf scatter matrices the (max,+) kernel consumes.
+
+All dims are rounded up to power-of-two *buckets* so graphs of similar size
+share one compiled XLA program (the jit cache keys on shapes) — a sweep over
+100 random graphs costs a handful of compiles, not 100.
+
+Edge weights at a scenario (L, γ) are reconstructed as
+
+    w = const + gap·(γ_gclass − 1) + lat @ L
+
+so that γ = 1 (build-time bandwidth) reproduces the built edge constant
+*bitwise* — the decomposition can never perturb latency-only sweeps.  γ
+scales the effective gap/byte G (γ > 1 = slower links), assuming ``params``
+matches the graph's build-time parameters; see :func:`compile_plan`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Optional
+
+import numpy as np
+
+from repro.core.graph import ExecutionGraph
+from repro.core.loggps import LogGPS
+
+
+def _bucket(n: int, lo: int = 8) -> int:
+    """Next power of two ≥ max(n, lo)."""
+    n = max(int(n), lo)
+    return 1 << (n - 1).bit_length()
+
+
+@dataclasses.dataclass
+class CompiledPlan:
+    """Padded per-level tensors for batched max-plus relaxation.
+
+    Flat slot ``nlv_p·Vmax`` (``flat_dummy``) is a scratch cell: padded
+    in-edge gathers read it; it is excluded from reductions via
+    ``valid_flat``.
+    """
+
+    # per-vertex in-edge tensors (segment backend)
+    vsrc: np.ndarray       # [nlv_p, Vmax, Dmax] int32 (flat slots, pad → flat_dummy)
+    vmaskd: np.ndarray     # [nlv_p, Vmax, Dmax] bool
+    vconst: np.ndarray     # [nlv_p, Vmax, Dmax] float64
+    vgap: np.ndarray       # [nlv_p, Vmax, Dmax] float64
+    vgclass: np.ndarray    # [nlv_p, Vmax, Dmax] int32
+    vlat: np.ndarray       # [nlv_p, Vmax, Dmax, nclass] float64
+    vlat_sum: np.ndarray   # [nlv_p, Vmax, Dmax] float64 (tie-break slopes)
+    vcost_lv: np.ndarray   # [nlv_p, Vmax] float64
+    valid_flat: np.ndarray  # [nlv_p·Vmax + 1] bool
+    vert_of_slot: np.ndarray  # [nlv_p·Vmax + 1] int32 (original id, pad → nv)
+    # per-edge tensors (pallas backend)
+    esrc: np.ndarray       # [nlv_p, Emax] int32 (flat slots, pad → flat_dummy)
+    edstl: np.ndarray      # [nlv_p, Emax] int32 (level-local slot, pad → Vmax)
+    emask: np.ndarray      # [nlv_p, Emax] bool
+    econst: np.ndarray     # [nlv_p, Emax] float64
+    egap: np.ndarray       # [nlv_p, Emax] float64
+    egclass: np.ndarray    # [nlv_p, Emax] int32
+    elat: np.ndarray       # [nlv_p, Emax, nclass] float64
+    # scalars
+    nv: int
+    nclass: int
+    nlevels: int
+
+    @property
+    def Vmax(self) -> int:
+        return int(self.vsrc.shape[1])
+
+    @property
+    def flat_dummy(self) -> int:
+        return int(self.vsrc.shape[0]) * self.Vmax
+
+    @property
+    def shape_key(self) -> tuple:
+        """Bucketed shapes — two plans with equal keys share one XLA program."""
+        return self.vsrc.shape + self.esrc.shape[1:] + (self.nclass,)
+
+    @property
+    def padding_ratio(self) -> float:
+        """Padded-edge-slots / real edges (compile-quality diagnostic)."""
+        real = max(int(self.vmaskd.sum()), 1)
+        return float(self.vmaskd.size) / real
+
+    def dense_indicator(self, neg: float = -1e30) -> np.ndarray:
+        """[nlv_p, Vmax, Emax] float32 0/−inf scatter matrix for the Pallas
+        backend: row v of level lv is 0 at the slots of v's in-edges.  The
+        (max,+) product of this matrix with per-edge candidate values is
+        exactly the level's scatter-max."""
+        nlv, Emax = self.esrc.shape
+        A = np.full((nlv, self.Vmax, Emax), neg, dtype=np.float32)
+        lv, sl = np.nonzero(self.emask)
+        A[lv, self.edstl[lv, sl], sl] = 0.0
+        return A
+
+    def dense_bytes(self) -> int:
+        nlv, Emax = self.esrc.shape
+        return nlv * self.Vmax * Emax * 4
+
+    def content_hash(self) -> str:
+        """SHA1 over the compiled tensors — keys memoized sweep results."""
+        h = getattr(self, "_hash", None)
+        if h is None:
+            sha = hashlib.sha1(b"compiled-plan-v2")
+            sha.update(np.int64([self.nv, self.nclass, self.nlevels]).tobytes())
+            for a in (self.vsrc, self.vmaskd, self.vconst, self.vgap,
+                      self.vgclass, self.vlat, self.vcost_lv, self.vert_of_slot):
+                sha.update(a.tobytes())
+            h = sha.hexdigest()
+            object.__setattr__(self, "_hash", h)
+        return h
+
+
+def compile_plan(g: ExecutionGraph, params: Optional[LogGPS] = None,
+                 bucket: bool = True) -> CompiledPlan:
+    """Compile an execution graph into a :class:`CompiledPlan`.
+
+    ``params`` is only consulted to split build-time (s−1)·G gap costs out of
+    edge constants (enabling bandwidth-scale scenarios); pass the same
+    parameter object the graph was built with.  With ``params=None`` the gap
+    share is left at 0 and bandwidth scenarios become no-ops (latency sweeps
+    are unaffected either way).
+    """
+    nv, ne, nc = g.num_vertices, g.num_edges, g.nclass
+    if nv == 0:
+        raise ValueError("cannot compile an empty graph")
+    nlevels = g.nlevels
+
+    # -- sort edges by (destination level, destination, original id), the
+    #    scalar LevelPlan order — preserved so argmax tie-breaks agree -------
+    lvl_of_edge = g.level[g.edst]
+    eorder = np.lexsort((g.edst, lvl_of_edge))
+    esrc_s = g.esrc[eorder].astype(np.int64)
+    edst_s = g.edst[eorder].astype(np.int64)
+    econst_s = g.econst[eorder].astype(np.float64)
+    ebytes_s = g.ebytes[eorder].astype(np.float64)
+    elat_s = g.elat[eorder].astype(np.float64)
+    elvl_s = lvl_of_edge[eorder].astype(np.int64)
+    level_ptr = np.searchsorted(elvl_s, np.arange(nlevels + 1))
+
+    # -- group vertices by level (ascending id within a level) --------------
+    vorder = np.argsort(g.level, kind="stable").astype(np.int64)
+    vlvl_s = g.level[vorder].astype(np.int64)
+    v_ptr = np.searchsorted(vlvl_s, np.arange(nlevels + 1))
+
+    # in-degree runs: edges of one destination are contiguous in eorder
+    indeg = np.bincount(edst_s, minlength=nv)
+    ecnt = np.diff(level_ptr)
+    vcnt = np.diff(v_ptr)
+    Emax = _bucket(ecnt.max(initial=1)) if bucket else max(int(ecnt.max(initial=1)), 1)
+    Vmax = _bucket(vcnt.max(initial=1)) if bucket else max(int(vcnt.max(initial=1)), 1)
+    Dmax = _bucket(indeg.max(initial=1), lo=2) if bucket else max(int(indeg.max(initial=1)), 1)
+    nlv_p = _bucket(nlevels) if bucket else nlevels
+    flat_dummy = nlv_p * Vmax
+
+    # -- gap decomposition (bandwidth scenarios) ----------------------------
+    egap_s = np.zeros(ne)
+    egclass_s = np.zeros(ne, dtype=np.int64)
+    if params is not None:
+        msg = np.nonzero(ebytes_s > 0)[0]
+        G = np.asarray(params.G, dtype=np.float64)
+        if params.rank_of_class is None:
+            cls = np.zeros(msg.shape[0], dtype=np.int64)
+        else:
+            src_r = g.vrank[esrc_s[msg]]
+            dst_r = g.vrank[edst_s[msg]]
+            cls = np.fromiter(
+                (params.link_class(int(a), int(b))
+                 for a, b in zip(src_r, dst_r)),
+                dtype=np.int64, count=msg.shape[0])
+        egclass_s[msg] = cls
+        egap_s[msg] = np.maximum(ebytes_s[msg] - 1.0, 0.0) * G[cls]
+
+    # -- vertex → (level, offset) flat slots --------------------------------
+    vslot = np.arange(nv, dtype=np.int64) - v_ptr[vlvl_s]     # offset of vorder[i]
+    slot_of_vertex = np.empty(nv, dtype=np.int64)
+    slot_of_vertex[vorder] = vlvl_s * Vmax + vslot
+
+    # -- per-edge placement: (level, local dst slot, in-edge ordinal) -------
+    eslot = np.arange(ne, dtype=np.int64) - level_ptr[elvl_s]
+    dst_slot_flat = slot_of_vertex[edst_s]
+    edstl_s = dst_slot_flat - elvl_s * Vmax                    # level-local
+    ekey = elvl_s * np.int64(nv + 1) + edst_s                  # sorted by construction
+    run_start = np.searchsorted(ekey, ekey)                    # first edge of dst run
+    d_idx = np.arange(ne, dtype=np.int64) - run_start          # in-edge ordinal
+
+    # -- per-vertex view ----------------------------------------------------
+    vsrc = np.full((nlv_p, Vmax, Dmax), flat_dummy, dtype=np.int32)
+    vmaskd = np.zeros((nlv_p, Vmax, Dmax), dtype=bool)
+    vconst = np.zeros((nlv_p, Vmax, Dmax))
+    vgap = np.zeros((nlv_p, Vmax, Dmax))
+    vgclass = np.zeros((nlv_p, Vmax, Dmax), dtype=np.int32)
+    vlat = np.zeros((nlv_p, Vmax, Dmax, nc))
+    vsrc[elvl_s, edstl_s, d_idx] = slot_of_vertex[esrc_s]
+    vmaskd[elvl_s, edstl_s, d_idx] = True
+    vconst[elvl_s, edstl_s, d_idx] = econst_s
+    vgap[elvl_s, edstl_s, d_idx] = egap_s
+    vgclass[elvl_s, edstl_s, d_idx] = egclass_s
+    vlat[elvl_s, edstl_s, d_idx] = elat_s
+
+    vcost_lv = np.zeros((nlv_p, Vmax))
+    vcost_lv[vlvl_s, vslot] = g.vcost[vorder]
+    valid_flat = np.zeros(flat_dummy + 1, dtype=bool)
+    valid_flat[vlvl_s * Vmax + vslot] = True
+    vert_of_slot = np.full(flat_dummy + 1, nv, dtype=np.int32)
+    vert_of_slot[vlvl_s * Vmax + vslot] = vorder
+
+    # -- per-edge view (pallas backend) -------------------------------------
+    esrc_p = np.full((nlv_p, Emax), flat_dummy, dtype=np.int32)
+    edstl_p = np.full((nlv_p, Emax), Vmax, dtype=np.int32)
+    emask = np.zeros((nlv_p, Emax), dtype=bool)
+    econst_p = np.zeros((nlv_p, Emax))
+    egap_p = np.zeros((nlv_p, Emax))
+    egclass_p = np.zeros((nlv_p, Emax), dtype=np.int32)
+    elat_p = np.zeros((nlv_p, Emax, nc))
+    esrc_p[elvl_s, eslot] = slot_of_vertex[esrc_s]
+    edstl_p[elvl_s, eslot] = edstl_s
+    emask[elvl_s, eslot] = True
+    econst_p[elvl_s, eslot] = econst_s
+    egap_p[elvl_s, eslot] = egap_s
+    egclass_p[elvl_s, eslot] = egclass_s
+    elat_p[elvl_s, eslot] = elat_s
+
+    return CompiledPlan(
+        vsrc=vsrc, vmaskd=vmaskd, vconst=vconst, vgap=vgap, vgclass=vgclass,
+        vlat=vlat, vlat_sum=vlat.sum(axis=3), vcost_lv=vcost_lv,
+        valid_flat=valid_flat, vert_of_slot=vert_of_slot,
+        esrc=esrc_p, edstl=edstl_p, emask=emask, econst=econst_p,
+        egap=egap_p, egclass=egclass_p, elat=elat_p,
+        nv=nv, nclass=nc, nlevels=nlevels,
+    )

@@ -1,0 +1,400 @@
+"""Batched max-plus evaluation of LogGPS scenario grids (jit + vmap).
+
+One call evaluates a whole :class:`~repro.sweep.scenarios.ScenarioBatch`
+against a :class:`~repro.sweep.compile.CompiledPlan`:
+
+    T[s]        makespan per scenario
+    λ[s, c]     ∂T/∂L_c — messages of class c on the critical path, recovered
+                by the same argmax critical-path backtrace (with the scalar
+                engine's max-slope tie-break) so results match
+                ``core.dag.LevelPlan.forward`` to float64 round-off, and the
+                HiGHS lower-bound marginals of the explicit LP
+    ρ[s, c]     latency share L_c·λ_c / T
+
+Backends
+--------
+``segment`` (default): pure-``jnp`` per-level relaxation over the compiled
+per-vertex in-edge tensors — gather, max-reduce, ``dynamic_update_slice``;
+no scatters, which is what makes it fast on CPU and TPU alike.  Runs in
+float64 inside a scoped ``enable_x64`` so the sweep is bit-compatible with
+the numpy engine.  The per-scenario axis is ``vmap``'d.
+
+``pallas``: the existing ``repro.kernels.maxplus`` TPU kernel as the inner
+scatter — each level's scatter-max is a (max,+) mat-vec of a 0/−inf
+incidence matrix with per-edge candidate values, scenarios riding the
+128-wide lane axis.  Values-only (float32 accumulators, like the TPU VPU),
+so λ/ρ requests fall back to the segment pass; tolerance ≈ 1e-6 relative.
+
+Also here: lockstep-batched versions of the bisection loops from
+``core.dag`` (``tolerance_batched``, ``breakpoints_batched``) — every probe
+round becomes ONE engine call over all active intervals.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.loggps import LogGPS
+
+from .cache import DEFAULT_CACHE, SweepCache, result_key
+from .compile import CompiledPlan, _bucket, compile_plan
+from .scenarios import ScenarioBatch, latency_grid
+
+BIG = 1e30          # matches kernels.maxplus NEG_INF magnitude
+ATOL = 1e-12        # the scalar engine's tie tolerances (dag.LevelPlan)
+
+
+@dataclasses.dataclass
+class SweepResult:
+    T: np.ndarray                    # [S] µs
+    lam: Optional[np.ndarray]        # [S, nclass] or None (values-only run)
+    rho: Optional[np.ndarray]        # [S, nclass] or None
+    scenarios: ScenarioBatch
+    backend: str
+    from_cache: bool = False
+
+    @property
+    def S(self) -> int:
+        return int(self.T.shape[0])
+
+    def argbest(self) -> int:
+        """Scenario index with the smallest makespan."""
+        return int(np.argmin(self.T))
+
+
+# -- jitted forwards (module level: the jit cache is shared across engines,
+#    and CompiledPlan's bucketed shapes make distinct graphs reuse programs) --
+
+def _jax():
+    import jax  # deferred: repro.core must import without jax present
+    return jax
+
+
+def _segment_forward(want_lam: bool):
+    """Build the jit'd vmapped gather/max forward (cached per flag).
+
+    Vertices live at level-major flat slots, each owning a padded row of
+    in-edges, so one level is a gather → max over the in-edge axis →
+    ``dynamic_update_slice`` of the level's slot block — scatter-free, which
+    is what makes the sweep fast on CPU/TPU alike.
+    """
+    jax = _jax()
+    jnp = jax.numpy
+    dus = jax.lax.dynamic_update_slice
+
+    def one(vsrc, vmaskd, vconst, vgap, vgclass, vlat, vlat_sum, vcost_lv,
+            valid_flat, vert_of_slot, Lrow, gsrow):
+        nlv, Vmax, Dmax = vsrc.shape
+        nc = vlat.shape[3]
+        nflat = valid_flat.shape[0]          # nlv·Vmax + 1 (dummy tail)
+        didx = jnp.arange(Dmax, dtype=jnp.int32)
+
+        def relax(lv, t_end):
+            """[Vmax, Dmax] candidate ends and [Vmax] level start times."""
+            w = (vconst[lv] + vgap[lv] * (gsrow[vgclass[lv]] - 1.0)
+                 + vlat[lv] @ Lrow)
+            cand = jnp.where(vmaskd[lv], t_end[vsrc[lv]] + w, -BIG)
+            ts = jnp.maximum(jnp.max(cand, axis=1), 0.0)   # t_start ≥ 0
+            return cand, ts
+
+        if want_lam:
+            def body(lv, carry):
+                t_end, slope, ssum = carry
+                cand, ts = relax(lv, t_end)
+                # realizing edges, max-total-slope then max-ordinal tie-break
+                # (exactly the scalar LevelPlan.forward rule)
+                hit = vmaskd[lv] & (cand >= ts[:, None] - ATOL)
+                cs = ssum[vsrc[lv]] + vlat_sum[lv]
+                best = jnp.max(jnp.where(hit, cs, -BIG), axis=1)
+                sel = hit & (cs >= best[:, None] - ATOL)
+                chosen = jnp.max(jnp.where(sel, didx, -1), axis=1)   # [Vmax]
+                chc = jnp.maximum(chosen, 0)[:, None]
+                srcv = jnp.take_along_axis(vsrc[lv], chc, axis=1)[:, 0]
+                has = (chosen >= 0)[:, None]
+                sl_new = jnp.where(
+                    has, slope[srcv]
+                    + jnp.take_along_axis(vlat[lv], chc[:, :, None],
+                                          axis=1)[:, 0], 0.0)
+                ss_new = jnp.where(
+                    has[:, 0], ssum[srcv]
+                    + jnp.take_along_axis(vlat_sum[lv], chc, axis=1)[:, 0], 0.0)
+                off = lv * Vmax
+                return (dus(t_end, ts + vcost_lv[lv], (off,)),
+                        dus(slope, sl_new, (off, 0)),
+                        dus(ssum, ss_new, (off,)))
+
+            init = (jnp.zeros(nflat), jnp.zeros((nflat, nc)), jnp.zeros(nflat))
+            t_end, slope, ssum = jax.lax.fori_loop(0, nlv, body, init)
+            T = jnp.max(jnp.where(valid_flat, t_end, -BIG))
+            sink = valid_flat & (t_end >= T - ATOL)
+            # scalar rule: among makespan sinks, the max-ssum one with the
+            # smallest original vertex id
+            mx = jnp.max(jnp.where(sink, ssum, -BIG))
+            top = sink & (ssum >= mx)
+            v = jnp.argmin(jnp.where(top, vert_of_slot, jnp.iinfo(jnp.int32).max))
+            lam = slope[v]
+            return T, lam
+
+        def body(lv, t_end):
+            _, ts = relax(lv, t_end)
+            return dus(t_end, ts + vcost_lv[lv], (lv * Vmax,))
+
+        t_end = jax.lax.fori_loop(0, nlv, body, jnp.zeros(nflat))
+        T = jnp.max(jnp.where(valid_flat, t_end, -BIG))
+        return T, jnp.zeros((vlat.shape[3],))
+
+    batched = jax.vmap(one, in_axes=(None,) * 10 + (0, 0))
+    return jax.jit(batched)
+
+
+def _dense_forward():
+    """Values-only forward with the Pallas (max,+) kernel as inner scatter."""
+    jax = _jax()
+    jnp = jax.numpy
+    from repro.kernels.maxplus.ops import maxplus_matvec
+
+    def fwd(A, esrc, emask, econst, egap, egclass, elat, vcost_lv,
+            valid_flat, Lmat, GSmat):
+        nlv, Emax = esrc.shape
+        Vmax = vcost_lv.shape[1]
+        S = Lmat.shape[0]
+        nflat = valid_flat.shape[0]
+
+        def body(lv, t_end):
+            gse = GSmat[:, egclass[lv]].T                       # [Emax, S]
+            w = (econst[lv][:, None] + egap[lv][:, None] * (gse - 1.0)
+                 + elat[lv] @ Lmat.T)
+            cand = t_end[esrc[lv]] + w
+            cand = jnp.where(emask[lv][:, None], cand, -BIG).astype(jnp.float32)
+            ts = maxplus_matvec(A[lv], cand)                    # [Vmax, S]
+            ts = jnp.maximum(ts, 0.0)
+            return jax.lax.dynamic_update_slice(
+                t_end, ts + vcost_lv[lv][:, None], (lv * Vmax, 0))
+
+        t_end = jax.lax.fori_loop(0, nlv, body,
+                                  jnp.zeros((nflat, S), jnp.float32))
+        return jnp.max(jnp.where(valid_flat[:, None], t_end, -BIG), axis=0)
+
+    return jax.jit(fwd)
+
+
+_FWD_CACHE: dict = {}
+
+
+def _get_forward(kind: str, want_lam: bool = False):
+    key = (kind, want_lam)
+    if key not in _FWD_CACHE:
+        _FWD_CACHE[key] = (_segment_forward(want_lam) if kind == "segment"
+                           else _dense_forward())
+    return _FWD_CACHE[key]
+
+
+class SweepEngine:
+    """Compile once, evaluate thousands of LogGPS scenarios per call.
+
+    >>> eng = SweepEngine(graph, params)
+    >>> res = eng.run(latency_grid(params, np.linspace(0, 100, 1000)))
+    >>> res.T, res.lam, res.rho     # [1000], [1000, nclass], [1000, nclass]
+    """
+
+    MAX_DENSE_BYTES = 256 << 20
+
+    def __init__(self, graph=None, params: Optional[LogGPS] = None,
+                 backend: str = "segment",
+                 compiled: Optional[CompiledPlan] = None,
+                 cache: Optional[SweepCache] = DEFAULT_CACHE):
+        if compiled is None:
+            if graph is None:
+                raise ValueError("need a graph or a CompiledPlan")
+            compiled = compile_plan(graph, params)
+        if backend not in ("segment", "pallas"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self.compiled = compiled
+        self.params = params
+        self.backend = backend
+        self.cache = cache
+        self._dev: dict = {}
+
+    # -- device-array staging (inside enable_x64 so float64 survives) -------
+    def _arrays(self, kind: str):
+        if kind in self._dev:
+            return self._dev[kind]
+        jnp = _jax().numpy
+        c = self.compiled
+        if kind == "segment":
+            arrs = tuple(jnp.asarray(a) for a in (
+                c.vsrc, c.vmaskd, c.vconst, c.vgap, c.vgclass,
+                c.vlat, c.vlat_sum, c.vcost_lv, c.valid_flat, c.vert_of_slot))
+        else:
+            if c.dense_bytes() > self.MAX_DENSE_BYTES:
+                raise ValueError(
+                    f"dense pallas backend needs {c.dense_bytes() >> 20} MiB "
+                    f"of indicator tensors (> {self.MAX_DENSE_BYTES >> 20}); "
+                    "use backend='segment'")
+            arrs = tuple(jnp.asarray(a) for a in (
+                c.dense_indicator(-BIG), c.esrc, c.emask,
+                c.econst.astype(np.float32), c.egap.astype(np.float32),
+                c.egclass, c.elat.astype(np.float32),
+                c.vcost_lv.astype(np.float32), c.valid_flat))
+        self._dev[kind] = arrs
+        return arrs
+
+    def run(self, scenarios: ScenarioBatch, compute_lam: bool = True,
+            backend: Optional[str] = None,
+            use_cache: bool = True) -> SweepResult:
+        """Evaluate every scenario; returns numpy-backed :class:`SweepResult`."""
+        backend = backend or self.backend
+        if backend not in ("segment", "pallas"):
+            raise ValueError(f"unknown backend {backend!r}")
+        if backend == "pallas" and compute_lam:
+            # the (max,+) kernel emits values only — λ needs the argmax
+            # backtrace, so the whole evaluation runs on the segment path
+            # (running both would be strictly slower for the same answer)
+            return self.run(scenarios, compute_lam=True, backend="segment",
+                            use_cache=use_cache)
+        c = self.compiled
+        if scenarios.nclass != c.nclass:
+            raise ValueError(f"scenario batch has {scenarios.nclass} classes, "
+                             f"graph has {c.nclass}")
+        cache = self.cache if use_cache else None
+        key = None
+        if cache is not None:
+            key = result_key(c.content_hash(), scenarios, compute_lam, backend)
+            hit = cache.get(key)
+            if hit is not None:
+                # copy the arrays: callers may mutate results in place
+                return dataclasses.replace(
+                    hit, T=hit.T.copy(),
+                    lam=None if hit.lam is None else hit.lam.copy(),
+                    rho=None if hit.rho is None else hit.rho.copy(),
+                    scenarios=scenarios, from_cache=True)
+
+        S = scenarios.S
+        Sp = _bucket(S, lo=4)
+        Lmat = np.repeat(scenarios.L[-1:], Sp, axis=0)
+        Lmat[:S] = scenarios.L
+        GSmat = np.repeat(scenarios.gscale[-1:], Sp, axis=0)
+        GSmat[:S] = scenarios.gscale
+
+        if backend == "segment":
+            from jax.experimental import enable_x64
+            with enable_x64():
+                jnp = _jax().numpy
+                arrs = self._arrays("segment")
+                fwd = _get_forward("segment", compute_lam)
+                T, lam = fwd(*arrs, jnp.asarray(Lmat), jnp.asarray(GSmat))
+                T = np.asarray(T)[:S]
+                lam = np.asarray(lam)[:S]
+        elif backend == "pallas":
+            jnp = _jax().numpy
+            arrs = self._arrays("pallas")
+            fwd = _get_forward("pallas")
+            T = np.asarray(fwd(*arrs, jnp.asarray(Lmat, dtype=jnp.float32),
+                               jnp.asarray(GSmat, dtype=jnp.float32)))
+            T = T.astype(np.float64)[:S]
+            lam = None
+
+        if compute_lam:
+            rho = np.where(T[:, None] > 0,
+                           scenarios.L * lam / np.maximum(T[:, None], 1e-300),
+                           0.0)
+        else:
+            lam, rho = None, None
+        res = SweepResult(T=T, lam=lam, rho=rho, scenarios=scenarios,
+                          backend=backend)
+        if cache is not None:
+            cache.put(key, res)
+        return res
+
+    def latency_curve(self, deltas: Sequence[float], cls: int = 0,
+                      params: Optional[LogGPS] = None,
+                      compute_lam: bool = True) -> SweepResult:
+        p = params or self.params
+        if p is None:
+            raise ValueError("engine has no params; pass params=")
+        return self.run(latency_grid(p, deltas, cls=cls),
+                        compute_lam=compute_lam)
+
+
+# -- lockstep-batched bisections (the dag.py loops, one engine call/round) ----
+
+def _probe(eng: SweepEngine, params: LogGPS, Lvals, cls: int):
+    batch = latency_grid(params, np.asarray(Lvals, dtype=np.float64),
+                         cls=cls, absolute=True)
+    res = eng.run(batch, compute_lam=True, use_cache=False)
+    return res.T, res.lam[:, cls]
+
+
+def tolerance_batched(eng: SweepEngine, params: LogGPS,
+                      degradations: Sequence[float], cls: int = 0,
+                      L_hi: float = 1e7, tol: float = 1e-6,
+                      max_iter: int = 200) -> dict:
+    """All of ``dag.tolerance``'s bisections in lockstep: each round probes
+    every still-active degradation level in one batched forward."""
+    degr = np.asarray(list(degradations), dtype=np.float64)
+    S = degr.shape[0]
+    L0 = float(params.L[cls])
+    T0 = _probe(eng, params, [L0], cls)[0][0]
+    budgets = (1.0 + degr) * T0
+    Thi = _probe(eng, params, [L_hi], cls)[0][0]
+
+    out = np.empty(S)
+    done = Thi <= budgets
+    out[done] = np.inf
+    a = np.full(S, L0)
+    b = np.full(S, L_hi)
+    for _ in range(max_iter):
+        act = np.nonzero(~done)[0]
+        if act.size == 0:
+            break
+        Tb, lb = _probe(eng, params, b[act], cls)
+        x = np.where(lb > 0, b[act] + (budgets[act] - Tb) / np.where(lb > 0, lb, 1.0),
+                     (a[act] + b[act]) / 2)
+        x = np.clip(x, a[act], b[act])
+        Tx, _ = _probe(eng, params, x, cls)
+        conv = np.abs(Tx - budgets[act]) <= tol * np.maximum(1.0, budgets[act])
+        out[act[conv]] = x[conv] - L0
+        done[act[conv]] = True
+        rest = act[~conv]
+        hi = Tx[~conv] > budgets[rest]
+        b[rest[hi]] = x[~conv][hi]
+        a[rest[~hi]] = x[~conv][~hi]
+        narrow = ~done & (b - a < tol)
+        out[narrow] = a[narrow] - L0
+        done |= narrow
+    out[~done] = a[~done] - L0
+    return {float(p): float(v) for p, v in zip(degr, out)}
+
+
+def breakpoints_batched(eng: SweepEngine, params: LogGPS, L_min: float,
+                        L_max: float, cls: int = 0, tol: float = 1e-9,
+                        max_bp: int = 10_000, max_depth: int = 80) -> list:
+    """``dag.breakpoints`` with the recursion flattened level-by-level: all
+    frontier intervals' probe points are evaluated in one batched call."""
+    (ya, yb), (sa, sb) = _probe(eng, params, [L_min, L_max], cls)
+    frontier = [(L_min, float(ya), float(sa), L_max, float(yb), float(sb), 0)]
+    out: list = []
+    while frontier and len(out) < max_bp:
+        work = [iv for iv in frontier
+                if abs(iv[2] - iv[5]) > tol and iv[6] <= max_depth]
+        if not work:
+            break
+        xs = []
+        for (A, yA, sA, B, yB, sB, _) in work:
+            x = (yB - sB * B - (yA - sA * A)) / (sA - sB)
+            xs.append(min(max(x, A + tol), B - tol))
+        ys, ss = _probe(eng, params, xs, cls)
+        frontier = []
+        for (A, yA, sA, B, yB, sB, d), x, yx, sx in zip(work, xs, ys, ss):
+            if len(out) >= max_bp:
+                break
+            line = yA + sA * (x - A)
+            if yx <= line + max(1e-7, 1e-9 * abs(line)):
+                out.append(float(x))
+            else:
+                frontier.append((A, yA, sA, float(x), float(yx), float(sx), d + 1))
+                frontier.append((float(x), float(yx), float(sx), B, yB, sB, d + 1))
+    return sorted(out)

@@ -1,0 +1,185 @@
+"""Scenario grids: the parameter axes a sweep fans out over.
+
+A :class:`ScenarioBatch` is the engine's unit of work — S rows of
+(L per class, bandwidth scale γ per class).  Grid builders produce batches:
+
+    latency_grid     — ΔL sweep on one class (Fig 9 / Algorithm 2 probes)
+    bandwidth_grid   — γ sweep on one class (G_eff = γ·G_build)
+    cartesian_grid   — cartesian product of per-class ΔL and γ axes
+
+Scenario axes that change the *graph* (collective algorithm, topology) can't
+ride the tensor batch — those are stamped out as :class:`GraphVariant`s
+(reusing ``core.collectives`` / ``core.topology``) and each variant gets its
+own compiled plan; :func:`sweep_variants` runs one batched call per variant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core import topology as topo_mod
+from repro.core.graph import ExecutionGraph
+from repro.core.loggps import LogGPS
+
+
+@dataclasses.dataclass
+class ScenarioBatch:
+    """S scenarios: absolute per-class latencies and bandwidth scales."""
+
+    L: np.ndarray                      # [S, nclass] float64, absolute µs
+    gscale: np.ndarray                 # [S, nclass] float64, γ (1 = build G)
+    meta: Optional[list] = None        # per-scenario dicts (labels, axes)
+
+    def __post_init__(self):
+        self.L = np.atleast_2d(np.asarray(self.L, dtype=np.float64))
+        self.gscale = np.atleast_2d(np.asarray(self.gscale, dtype=np.float64))
+        assert self.L.shape == self.gscale.shape
+
+    @property
+    def S(self) -> int:
+        return int(self.L.shape[0])
+
+    @property
+    def nclass(self) -> int:
+        return int(self.L.shape[1])
+
+    def concat(self, other: "ScenarioBatch") -> "ScenarioBatch":
+        meta = None
+        if self.meta is not None and other.meta is not None:
+            meta = list(self.meta) + list(other.meta)
+        return ScenarioBatch(L=np.concatenate([self.L, other.L]),
+                             gscale=np.concatenate([self.gscale, other.gscale]),
+                             meta=meta)
+
+
+def base_batch(params: LogGPS) -> ScenarioBatch:
+    nc = params.nclass
+    return ScenarioBatch(L=np.asarray([params.L]), gscale=np.ones((1, nc)),
+                         meta=[{"delta": 0.0}])
+
+
+def latency_grid(params: LogGPS, deltas: Sequence[float], cls: int = 0,
+                 absolute: bool = False) -> ScenarioBatch:
+    """One scenario per ΔL (or absolute L with ``absolute=True``) on ``cls``."""
+    d = np.asarray(deltas, dtype=np.float64).ravel()
+    S, nc = d.shape[0], params.nclass
+    L = np.tile(np.asarray(params.L, dtype=np.float64), (S, 1))
+    L[:, cls] = d if absolute else L[:, cls] + d
+    return ScenarioBatch(L=L, gscale=np.ones((S, nc)),
+                         meta=[{"cls": cls, "L": float(x)} for x in L[:, cls]])
+
+
+def bandwidth_grid(params: LogGPS, gscales: Sequence[float],
+                   cls: int = 0) -> ScenarioBatch:
+    """One scenario per bandwidth scale γ on ``cls`` (γ>1 = slower links)."""
+    gs = np.asarray(gscales, dtype=np.float64).ravel()
+    S, nc = gs.shape[0], params.nclass
+    L = np.tile(np.asarray(params.L, dtype=np.float64), (S, 1))
+    G = np.ones((S, nc))
+    G[:, cls] = gs
+    return ScenarioBatch(L=L, gscale=G,
+                         meta=[{"cls": cls, "gscale": float(x)} for x in gs])
+
+
+def cartesian_grid(params: LogGPS,
+                   lat_deltas: Optional[dict] = None,
+                   gscales: Optional[dict] = None) -> ScenarioBatch:
+    """Cartesian product of per-class ΔL axes × per-class γ axes.
+
+    ``lat_deltas`` / ``gscales`` map class id → sequence of values; omitted
+    classes stay at the base point.  E.g. a 2-class TPU sweep::
+
+        cartesian_grid(p, lat_deltas={0: ici_dl, 1: dcn_dl}, gscales={1: gs})
+    """
+    nc = params.nclass
+    axes, keys = [], []
+    for c, vals in sorted((lat_deltas or {}).items()):
+        axes.append(np.asarray(vals, dtype=np.float64))
+        keys.append(("L", c))
+    for c, vals in sorted((gscales or {}).items()):
+        axes.append(np.asarray(vals, dtype=np.float64))
+        keys.append(("G", c))
+    if not axes:
+        return base_batch(params)
+    rows_L, rows_G, meta = [], [], []
+    baseL = np.asarray(params.L, dtype=np.float64)
+    for combo in itertools.product(*axes):
+        L = baseL.copy()
+        G = np.ones(nc)
+        m = {}
+        for (kind, c), v in zip(keys, combo):
+            if kind == "L":
+                L[c] = L[c] + v
+                m[f"dL[{c}]"] = float(v)
+            else:
+                G[c] = v
+                m[f"gscale[{c}]"] = float(v)
+        rows_L.append(L)
+        rows_G.append(G)
+        meta.append(m)
+    return ScenarioBatch(L=np.stack(rows_L), gscale=np.stack(rows_G), meta=meta)
+
+
+# -- graph-changing axes: stamped variants ------------------------------------
+
+@dataclasses.dataclass
+class GraphVariant:
+    """A scenario axis that required rebuilding the graph itself."""
+
+    name: str
+    graph: ExecutionGraph
+    params: LogGPS
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+def collective_variants(factory: Callable[[str], ExecutionGraph],
+                        algos: Sequence[str], params: LogGPS) -> list:
+    """Stamp one graph per collective algorithm (the Fig 10 axis).
+
+    ``factory(algo)`` builds the workload with that allreduce/collective
+    implementation, e.g. ``lambda a: synth.allreduce_chain(16, 8, algo=a)``.
+    """
+    return [GraphVariant(name=f"algo={a}", graph=factory(a), params=params,
+                         meta={"algo": a}) for a in algos]
+
+
+def topology_variants(factory: Callable[[topo_mod.Topology, LogGPS],
+                                        ExecutionGraph],
+                      topos: Sequence[topo_mod.Topology],
+                      l_wire_us: float = 0.274,
+                      d_switch_us: float = 0.108) -> list:
+    """Stamp one wire-class graph per topology (the Fig 11 axis).
+
+    ``factory(topo, params)`` builds the workload with messages expanded via
+    :class:`repro.core.topology.TopologyStamper` under ``params`` (whose
+    latency classes are the topology's wire classes).
+    """
+    out = []
+    for t in topos:
+        p = topo_mod.topology_params(t, l_wire_us=l_wire_us,
+                                     d_switch_us=d_switch_us)
+        out.append(GraphVariant(name=t.name, graph=factory(t, p), params=p,
+                                meta={"topology": t.name}))
+    return out
+
+
+def sweep_variants(variants: Sequence[GraphVariant],
+                   batch_of: Callable[[GraphVariant], ScenarioBatch],
+                   backend: str = "segment", compute_lam: bool = True) -> dict:
+    """Run the batched engine once per graph variant → {name: SweepResult}.
+
+    ``batch_of(variant)`` builds the tensor-batchable sub-grid for that
+    variant (classes can differ across topologies, so the batch is per
+    variant).
+    """
+    from .engine import SweepEngine  # local import to avoid cycle
+
+    out = {}
+    for v in variants:
+        eng = SweepEngine(v.graph, v.params, backend=backend)
+        out[v.name] = eng.run(batch_of(v), compute_lam=compute_lam)
+    return out

@@ -110,3 +110,21 @@ def test_rho_fraction(params):
     rho = s.rho()[0]
     assert 0.0 < rho < 1.0
     assert rho == pytest.approx(params.L[0] * s.lam[0] / s.T)
+
+
+def test_tolerance_lp_unbounded_returns_inf(params):
+    """A graph with no latency-bearing edges tolerates any latency: the
+    maximize-ℓ LP is unbounded and tolerance_lp must return math.inf
+    explicitly (regression: it used to fall through to inf − L₀ arithmetic)."""
+    import math
+    from repro.core.graph import GraphBuilder
+
+    b = GraphBuilder(2, 1)
+    b.add_calc(0, 10.0)
+    b.add_calc(0, 5.0)
+    b.add_calc(1, 7.0)
+    g = b.finalize()
+    t = lp.tolerance_lp(g, params, 0.05)
+    assert isinstance(t, float) and math.isinf(t) and t > 0
+    # the DAG engine agrees
+    assert dag.tolerance(g, params, 0.05) == np.inf

@@ -1,0 +1,237 @@
+"""Batched scenario-sweep engine (repro.sweep) vs the scalar DAG engine.
+
+The headline invariant: for every scenario point, the jit+vmap engine's
+(T, λ, ρ) must equal ``dag.LevelPlan.forward`` to 1e-6 (they share the
+argmax tie-break rules, so in practice they agree to float64 round-off),
+and λ must match the explicit LP's reduced costs (HiGHS lower-bound
+marginals).
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+
+from repro.core import dag, lp, sensitivity, synth
+from repro.core.loggps import LogGPS, cluster_params, tpu_pod_params
+from repro import sweep
+from repro.sweep import cache as sweep_cache
+from repro.sweep import engine as sweep_engine
+
+
+@pytest.fixture(scope="module")
+def params():
+    return cluster_params(L_us=3.0, o_us=5.0)
+
+
+def _assert_matches_scalar(g, p, batch, res, atol=1e-6):
+    plan = dag.LevelPlan(g)
+    for i in range(batch.S):
+        s = plan.forward(p.replace(L=tuple(batch.L[i])))
+        assert res.T[i] == pytest.approx(s.T, abs=atol, rel=1e-9), i
+        np.testing.assert_allclose(res.lam[i], s.lam, atol=atol)
+        np.testing.assert_allclose(res.rho[i], s.rho(), atol=atol)
+
+
+def test_batched_matches_scalar_100_random_graphs():
+    """≥100 random synth graphs × scenario points, T/λ/ρ within 1e-6."""
+    rng = np.random.default_rng(7)
+    combos = 0
+    for i in range(25):
+        p = LogGPS(L=(float(rng.uniform(0.5, 8.0)),),
+                   G=(float(rng.uniform(1e-6, 1e-4)),),
+                   o=float(rng.uniform(0.0, 4.0)), S=1e9)
+        g = synth.random_dag(rng, nranks=int(rng.integers(2, 5)), nops=40,
+                             p_msg=float(rng.uniform(0.2, 0.6)), params=p)
+        eng = sweep.SweepEngine(g, p)
+        deltas = np.sort(rng.uniform(0.0, 60.0, size=4))
+        res = eng.run(sweep.latency_grid(p, deltas))
+        _assert_matches_scalar(g, p, res.scenarios, res)
+        combos += res.S
+    assert combos >= 100
+
+
+@pytest.mark.parametrize("name,builder", [
+    ("stencil2d", lambda p: synth.stencil2d(3, 3, 4, params=p)),
+    ("cg", lambda p: synth.cg_like(2, 2, 3, params=p)),
+    ("sweep2d", lambda p: synth.sweep2d(3, 3, 2, params=p)),
+    ("allreduce", lambda p: synth.allreduce_chain(8, 3, params=p)),
+])
+def test_batched_matches_scalar_workloads(name, builder, params):
+    g = builder(params)
+    eng = sweep.SweepEngine(g, params)
+    res = eng.run(sweep.latency_grid(params, np.linspace(0.0, 80.0, 9)))
+    _assert_matches_scalar(g, params, res.scenarios, res)
+
+
+def test_two_class_sweep_matches_scalar():
+    p = tpu_pod_params(pod_size=2)
+    g = synth.stencil2d(2, 2, 3, params=p)
+    eng = sweep.SweepEngine(g, p)
+    res = eng.run(sweep.latency_grid(p, np.linspace(0.0, 30.0, 6), cls=1))
+    _assert_matches_scalar(g, p, res.scenarios, res)
+
+
+def test_lambda_matches_highs_marginals(params):
+    """λ from the batched backtrace ≡ reduced costs of ℓ (lower-bound
+    marginals) from the explicit HiGHS LP."""
+    g = synth.stencil2d(3, 3, 3, params=params)
+    eng = sweep.SweepEngine(g, params)
+    for dL in (0.0, 10.0):
+        p = params.with_delta(dL)
+        res = eng.run(sweep.base_batch(p))
+        sol = lp.solve_highs(lp.build_lp(g, p))
+        assert res.T[0] == pytest.approx(sol.T, rel=1e-8)
+        assert res.lam[0, 0] == pytest.approx(sol.lam[0], abs=1e-6)
+
+
+def test_bandwidth_scenarios_match_rebuilt_graph(params):
+    """γ·G scenarios ≡ rebuilding the graph with scaled G (exact gap split)."""
+    g = synth.cg_like(2, 2, 3, params=params)
+    eng = sweep.SweepEngine(g, params)
+    res = eng.run(sweep.bandwidth_grid(params, [1.0, 2.0, 4.0]))
+    for i, gs in enumerate([1.0, 2.0, 4.0]):
+        p2 = params.replace(G=tuple(gs * x for x in params.G))
+        g2 = synth.cg_like(2, 2, 3, params=p2)
+        ref = dag.evaluate(g2, p2.replace(L=params.L)).T
+        assert res.T[i] == pytest.approx(ref, rel=1e-12), gs
+
+
+def test_pallas_backend_matches_segment(params):
+    g = synth.cg_like(2, 2, 3, params=params)
+    eng = sweep.SweepEngine(g, params)
+    batch = sweep.latency_grid(params, np.linspace(0.0, 40.0, 5))
+    seg = eng.run(batch)
+    pal = eng.run(batch, backend="pallas", compute_lam=False)
+    # float32 accumulators (TPU VPU layout) → relative tolerance
+    np.testing.assert_allclose(pal.T, seg.T, rtol=1e-5)
+    # λ needs the backtrace the kernel doesn't emit: the whole evaluation
+    # delegates to the segment path (exact, no double work)
+    lam_req = eng.run(batch, backend="pallas", compute_lam=True)
+    assert lam_req.backend == "segment"
+    np.testing.assert_array_equal(lam_req.T, seg.T)
+    with pytest.raises(ValueError, match="backend"):
+        eng.run(batch, backend="cuda")
+
+
+def test_cartesian_grid_shapes(params):
+    batch = sweep.cartesian_grid(params, lat_deltas={0: [0.0, 5.0, 10.0]},
+                                 gscales={0: [1.0, 2.0]})
+    assert batch.S == 6
+    assert batch.meta[0] == {"dL[0]": 0.0, "gscale[0]": 1.0}
+    g = synth.stencil2d(2, 2, 2, params=params)
+    res = sweep.SweepEngine(g, params).run(batch)
+    assert res.T.shape == (6,)
+    # T monotone in both ΔL and γ
+    assert res.T[1] >= res.T[0] and res.T[5] >= res.T[4]
+
+
+def test_collective_variants(params):
+    variants = sweep.collective_variants(
+        lambda a: synth.allreduce_chain(8, 2, params=params, algo=a),
+        ["ring", "recursive_doubling"], params)
+    out = sweep.sweep_variants(
+        variants, lambda v: sweep.latency_grid(params, [0.0, 20.0]))
+    # recursive doubling has fewer latency-critical rounds: λ smaller, and
+    # under +20µs latency it beats ring (the Fig 10 ordering)
+    ring, rd = out["algo=ring"], out["algo=recursive_doubling"]
+    assert rd.lam[0, 0] < ring.lam[0, 0]
+    assert rd.T[1] < ring.T[1]
+
+
+def test_tolerance_batched_matches_scalar(params):
+    g = synth.stencil2d(3, 3, 4, params=params)
+    degr = (0.01, 0.02, 0.05, 0.1)
+    eng = sweep.SweepEngine(g, params)
+    batched = sweep_engine.tolerance_batched(eng, params, degr)
+    for p_ in degr:
+        ref = dag.tolerance(g, params, p_)
+        assert batched[p_] == pytest.approx(ref, rel=1e-9, abs=1e-9)
+
+
+def test_breakpoints_batched_matches_scalar(params):
+    g = synth.sweep2d(3, 3, 3, params=params)
+    eng = sweep.SweepEngine(g, params)
+    batched = sweep_engine.breakpoints_batched(eng, params, 0.5, 500.0)
+    ref = dag.breakpoints(g, params, 0.5, 500.0)
+    assert len(batched) == len(ref)
+    np.testing.assert_allclose(batched, ref, rtol=1e-6)
+
+
+def test_sensitivity_dispatch_equivalence(params):
+    """sensitivity.* auto-dispatch returns the scalar path's numbers."""
+    g = synth.cg_like(2, 2, 3, params=params)
+    deltas = np.linspace(0.0, 100.0, 10)
+    auto = sensitivity.latency_curve(g, params, deltas)
+    scalar = sensitivity.latency_curve(g, params, deltas, engine="scalar")
+    np.testing.assert_allclose(auto.T, scalar.T, atol=1e-9)
+    np.testing.assert_allclose(auto.lam, scalar.lam, atol=1e-9)
+    np.testing.assert_allclose(auto.rho, scalar.rho, atol=1e-9)
+
+    degr = (0.01, 0.02, 0.05, 0.1)
+    t_auto = sensitivity.latency_tolerance(g, params, degr)
+    t_scalar = sensitivity.latency_tolerance(g, params, degr, engine="scalar")
+    for k in degr:
+        assert t_auto[k] == pytest.approx(t_scalar[k], rel=1e-9)
+
+    lcs_sweep = sensitivity.critical_latencies(g, params, 0.5, 300.0,
+                                               engine="sweep")
+    lcs_scalar = sensitivity.critical_latencies(g, params, 0.5, 300.0,
+                                                engine="scalar")
+    np.testing.assert_allclose(lcs_sweep, lcs_scalar, rtol=1e-6)
+
+
+def test_result_cache(params):
+    g = synth.stencil2d(2, 2, 2, params=params)
+    cache = sweep_cache.SweepCache(capacity=8)
+    eng = sweep.SweepEngine(g, params, cache=cache)
+    batch = sweep.latency_grid(params, [0.0, 5.0, 10.0])
+    r1 = eng.run(batch)
+    assert not r1.from_cache and cache.stats.hits == 0
+    r2 = eng.run(batch)
+    assert r2.from_cache and cache.stats.hits == 1
+    np.testing.assert_array_equal(r1.T, r2.T)
+    # hits hand out copies: caller mutation must not poison the cache
+    r2.T[:] = -1.0
+    np.testing.assert_array_equal(eng.run(batch).T, r1.T)
+    # structurally identical graph, fresh engine → same content hash → hit
+    g2 = synth.stencil2d(2, 2, 2, params=params)
+    eng2 = sweep.SweepEngine(g2, params, cache=cache)
+    r3 = eng2.run(batch)
+    assert r3.from_cache
+    # different scenarios miss
+    r4 = eng.run(sweep.latency_grid(params, [0.0, 7.0]))
+    assert not r4.from_cache
+
+
+def test_compiled_plan_bucketing(params):
+    """Graphs of similar size share one XLA program (shape_key equality)."""
+    g1 = synth.stencil2d(3, 3, 4, params=params, jitter=0.1, seed=1)
+    g2 = synth.stencil2d(3, 3, 4, params=params, jitter=0.1, seed=2)
+    c1 = sweep.compile_plan(g1, params)
+    c2 = sweep.compile_plan(g2, params)
+    assert c1.shape_key == c2.shape_key
+    assert c1.content_hash() != c2.content_hash()  # costs differ
+    assert c1.padding_ratio < 64  # sanity: padding stays bounded
+
+
+def test_engine_rejects_mismatched_classes(params):
+    g = synth.stencil2d(2, 2, 2, params=params)
+    eng = sweep.SweepEngine(g, params)
+    two_cls = tpu_pod_params(pod_size=2)
+    with pytest.raises(ValueError, match="classes"):
+        eng.run(sweep.latency_grid(two_cls, [0.0, 1.0]))
+    with pytest.raises(ValueError, match="engine"):
+        sensitivity.latency_curve(g, params, [0.0, 1.0], engine="batched")
+
+
+def test_sensitivity_memoizes_engine(params):
+    """Repeated dispatched calls reuse one compiled engine per graph."""
+    g = synth.stencil2d(2, 2, 2, params=params)
+    deltas = np.linspace(0.0, 10.0, 10)
+    sensitivity.latency_curve(g, params, deltas)
+    memo = getattr(g, "_sweep_engines")
+    assert len(memo) == 1
+    eng = next(iter(memo.values()))
+    sensitivity.latency_curve(g, params, deltas)
+    assert next(iter(memo.values())) is eng
