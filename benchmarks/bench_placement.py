@@ -48,11 +48,20 @@ def run(out):
     s_vol, _ = placement.evaluate_mapping(g, zero, phi, pi_vol, plan)
     results["volume_greedy"] = s_vol.T
 
+    t_scalar, (pi_ref, hist_ref) = timeit(
+        lambda: placement.place(g, phi, params=zero, pi0=pi_block.copy(),
+                                engine="scalar"), repeats=1)
+    s_ref, _ = placement.evaluate_mapping(g, zero, phi, pi_ref, plan)
+
+    # batched mode: vectorized all-pairs gains + one packed MultiPlan run
+    # per greedy step — must land on the reference loop's final mapping
     t_alg3, (pi3, hist) = timeit(
         lambda: placement.place(g, phi, params=zero,
                                 pi0=pi_block.copy()), repeats=1)
     s3, _ = placement.evaluate_mapping(g, zero, phi, pi3, plan)
     results["llamp_alg3"] = s3.T
+    assert np.array_equal(pi3, pi_ref), "batched ≠ scalar reference mapping"
+    assert s3.T == s_ref.T
 
     for name, T in results.items():
         out(csv_line(f"placement.{name}",
@@ -61,3 +70,19 @@ def run(out):
     assert results["llamp_alg3"] <= results["block"] + 1e-9
     out(csv_line("placement.iters", 0.0,
                  f"alg3_steps={len(hist)};final_T={results['llamp_alg3']:.1f}us"))
+    out(csv_line("placement.batched_vs_scalar", t_alg3 * 1e6,
+                 f"scalar_us={t_scalar * 1e6:.0f};"
+                 f"speedup={t_scalar / max(t_alg3, 1e-12):.2f}x;"
+                 f"same_mapping=True"))
+
+    # grid-robust placement: swap scoring aggregated over a ΔL grid, top-3
+    # candidate mappings verified in one packed MultiPlan call per step
+    pts = placement.latency_points(zero, [0.0, 5.0, 10.0])
+    t_grid, (pi_g, hist_g) = timeit(
+        lambda: placement.place(g, phi, params=zero, pi0=pi_block.copy(),
+                                scenarios=pts, topk=3), repeats=1)
+    s_g, _ = placement.evaluate_mapping(g, zero, phi, pi_g, plan)
+    assert s_g.T <= results["block"] + 1e-9
+    out(csv_line("placement.grid_robust", t_grid * 1e6,
+                 f"points={len(pts)};topk=3;T={s_g.T:.1f}us;"
+                 f"steps={len(hist_g)}"))

@@ -1,13 +1,32 @@
 """Batched scenario-sweep engine vs looping the scalar LevelPlan.
 
-The acceptance bar for the sweep subsystem: a 1,000-scenario LogGPS grid
-must evaluate ≥10× faster per scenario than calling
-``dag.LevelPlan.forward`` in a Python loop, with identical results (1e-6).
+Two acceptance bars, measured here:
+
+* single graph: a 1,000-scenario LogGPS grid must evaluate ≥10× faster per
+  scenario than calling ``dag.LevelPlan.forward`` in a Python loop, with
+  identical results (1e-6).
+* variant study (multi-graph packing): a 4-variant × 250-scenario collective
+  study — four graphs in four *different* shape buckets — must run as one
+  packed :class:`~repro.sweep.MultiPlan` call and beat the per-variant
+  jit loop by ≥3× cold wall-clock.  The per-variant loop pays one XLA
+  compile per distinct shape; the packed study pays one compile for the
+  common envelope.  Results must agree bit-for-bit.
+
 Also reported: the values-only fast path, the Pallas (max,+) backend on a
 small grid, and the content-hash cache hit.
+
+CLI (used by CI)::
+
+    PYTHONPATH=src python -m benchmarks.bench_sweep --smoke
+
+``--smoke`` shrinks the grids so the whole file runs in seconds and asserts
+only correctness invariants (exactness, call counts) — never wall-clock
+ratios, which CI machines can't promise.
 """
 
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
@@ -18,13 +37,15 @@ from repro.core.loggps import cluster_params
 from .common import csv_line, timeit
 
 N_SCENARIOS = 1_000
+STUDY_ALGOS = ("ring", "bidir_ring", "recursive_doubling", "tree")
+STUDY_SCENARIOS = 250
 
 
-def run(out):
+def single_graph(out, n_scenarios=N_SCENARIOS):
     p = cluster_params(L_us=3.0, o_us=5.0)
     g = synth.stencil2d(4, 4, 20, params=p)
     ev = g.num_events
-    deltas = np.linspace(0.0, 100.0, N_SCENARIOS)
+    deltas = np.linspace(0.0, 100.0, n_scenarios)
     grid = sweep.latency_grid(p, deltas)
 
     eng = sweep.SweepEngine(g, p, cache=None)
@@ -42,28 +63,112 @@ def run(out):
     err = float(np.max(np.abs(res.T - Ts_scalar)))
     assert err < 1e-6, f"batched sweep diverged from scalar engine: {err}"
     speedup = t_loop / t_batch
-    out(csv_line(f"sweep.batched.{N_SCENARIOS}", t_batch * 1e6,
+    out(csv_line(f"sweep.batched.{n_scenarios}", t_batch * 1e6,
                  f"events={ev};speedup_vs_loop={speedup:.1f}x;max_err={err:.1e}"))
-    out(csv_line(f"sweep.values_only.{N_SCENARIOS}", t_vals * 1e6,
-                 f"events={ev};us_per_scenario={t_vals * 1e6 / N_SCENARIOS:.2f}"))
-    out(csv_line(f"sweep.scalar_loop.{N_SCENARIOS}", t_loop * 1e6,
-                 f"events={ev};us_per_scenario={t_loop * 1e6 / N_SCENARIOS:.2f}"))
+    out(csv_line(f"sweep.values_only.{n_scenarios}", t_vals * 1e6,
+                 f"events={ev};us_per_scenario={t_vals * 1e6 / n_scenarios:.2f}"))
+    out(csv_line(f"sweep.scalar_loop.{n_scenarios}", t_loop * 1e6,
+                 f"events={ev};us_per_scenario={t_loop * 1e6 / n_scenarios:.2f}"))
 
     # cached re-run: content-hash hit, no forward pass
     eng_c = sweep.SweepEngine(g, p, cache=sweep.SweepCache())
     eng_c.run(grid)
     t_hit, res_hit = timeit(lambda: eng_c.run(grid), repeats=3, warmup=0)
     assert res_hit.from_cache
-    out(csv_line("sweep.cache_hit", t_hit * 1e6, f"scenarios={N_SCENARIOS}"))
+    out(csv_line("sweep.cache_hit", t_hit * 1e6, f"scenarios={n_scenarios}"))
 
+
+def variant_study(out, n_scenarios=STUDY_SCENARIOS):
+    """4-variant × n-scenario collective study: packed MultiPlan vs the
+    per-variant jit loop, cold wall-clock (compiles included on both sides).
+
+    The four allreduce expansions land in four different shape buckets
+    (ring/bidir/recursive-doubling/tree have very different round counts),
+    so the per-variant loop compiles four XLA programs where the packed
+    study compiles one.  Measured both ways: values-only (what a ranking
+    study — ``AnalysisService.rank`` — actually runs) and the full T/λ/ρ
+    study.  Run this module standalone for honest cold numbers; inside
+    ``benchmarks.run`` earlier modules may have warmed unrelated programs
+    but never these shapes.
+    """
+    p = cluster_params(L_us=3.0, o_us=5.0)
+    variants = sweep.collective_variants(
+        lambda a: synth.allreduce_chain(8, 1, params=p, algo=a),
+        list(STUDY_ALGOS), p)
+    deltas = np.linspace(0.0, 100.0, n_scenarios)
+    batch_of = lambda v: sweep.latency_grid(p, deltas)  # noqa: E731
+
+    for tag, lam in (("values", False), ("lam", True)):
+        # cache=None: timings and call-count asserts must measure compiled
+        # dispatches, not content-hash hits from an earlier run
+        stats_pv, stats_b = {}, {}
+        t0 = time.perf_counter()
+        pv = sweep.sweep_variants(variants, batch_of, batched=False,
+                                  compute_lam=lam, stats=stats_pv, cache=None)
+        t_pv = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        bat = sweep.sweep_variants(variants, batch_of, batched=True,
+                                   compute_lam=lam, stats=stats_b, cache=None)
+        t_b = time.perf_counter() - t0
+
+        # one compiled call per shape bucket, not one per variant
+        assert stats_pv["calls"] == len(variants)
+        assert stats_b["calls"] == stats_b["groups"] < len(variants), stats_b
+        for name in pv:                       # packed ≡ solo, bit for bit
+            assert np.array_equal(pv[name].T, bat[name].T), name
+            if lam:
+                assert np.array_equal(pv[name].lam, bat[name].lam), name
+
+        speedup = t_pv / t_b
+        out(csv_line(
+            f"sweep.variant_study.{tag}.batched", t_b * 1e6,
+            f"variants={len(variants)};scenarios={n_scenarios};"
+            f"calls={stats_b['calls']};speedup_vs_pervariant={speedup:.1f}x"))
+        out(csv_line(
+            f"sweep.variant_study.{tag}.pervariant", t_pv * 1e6,
+            f"calls={stats_pv['calls']};compiles_per_shape=1"))
+
+
+def pallas_backend(out, n_scenarios=64):
     # pallas (max,+) inner-scatter backend, small graph + grid (interpret
     # mode off-TPU emulates the kernel, so keep this a smoke-scale number)
+    p = cluster_params(L_us=3.0, o_us=5.0)
     g_small = synth.cg_like(2, 2, 3, params=p)
     eng_p = sweep.SweepEngine(g_small, p, cache=None)
-    grid_small = sweep.latency_grid(p, np.linspace(0.0, 50.0, 64))
+    grid_small = sweep.latency_grid(p, np.linspace(0.0, 50.0, n_scenarios))
     seg = eng_p.run(grid_small, compute_lam=False)
     t_pal, pal = timeit(lambda: eng_p.run(grid_small, backend="pallas",
                                           compute_lam=False),
                         repeats=2, warmup=1)
     rel = float(np.max(np.abs(pal.T - seg.T) / seg.T))
-    out(csv_line("sweep.pallas.64", t_pal * 1e6, f"rel_vs_segment={rel:.1e}"))
+    # float32 accumulators (TPU VPU layout) → relative tolerance
+    assert rel < 1e-5, f"pallas backend diverged from segment: {rel}"
+    out(csv_line(f"sweep.pallas.{n_scenarios}", t_pal * 1e6,
+                 f"rel_vs_segment={rel:.1e}"))
+
+
+def run(out, smoke: bool = False):
+    if smoke:
+        single_graph(out, n_scenarios=64)
+        variant_study(out, n_scenarios=50)
+        pallas_backend(out, n_scenarios=16)
+        return
+    single_graph(out)
+    variant_study(out)
+    pallas_backend(out)
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="sweep-engine benchmarks (single-graph grid + packed "
+                    "variant study)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grids, correctness asserts only (CI)")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    run(print, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

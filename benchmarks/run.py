@@ -6,9 +6,17 @@ Prints ``name,us_per_call,derived`` CSV lines:
   bench_tolerance      — Fig 1            (per-arch tolerance zones)
   bench_collectives    — Fig 10           (ring vs recursive doubling)
   bench_topology       — Fig 11           (fat-tree/dragonfly/torus wires)
-  bench_placement      — Fig 20           (Algorithm 3 rank placement)
+  bench_placement      — Fig 20           (Algorithm 3 rank placement:
+                                           scalar reference vs the batched
+                                           MultiPlan-scored loop, plus the
+                                           grid-robust scenarios/topk mode)
   bench_sweep          — repro.sweep      (1k-scenario batched grid vs
-                                           scalar LevelPlan loop; cache)
+                                           scalar LevelPlan loop; 4-variant
+                                           × 250-scenario packed study vs
+                                           the per-variant jit loop; cache)
+
+``python -m benchmarks.bench_sweep --smoke`` runs the sweep module alone
+with tiny grids (the CI smoke step).
 """
 
 from __future__ import annotations

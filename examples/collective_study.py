@@ -1,35 +1,61 @@
 """Collective-algorithm case study (paper §IV-1 / Fig 10) on jamba-398b.
 
-Swaps the allreduce expansion between recursive doubling and ring for the
-full training step of an assigned architecture and reports λ_L, ρ_L and
-the 5% tolerance — the decision a deployment engineer actually faces.
+Swaps the allreduce expansion between recursive doubling, ring, tree and
+bidirectional ring for the full training step of an assigned architecture
+and reports λ_L, ρ_L and the 5% tolerance — the decision a deployment
+engineer actually faces.
+
+The study runs through :class:`repro.launch.analysis.AnalysisService`:
+each traced variant registers once, compiled sweep plans stay warm, and
+the final variant ranking is a packed multi-graph query (one compiled
+call per shape bucket — not one per variant).
 
     PYTHONPATH=src python examples/collective_study.py
 """
 
+import numpy as np
+
 from repro import configs
-from repro.core import dag
 from repro.core.tracer import TraceSpec, trace_step
+from repro.launch.analysis import AnalysisRequest, AnalysisService
 from repro.models.config import TRAIN_4K
+
+ALGOS = ("recursive_doubling", "ring", "tree", "bidir_ring")
 
 
 def main():
     cfg, _ = configs.get("jamba-1.5-large-398b")
     print(f"arch: {cfg.name}; shape: {TRAIN_4K.name}; mesh 2×4×8\n")
+
+    svc = AnalysisService()
+    for algo in ALGOS:
+        ts = TraceSpec(pods=2, data=4, model=8, allreduce_algo=algo)
+        svc.register_graph(algo, trace_step(cfg, TRAIN_4K, ts), ts.params())
+
     print(f"{'allreduce':22s} {'T/step':>10s} {'λ_ici':>8s} {'ρ_ici':>8s} "
           f"{'ICI +5% tol':>12s}")
-    results = {}
-    for algo in ("recursive_doubling", "ring", "tree", "bidir_ring"):
-        ts = TraceSpec(pods=2, data=4, model=8, allreduce_algo=algo)
-        g = trace_step(cfg, TRAIN_4K, ts)
-        p = ts.params()
-        plan = dag.LevelPlan(g)
-        s = plan.forward(p)
-        tol = dag.tolerance(g, p, 0.05, cls=0, plan=plan)
-        results[algo] = tol
-        print(f"{algo:22s} {s.T / 1e3:8.1f}ms {s.lam[0]:8.0f} "
-              f"{100 * s.rho()[0]:7.2f}% {tol:10.2f}µs")
-    ratio = results["recursive_doubling"] / results["ring"]
+    tols = {}
+    for algo in ALGOS:
+        curve = svc.handle(AnalysisRequest(kind="curve", variant=algo,
+                                           deltas=[0.0])).payload
+        tols[algo] = svc.handle(AnalysisRequest(kind="tolerance", variant=algo,
+                                                degradations=[0.05])
+                                ).payload["tolerance"][0.05]
+        print(f"{algo:22s} {curve['T'][0] / 1e3:8.1f}ms "
+              f"{curve['lam'][0]:8.0f} {100 * curve['rho'][0]:7.2f}% "
+              f"{tols[algo]:10.2f}µs")
+
+    # the deployment question, asked directly: which expansion survives
+    # rising ICI latency best?  One packed query over every variant.
+    rank = svc.handle(AnalysisRequest(
+        kind="rank", deltas=np.linspace(0.0, 50.0, 25).tolist(),
+        reduce="final")).payload
+    print(f"\nranking under +50µs ICI latency (one packed query, "
+          f"{rank['compiled_calls']} compiled call(s) for "
+          f"{len(rank['ranking'])} variants):")
+    for name, obj in rank["ranking"]:
+        print(f"  {name:22s} T={obj / 1e3:8.1f}ms")
+    ratio = tols["recursive_doubling"] / tols["ring"]
     print(f"\nrecursive-doubling tolerates {ratio:.1f}× more ICI latency than "
           f"ring (paper: ~4× for ICON @256 nodes)")
 

@@ -4,13 +4,21 @@ How much *per-wire* latency (e.g. future FEC adding +100 ns/link) can a
 workload absorb on Fat Tree vs Dragonfly vs a TPU ICI torus — with wire
 latency as the LP decision variable (Appendix H)?
 
+Topology variants change the graph itself (each message expands through a
+different wire-class stamper), so they register with
+:class:`repro.launch.analysis.AnalysisService` as separate variants; the
+service keeps one warm compiled sweep plan per topology and answers the
+wire-latency questions (base point, 1% tolerance, degradation ranking)
+without ever re-compiling.
+
     PYTHONPATH=src python examples/topology_study.py
 """
 
 import numpy as np
 
-from repro.core import dag, topology
+from repro.core import topology
 from repro.core.graph import GraphBuilder
+from repro.launch.analysis import AnalysisRequest, AnalysisService
 
 
 def workload(topo, params, nranks=256, iters=3):
@@ -28,23 +36,46 @@ def workload(topo, params, nranks=256, iters=3):
     return b.finalize()
 
 
+TOPOLOGIES = [
+    ("fat_tree(k=16)", topology.fat_tree(16)),
+    ("dragonfly(8,4,8)", topology.dragonfly(8, 4, 8)),
+    ("torus(16x16) ICI", topology.torus((16, 16))),
+]
+
+
 def main():
+    svc = AnalysisService()
+    for name, topo in TOPOLOGIES:
+        p = topology.topology_params(topo, l_wire_us=0.274, d_switch_us=0.108)
+        svc.register_graph(name, workload(topo, p), p,
+                           topology=topo.name)
+
     print("wire-latency tolerance, 256 ranks, allreduce-heavy step")
     print(f"{'topology':22s} {'T(µs)':>10s} {'λ_wire':>8s} "
           f"{'wire +1% (ns)':>14s} {'verdict on +100ns FEC':>24s}")
-    for name, topo in [
-        ("fat_tree(k=16)", topology.fat_tree(16)),
-        ("dragonfly(8,4,8)", topology.dragonfly(8, 4, 8)),
-        ("torus(16x16) ICI", topology.torus((16, 16))),
-    ]:
-        p = topology.topology_params(topo, l_wire_us=0.274, d_switch_us=0.108)
-        g = workload(topo, p)
-        plan = dag.LevelPlan(g)
-        s = plan.forward(p)
-        tol = dag.tolerance(g, p, 0.01, cls=0, plan=plan)
+    for name, _ in TOPOLOGIES:
+        curve = svc.handle(AnalysisRequest(kind="curve", variant=name,
+                                           deltas=[0.0])).payload
+        tol = svc.handle(AnalysisRequest(kind="tolerance", variant=name,
+                                         degradations=[0.01])
+                         ).payload["tolerance"][0.01]
         verdict = "absorbed" if tol * 1e3 > 100 else "1% SLOWDOWN"
-        print(f"{name:22s} {s.T:10.0f} {s.lam[0]:8.0f} "
+        print(f"{name:22s} {curve['T'][0]:10.0f} {curve['lam'][0]:8.0f} "
               f"{tol * 1e3:14.0f} {verdict:>24s}")
+
+    # which fabric is fastest once every wire has slowed by +0.5µs?
+    # (absolute T at the degraded point — the deployment question; the
+    # per-topology tolerance column above answers "which degrades least".
+    # per-variant wire classes differ, so each topology is its own shape
+    # bucket — the service still answers this as one query)
+    rank = svc.handle(AnalysisRequest(
+        kind="rank", deltas=np.linspace(0.0, 0.5, 11).tolist(),
+        reduce="final")).payload
+    print(f"\nfastest fabric at +0.5µs/wire "
+          f"({rank['compiled_calls']} compiled call(s)):")
+    for name, obj in rank["ranking"]:
+        print(f"  {name:22s} T={obj:10.0f}µs")
+
     print("\n(paper found ICON needs >3000 ns/wire before 1% degradation —")
     print(" the same conclusion falls out here for compute-heavy steps.)")
 

@@ -44,9 +44,10 @@ def _round(b: GraphBuilder, msgs, p: LogGPS) -> None:
         svs.append(b.add_send_vertex(src, p.o))
     for (src, dst, nbytes), sv in zip(msgs, svs):
         rv = b.add_recv_vertex(dst, p.o)
-        lat = ((p.link_class(src, dst), 1),)
-        b.add_edge(sv, rv, const_us=p.gap_cost(nbytes, src, dst),
-                   nbytes=nbytes, lat=lat)
+        cls = p.link_class(src, dst)
+        gcost = p.gap_cost(nbytes, src, dst)
+        b.add_edge(sv, rv, const_us=gcost, nbytes=nbytes, lat=((cls, 1),),
+                   gap_us=gcost, gclass=cls)
 
 
 def _pairs_round(b: GraphBuilder, pairs, nbytes, p: LogGPS) -> None:

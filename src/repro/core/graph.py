@@ -43,6 +43,18 @@ class ExecutionGraph:
       econst       float64  constant part of the edge cost in µs (e.g. (s-1)·G)
       ebytes       float64  message payload bytes (0 for dependency edges)
       elat         int16[ne, nclass]  latency-class multiplicities
+      egap         float64  the (s-1)·G share of econst recorded at build time
+      egclass      int32    latency class of that gap share
+
+    ``egap``/``egclass`` make the gap decomposition self-describing: bandwidth
+    scenarios (γ·G sweeps) read the exact build-time share off the graph
+    instead of reconstructing it from a parameter object that may no longer
+    match (the old ``compile_plan(params=...)`` caveat).  Graphs finalized by
+    :class:`GraphBuilder` always carry them; a NaN entry means "share
+    unknown" (a raw ``add_edge(nbytes=...)`` call that didn't pass
+    ``gap_us``), and hand-constructed graphs may leave the arrays ``None``
+    entirely — :func:`edge_gap_shares` resolves either case to a concrete
+    decomposition, reconstructing unknown shares from params when given.
     """
 
     kind: np.ndarray
@@ -55,6 +67,8 @@ class ExecutionGraph:
     elat: np.ndarray  # (ne, nclass) int16
     nclass: int
     nranks: int
+    egap: Optional[np.ndarray] = None     # (ne,) float64
+    egclass: Optional[np.ndarray] = None  # (ne,) int32
     # CSR-by-destination (computed in finalize)
     in_ptr: np.ndarray = None  # (nv+1,)
     in_edge: np.ndarray = None  # (ne,) edge ids sorted by dst
@@ -108,6 +122,8 @@ class GraphBuilder:
         self._econst: list[float] = []
         self._ebytes: list[float] = []
         self._elat: list[tuple] = []  # sparse: list of (class, mult) tuples
+        self._egap: list[float] = []  # (s-1)·G share of econst per edge
+        self._egclass: list[int] = []
         self._tail = [-1] * nranks  # last vertex id per rank
         self._independent = False  # when True, skip program-order chaining
 
@@ -143,15 +159,32 @@ class GraphBuilder:
         self._econst.append(0.0)
         self._ebytes.append(0.0)
         self._elat.append(())
+        self._egap.append(0.0)
+        self._egclass.append(0)
 
     def add_edge(self, u: int, v: int, const_us: float = 0.0, nbytes: float = 0.0,
-                 lat: tuple = ()) -> None:
-        """General edge. ``lat`` is a tuple of (class_id, multiplicity)."""
+                 lat: tuple = (), gap_us: Optional[float] = None,
+                 gclass: int = 0) -> None:
+        """General edge. ``lat`` is a tuple of (class_id, multiplicity).
+
+        ``gap_us`` records how much of ``const_us`` is the (s-1)·G bandwidth
+        term and ``gclass`` which latency class's G produced it, so that γ·G
+        scenarios can re-scale it exactly without a parameter object.  An
+        explicit ``gap_us`` (including 0.0) is authoritative; omitting it on
+        a message edge (``nbytes > 0``) records NaN = "share unknown", which
+        analyses resolve by reconstructing from whatever params they hold
+        (:func:`edge_gap_shares`).
+        """
         self._esrc.append(u)
         self._edst.append(v)
         self._econst.append(float(const_us))
         self._ebytes.append(float(nbytes))
         self._elat.append(tuple(lat))
+        if gap_us is None:
+            self._egap.append(float("nan") if nbytes > 0 else 0.0)
+        else:
+            self._egap.append(float(gap_us))
+        self._egclass.append(int(gclass))
 
     # -- messages (LogGPS-costed at analysis time) --------------------------
     def add_message(self, src_rank: int, dst_rank: int, nbytes: float, params,
@@ -167,18 +200,21 @@ class GraphBuilder:
         """
         if lat is None:
             lat = ((params.link_class(src_rank, dst_rank), 1),)
+        gcls = params.link_class(src_rank, dst_rank)
         gcost = params.gap_cost(nbytes, src_rank, dst_rank)
         s_v = self.add_send_vertex(src_rank, params.o)
         r_v = self.add_recv_vertex(dst_rank, params.o)
         if nbytes < params.S:
-            self.add_edge(s_v, r_v, const_us=gcost, nbytes=nbytes, lat=lat)
+            self.add_edge(s_v, r_v, const_us=gcost, nbytes=nbytes, lat=lat,
+                          gap_us=gcost, gclass=gcls)
         else:
             x = self.add_sync_vertex(dst_rank)
             self.add_edge(s_v, x, const_us=0.0, nbytes=0.0, lat=lat)   # RTS
             self.add_dep(r_v, x)                                        # recv posted
             # CTS + data transfer back onto the receiving rank's chain
             done = self._add_vertex(RECV, 0.0, dst_rank)
-            self.add_edge(x, done, const_us=gcost, nbytes=nbytes, lat=lat)
+            self.add_edge(x, done, const_us=gcost, nbytes=nbytes, lat=lat,
+                          gap_us=gcost, gclass=gcls)
             return s_v, done
         return s_v, r_v
 
@@ -232,10 +268,54 @@ class GraphBuilder:
             kind=kind, vcost=vcost, vrank=vrank,
             esrc=esrc, edst=edst, econst=econst, ebytes=ebytes, elat=elat,
             nclass=self.nclass, nranks=self.nranks,
+            egap=np.asarray(self._egap, dtype=np.float64),
+            egclass=np.asarray(self._egclass, dtype=np.int32),
             in_ptr=in_ptr, in_edge=in_edge, level=level, nlevels=nlevels,
         )
         g.validate()
         return g
+
+
+def edge_gap_shares(g: ExecutionGraph, params=None) -> tuple:
+    """Resolve per-edge (s−1)·G gap shares in original edge order.
+
+    Returns ``(egap, egclass)`` float64/int64 arrays of length ``ne`` with
+    the precedence every bandwidth analysis shares (so the compiled sweep
+    path and the scalar path can never disagree):
+
+    1. a share the graph recorded at build time — including an explicit
+       0.0 (e.g. built under G=0) — is authoritative;
+    2. an *unknown* share (NaN entry from a raw ``add_edge(nbytes=...)``
+       call, or ``g.egap is None`` on hand-constructed graphs) is
+       reconstructed from ``params`` as max(s−1, 0)·G[link class];
+    3. without params, unknown shares resolve to 0 (γ·G scenarios become
+       no-ops on those edges; latency sweeps are unaffected either way).
+    """
+    ne = g.num_edges
+    egap = np.zeros(ne, dtype=np.float64)
+    egclass = np.zeros(ne, dtype=np.int64)
+    if g.egap is not None:
+        rec = ~np.isnan(g.egap)
+        egap[rec] = g.egap[rec]
+        egclass[rec] = g.egclass[rec]
+        unknown = ~rec & (g.ebytes > 0)
+    else:
+        unknown = g.ebytes > 0
+    if params is not None and unknown.any():
+        idx = np.nonzero(unknown)[0]
+        G = np.asarray(params.G, dtype=np.float64)
+        if params.rank_of_class is None:
+            cls = np.zeros(idx.shape[0], dtype=np.int64)
+        else:
+            src_r = g.vrank[g.esrc[idx]]
+            dst_r = g.vrank[g.edst[idx]]
+            cls = np.fromiter(
+                (params.link_class(int(a), int(b))
+                 for a, b in zip(src_r, dst_r)),
+                dtype=np.int64, count=idx.shape[0])
+        egclass[idx] = cls
+        egap[idx] = np.maximum(g.ebytes[idx] - 1.0, 0.0) * G[cls]
+    return egap, egclass
 
 
 def _topo_levels(nv: int, esrc: np.ndarray, edst: np.ndarray) -> np.ndarray:

@@ -6,12 +6,27 @@ solve yields pairwise sensitivity matrices D_L (critical-path message counts
 per rank pair) and D_G (bytes); Algorithm 3 greedily swaps the rank pair
 with the best predicted gain, re-solves, and stops when the objective stops
 improving — exactly the paper's loop, with our DAG engine playing Gurobi.
+
+Two implementations of the greedy loop:
+
+``place(engine="scalar")`` — the reference loop: one scalar forward per
+step, per-pair Python ``swap_gain`` scoring (O(P³) per step).
+
+``place(engine="auto")`` (default) — the batched loop: pairwise counts are
+aggregated over a *scenario grid* (robust placement — a mapping that only
+wins at the build-time latency point can lose under the sweep the operator
+actually cares about), all P² candidate swaps are scored at once from the
+vectorized gain matrix (:func:`swap_gain_matrix`), and the top-k candidate
+mappings are evaluated exactly in ONE packed
+:class:`~repro.sweep.compile.MultiPlan` run per greedy step instead of
+scalar re-solves.  With the default single-point grid and ``topk=1`` it
+reproduces the reference loop's final mapping exactly (asserted in tests).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
@@ -49,26 +64,57 @@ def evaluate_mapping(g: ExecutionGraph, params: LogGPS, phi: ArchTopology,
     variable lower bounds in the paper's LP).
     """
     plan = plan or dag.LevelPlan(g)
-    gg = plan.g
-    ebytes = gg.ebytes[plan.eorder]
-    is_msg = ebytes > 0
-    ps, pd = pi[gg.vrank[plan.esrc]], pi[gg.vrank[plan.edst]]
-    extra = np.where(is_msg, phi.L[ps, pd] + phi.G[ps, pd] * np.maximum(ebytes - 1, 0), 0.0)
-    # zero out the built-in single-class latency/G: build graphs for placement
-    # with L=(0,), G=(0,) so the built-in cost is 0 and extra is the whole cost.
-    sched = plan.forward(params, extra_edge_cost=_unsort(extra, plan.eorder, gg.num_edges))
+    # build graphs for placement with L=(0,), G=(0,) so the built-in cost
+    # is 0 and the mapped Φ cost is the whole network cost
+    sched = plan.forward(params,
+                         extra_edge_cost=mapping_edge_cost(plan.g, phi, pi))
     return sched, plan
-
-
-def _unsort(arr_sorted: np.ndarray, order: np.ndarray, n: int) -> np.ndarray:
-    out = np.zeros(n, dtype=arr_sorted.dtype)
-    out[order] = arr_sorted
-    return out
 
 
 def sensitivity_matrices(g: ExecutionGraph, sched, plan: dag.LevelPlan):
     """D_L, D_G from the critical path (Appendix I reduced costs)."""
     return plan.pairwise_counts(sched)
+
+
+def mapping_edge_cost(g: ExecutionGraph, phi: ArchTopology,
+                      pi: np.ndarray) -> np.ndarray:
+    """Per-edge Φ link cost of mapping π, in *original* edge order.
+
+    The batched analog of ``evaluate_mapping``'s extra array — fed to
+    ``dag.LevelPlan.forward(extra_edge_cost=)`` or
+    ``sweep.compile_plan(extra_edge_cost=)`` interchangeably.
+    """
+    is_msg = g.ebytes > 0
+    ps, pd = pi[g.vrank[g.esrc]], pi[g.vrank[g.edst]]
+    return np.where(is_msg,
+                    phi.L[ps, pd] + phi.G[ps, pd] * np.maximum(g.ebytes - 1, 0),
+                    0.0)
+
+
+def swap_gain_matrix(D_L: np.ndarray, D_G: np.ndarray, pi: np.ndarray,
+                     phi: ArchTopology) -> np.ndarray:
+    """All-pairs first-order swap gains in one shot (vectorized Alg. 3 l.15).
+
+    gain[i, j] = Σ_{k≠i,j} (A_ik − A_jk)(D_L,ik − D_L,jk)
+                          + (B_ik − B_jk)(D_G,ik − D_G,jk)
+
+    with A/B the mapped pairwise L/G — algebraically identical to summing
+    :func:`swap_gain`'s old−new terms over both swap directions.  O(P³)
+    memory/work as dense numpy (placement instances are small; the scalar
+    loop was O(P³) *Python*).
+    """
+    A = phi.L[np.ix_(pi, pi)]
+    B = phi.G[np.ix_(pi, pi)]
+    dA = A[:, None, :] - A[None, :, :]          # [P, P, P] over (i, j, k)
+    dL = D_L[:, None, :] - D_L[None, :, :]
+    dB = B[:, None, :] - B[None, :, :]
+    dG = D_G[:, None, :] - D_G[None, :, :]
+    terms = dA * dL + dB * dG
+    P = pi.shape[0]
+    idx = np.arange(P)
+    terms[idx, :, idx] = 0.0                    # k == i
+    terms[:, idx, idx] = 0.0                    # k == j
+    return terms.sum(axis=2)
 
 
 def swap_gain(i: int, j: int, D_L: np.ndarray, D_G: np.ndarray,
@@ -93,16 +139,23 @@ def swap_gain(i: int, j: int, D_L: np.ndarray, D_G: np.ndarray,
     return gain
 
 
-def place(g: ExecutionGraph, phi: ArchTopology, params: Optional[LogGPS] = None,
-          pi0: Optional[np.ndarray] = None, max_iters: int = 64,
-          verbose: bool = False) -> tuple[np.ndarray, list]:
-    """Algorithm 3. Returns (mapping, history of objective values).
+def _select_swap(gains: np.ndarray) -> tuple:
+    """The reference loop's pair selection: scan i<j in lexicographic order,
+    keep the pair that beats the running best by >1e-12 (so fp-noise ties
+    resolve identically to the scalar implementation)."""
+    P = gains.shape[0]
+    best, bi, bj = 0.0, -1, -1
+    for i in range(P):
+        for j in range(i + 1, P):
+            gv = gains[i, j]
+            if gv > best + 1e-12:
+                best, bi, bj = gv, i, j
+    return best, bi, bj
 
-    The graph should be built with zero link costs (L=(0,), G=(0,)) so that
-    all network cost comes from Φ via the mapping.
-    """
+
+def _place_scalar(g, phi, params, pi0, max_iters, verbose):
+    """Reference Algorithm 3 (the seed implementation, kept verbatim)."""
     P = g.nranks
-    params = params or LogGPS(L=(0.0,), G=(0.0,), o=0.5, S=1e18)
     pi = np.arange(P) if pi0 is None else pi0.copy()
     plan = dag.LevelPlan(g)
 
@@ -134,6 +187,130 @@ def place(g: ExecutionGraph, phi: ArchTopology, params: Optional[LogGPS] = None,
         f_star = f
         history.append(f)
     return pi, history
+
+
+def _candidate_objectives(g, scen_batch, extras, backend):
+    """Exact makespans of K candidate mappings × S scenarios in ONE compiled
+    call: each candidate's Φ costs bake into a CompiledPlan and the K plans
+    pack into a MultiPlan (identical structure ⇒ identical shape bucket)."""
+    from repro.sweep import MultiSweepEngine, compile_plan, pack_plans
+
+    plans = [compile_plan(g, extra_edge_cost=ex) for ex in extras]
+    eng = MultiSweepEngine(multi=pack_plans(plans), backend=backend,
+                           cache=None)
+    res = eng.run(scen_batch, compute_lam=False)
+    return res.T.mean(axis=1)                  # [K] mean over the grid
+
+
+def _place_batched(g, phi, params, pi0, max_iters, verbose, scenario_points,
+                   topk, engine="auto", backend="segment"):
+    """Batched Algorithm 3: grid-aggregated D matrices, vectorized gains,
+    one MultiPlan run per greedy step for exact candidate evaluation."""
+    from repro.sweep import ScenarioBatch
+
+    P = g.nranks
+    pi = np.arange(P) if pi0 is None else pi0.copy()
+    plan = dag.LevelPlan(g)
+    pts = list(scenario_points) if scenario_points else [params]
+    nc = g.nclass
+    scen_batch = ScenarioBatch(
+        L=np.asarray([pt.L for pt in pts], dtype=np.float64),
+        gscale=np.ones((len(pts), nc)))
+
+    def forwards(pi_):
+        ex = mapping_edge_cost(g, phi, pi_)
+        return [plan.forward(pt, extra_edge_cost=ex) for pt in pts]
+
+    scheds = forwards(pi)
+    f_star = float(np.mean([s.T for s in scheds]))
+    history = [f_star]
+
+    for _ in range(max_iters):
+        D_L = np.zeros((P, P))
+        D_G = np.zeros((P, P))
+        for s in scheds:                       # grid-aggregated sensitivities
+            dl, dgm = plan.pairwise_counts(s)
+            D_L += dl
+            D_G += dgm
+        D_L /= len(scheds)
+        D_G /= len(scheds)
+        gains = swap_gain_matrix(D_L, D_G, pi, phi)
+        best, bi, bj = _select_swap(gains)
+        if bi < 0:
+            break  # no positive-gain swap (termination cond. 1)
+        # top-k predicted swaps, best-first (k=1 ≡ the reference loop)
+        iu, ju = np.triu_indices(P, k=1)
+        order = np.argsort(-gains[iu, ju], kind="stable")
+        cand = [(bi, bj)]
+        for o in order[:max(int(topk), 1)]:
+            pair = (int(iu[o]), int(ju[o]))
+            if pair != (bi, bj) and len(cand) < max(int(topk), 1):
+                cand.append(pair)
+        extras = []
+        for (ci, cj) in cand:
+            pc = pi.copy()
+            pc[ci], pc[cj] = pc[cj], pc[ci]
+            extras.append(mapping_edge_cost(g, phi, pc))
+        try:
+            fs = _candidate_objectives(g, scen_batch, extras, backend)
+        except Exception:
+            # same 'auto' contract as core.sensitivity: degrade to the
+            # exact scalar evaluation on ANY sweep-path failure (no JAX,
+            # broken backend, OOM on the packed plan) unless the caller
+            # forced engine='sweep'
+            if engine == "sweep":
+                raise
+            fs = np.asarray([np.mean([plan.forward(pt, extra_edge_cost=ex).T
+                                      for pt in pts]) for ex in extras])
+        k = int(np.argmin(fs))
+        f = float(fs[k])
+        if verbose:
+            print(f"swap {cand[k]} predicted_gain={best:.2f} T={f:.2f} "
+                  f"(evaluated {len(cand)} candidates)")
+        if f >= f_star - 1e-9:
+            break  # best candidate doesn't improve (termination cond. 2)
+        ci, cj = cand[k]
+        pi[ci], pi[cj] = pi[cj], pi[ci]
+        scheds = forwards(pi)
+        f_star = f
+        history.append(f)
+    return pi, history
+
+
+def place(g: ExecutionGraph, phi: ArchTopology, params: Optional[LogGPS] = None,
+          pi0: Optional[np.ndarray] = None, max_iters: int = 64,
+          verbose: bool = False, engine: str = "auto",
+          scenarios: Optional[Sequence[LogGPS]] = None,
+          topk: int = 1) -> tuple[np.ndarray, list]:
+    """Algorithm 3. Returns (mapping, history of objective values).
+
+    The graph should be built with zero link costs (L=(0,), G=(0,)) so that
+    all network cost comes from Φ via the mapping.
+
+    ``engine="auto"`` (default) runs the batched loop: swap gains for all
+    P² pairs come from one vectorized gain matrix, candidate mappings are
+    verified in one packed MultiPlan call per greedy step, and ``scenarios``
+    (a sequence of LogGPS points, e.g. ``latency_points(params, deltas)``)
+    aggregates the sensitivity matrices over a grid instead of the single
+    build-time point.  Defaults (single point, ``topk=1``) reproduce the
+    reference loop exactly; ``engine="scalar"`` forces the reference loop.
+    """
+    if engine not in ("auto", "scalar", "sweep"):
+        raise ValueError(f"engine must be 'auto', 'scalar' or 'sweep', "
+                         f"got {engine!r}")
+    params = params or LogGPS(L=(0.0,), G=(0.0,), o=0.5, S=1e18)
+    if engine == "scalar":
+        if scenarios is not None or topk != 1:
+            raise ValueError("scenario grids / topk need the batched engine")
+        return _place_scalar(g, phi, params, pi0, max_iters, verbose)
+    return _place_batched(g, phi, params, pi0, max_iters, verbose,
+                          scenarios, topk, engine=engine)
+
+
+def latency_points(params: LogGPS, deltas: Sequence[float],
+                   cls: int = 0) -> list:
+    """ΔL grid as LogGPS points — the ``scenarios=`` axis of :func:`place`."""
+    return [params.with_delta(float(d), cls) for d in deltas]
 
 
 def block_mapping(P: int) -> np.ndarray:

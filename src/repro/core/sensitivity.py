@@ -154,6 +154,49 @@ def latency_tolerance(g: ExecutionGraph, params: LogGPS,
             for p in degr}
 
 
+def bandwidth_curve(g: ExecutionGraph, params: LogGPS,
+                    gscales: Sequence[float], cls: int = 0,
+                    plan: Optional[dag.LevelPlan] = None,
+                    engine: str = "auto") -> LatencyCurve:
+    """T(γ·G) over bandwidth scales (γ > 1 = slower links on class ``cls``).
+
+    Both paths resolve per-edge gap shares through
+    :func:`repro.core.graph.edge_gap_shares` — build-time recorded shares
+    are authoritative, unknown shares reconstruct from ``params`` — so the
+    compiled sweep path and this scalar fallback always agree.  The sweep
+    engine re-scales the shares inside the compiled forward; the scalar
+    fallback feeds ``egap·(γ−1)`` through ``extra_edge_cost`` — no graph
+    rebuild either way.
+    """
+    from .graph import edge_gap_shares
+    _check_engine_arg(engine)
+    gs = np.asarray(gscales, dtype=np.float64)
+    want_sweep = (engine == "sweep"
+                  or (engine == "auto" and gs.size >= SWEEP_MIN_POINTS))
+    if want_sweep:
+        try:
+            from repro.sweep import bandwidth_grid
+            eng = _sweep_engine(g, params)
+            if eng is not None:
+                res = eng.run(bandwidth_grid(params, gs, cls=cls))
+                return LatencyCurve(deltas=gs, T=res.T,
+                                    lam=res.lam[:, cls], rho=res.rho[:, cls])
+        except Exception:
+            if engine == "sweep":
+                raise
+    plan = plan or dag.LevelPlan(g)
+    egap, egclass = edge_gap_shares(g, params)
+    scale = np.where(egclass == cls, 1.0, 0.0) * egap
+    Ts, lams, rhos = [], [], []
+    for gamma in gs:
+        s = plan.forward(params, extra_edge_cost=scale * (gamma - 1.0))
+        Ts.append(s.T)
+        lams.append(float(s.lam[cls]))
+        rhos.append(float(s.rho()[cls]))
+    return LatencyCurve(deltas=gs, T=np.asarray(Ts), lam=np.asarray(lams),
+                        rho=np.asarray(rhos))
+
+
 def critical_latencies(g: ExecutionGraph, params: LogGPS, L_min: float,
                        L_max: float, cls: int = 0,
                        plan: Optional[dag.LevelPlan] = None,

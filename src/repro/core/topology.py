@@ -186,5 +186,8 @@ class TopologyStamper:
         gcost = self.params.gap_cost(nbytes)
         s_v = b.add_send_vertex(src, self.params.o)
         r_v = b.add_recv_vertex(dst, self.params.o)
-        b.add_edge(s_v, r_v, const_us=const + gcost, nbytes=nbytes, lat=lat)
+        # gap share recorded so γ·G scenarios re-scale only the (s-1)·G term,
+        # never the h·d_switch constant folded in alongside it
+        b.add_edge(s_v, r_v, const_us=const + gcost, nbytes=nbytes, lat=lat,
+                   gap_us=gcost, gclass=self.params.link_class(src, dst))
         return s_v, r_v

@@ -1,2 +1,2 @@
-from .ops import maxplus_matvec  # noqa: F401
+from .ops import maxplus_matvec, maxplus_matvec_batched  # noqa: F401
 from .ref import maxplus_matvec_ref  # noqa: F401

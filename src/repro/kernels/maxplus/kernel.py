@@ -64,3 +64,50 @@ def maxplus_matvec_kernel(A, t, *, bm: int = 128, bn: int = 128,
         scratch_shapes=[pltpu.VMEM((bm, K), jnp.float32)],
         interpret=interpret,
     )(A, t)
+
+
+def _maxplus_batched_kernel(A_ref, t_ref, o_ref, acc_ref, *, n_n: int):
+    jn = pl.program_id(2)
+
+    @pl.when(jn == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, NEG_INF)
+
+    A = A_ref[0]                         # [bm, bn]
+    t = t_ref[0]                         # [bn, K]
+    cand = jnp.max(A[:, :, None] + t[None, :, :], axis=1)
+    acc_ref[...] = jnp.maximum(acc_ref[...], cand)
+
+    @pl.when(jn == n_n - 1)
+    def _finish():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def maxplus_matvec_batched_kernel(A, t, *, bm: int = 128, bn: int = 128,
+                                  interpret: bool = False):
+    """Graph-batched (max,+) mat-vec: A [G, M, N], t [G, N, K] → [G, M, K].
+
+    The graph axis rides the outermost grid dimension (one [bm, bn] block
+    pipeline per graph), so a MultiPlan's per-level scatter-max over every
+    packed graph is a single kernel launch; K (scenarios) still rides the
+    128-wide lane axis.
+    """
+    G, M, N = A.shape
+    _, _, K = t.shape
+    bm = min(bm, M)
+    bn = min(bn, N)
+    assert M % bm == 0 and N % bn == 0
+    grid = (G, M // bm, N // bn)
+    kernel = functools.partial(_maxplus_batched_kernel, n_n=N // bn)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bn), lambda g, i, j: (g, i, j)),
+            pl.BlockSpec((1, bn, K), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, K), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, M, K), t.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, K), jnp.float32)],
+        interpret=interpret,
+    )(A, t)

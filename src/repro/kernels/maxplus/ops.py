@@ -6,7 +6,7 @@ import functools
 
 import jax
 
-from .kernel import maxplus_matvec_kernel
+from .kernel import maxplus_matvec_batched_kernel, maxplus_matvec_kernel
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
@@ -14,3 +14,13 @@ def maxplus_matvec(A, t, *, bm: int = 128, bn: int = 128, interpret: bool = None
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     return maxplus_matvec_kernel(A, t, bm=bm, bn=bn, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def maxplus_matvec_batched(A, t, *, bm: int = 128, bn: int = 128,
+                           interpret: bool = None):
+    """[G, M, N] ⊗ [G, N, K] → [G, M, K]; graphs on the outer grid axis."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return maxplus_matvec_batched_kernel(A, t, bm=bm, bn=bn,
+                                         interpret=interpret)

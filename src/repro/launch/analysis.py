@@ -1,0 +1,406 @@
+"""Warm-plan analysis service: what-if latency queries over compiled sweeps.
+
+The LLAMP workflow an operator actually runs is interactive: "here are my
+candidate collective algorithms / topologies / placements — how does each
+behave as DCN latency degrades, and which one should I deploy?"  Answering
+that cold means re-compiling a sweep program per question.  This service
+keeps the expensive artifacts warm — one :class:`~repro.sweep.SweepEngine`
+per registered variant, one packed
+:class:`~repro.sweep.MultiSweepEngine` per shape bucket, and a shared
+:class:`~repro.sweep.SweepCache` of results — so every query after the
+first is a jit dispatch (or a cache hash) instead of a compile.
+
+Request/response API (JSON-friendly dataclasses)::
+
+    svc = AnalysisService()
+    svc.register(variant)                  # GraphVariant, or register_graph()
+    svc.warm()                             # compile + pack now (optional)
+    resp = svc.handle(AnalysisRequest(kind="rank", deltas=[0, 50, 100]))
+    resp.payload["ranking"]                # best-first [(name, objective)]
+
+Query kinds: ``curve`` (T/λ/ρ over ΔL), ``bandwidth`` (T over γ·G),
+``tolerance`` (p%-degradation ΔL budgets), ``rank`` (variant ordering over
+a shared grid — one compiled call per shape bucket), ``placement``
+(Algorithm-3 rank-mapping suggestion on a two-tier Φ), ``stats``.
+
+CLI (mirrors the serve-loop structure of ``launch.serve``): one-shot
+
+    PYTHONPATH=src python -m repro.launch.analysis --demo --query rank
+
+or a JSON-lines serve loop — one request object per stdin line, one
+response object per stdout line:
+
+    PYTHONPATH=src python -m repro.launch.analysis --demo --serve
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import placement as placement_mod
+from repro.core.graph import ExecutionGraph
+from repro.core.loggps import LogGPS
+from repro.sweep import (GraphVariant, MultiSweepEngine, SweepCache,
+                         SweepEngine, group_plans, latency_grid,
+                         bandwidth_grid, pack_plans, tolerance_batched)
+
+
+@dataclasses.dataclass
+class AnalysisRequest:
+    """One what-if query.  Unused fields are ignored by other kinds."""
+
+    kind: str                                   # see module docstring
+    variant: Optional[str] = None               # default: first registered
+    cls: int = 0                                # latency class under study
+    deltas: Optional[Sequence[float]] = None    # ΔL grid (curve / rank)
+    gscales: Optional[Sequence[float]] = None   # γ grid (bandwidth)
+    degradations: Optional[Sequence[float]] = None  # p levels (tolerance)
+    reduce: str = "mean"                        # rank objective: mean|max|final
+    topo: Optional[dict] = None                 # placement Φ spec (two_tier kw)
+    topk: int = 1                               # placement candidate width
+
+    @staticmethod
+    def from_json(line: str) -> "AnalysisRequest":
+        d = json.loads(line)
+        known = {f.name for f in dataclasses.fields(AnalysisRequest)}
+        bad = set(d) - known
+        if bad:
+            raise ValueError(f"unknown request fields: {sorted(bad)}")
+        return AnalysisRequest(**d)
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self))
+
+
+@dataclasses.dataclass
+class AnalysisResponse:
+    kind: str
+    ok: bool
+    payload: dict
+    elapsed_ms: float
+    error: Optional[str] = None
+
+    def to_json(self) -> str:
+        return json.dumps(_jsonable(dataclasses.asdict(self)),
+                          allow_nan=False)
+
+
+def _jsonable(x):
+    """Recursively coerce a payload to strict JSON: numpy → builtins, and
+    non-finite floats → the strings "inf"/"-inf"/"nan" (bare ``Infinity``
+    tokens would break every strict consumer of the JSON-lines protocol —
+    unbounded tolerances are a legitimate answer, e.g. a class that never
+    reaches the critical path)."""
+    if isinstance(x, np.ndarray):
+        x = x.tolist()
+    if isinstance(x, (np.floating, np.integer)):
+        x = x.item()
+    if isinstance(x, float) and not np.isfinite(x):
+        return repr(x)                          # 'inf' / '-inf' / 'nan'
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    if isinstance(x, dict):
+        return {k: _jsonable(v) for k, v in x.items()}
+    return x
+
+
+class AnalysisService:
+    """Registered variants + warm compiled plans behind a query API."""
+
+    def __init__(self, backend: str = "segment",
+                 cache: Optional[SweepCache] = None,
+                 default_deltas: Sequence[float] = (0.0, 25.0, 50.0, 100.0)):
+        self.backend = backend
+        self.cache = cache if cache is not None else SweepCache(capacity=256)
+        self.default_deltas = tuple(default_deltas)
+        self._variants: dict = {}               # name → GraphVariant (ordered)
+        self._engines: dict = {}                # name → SweepEngine
+        self._groups: Optional[list] = None     # cached bucket index groups
+        self._multi: dict = {}                  # group key → MultiSweepEngine
+
+    # -- registration --------------------------------------------------------
+    def register(self, variant: GraphVariant) -> str:
+        if variant.name in self._variants:
+            raise ValueError(f"variant {variant.name!r} already registered")
+        self._variants[variant.name] = variant
+        self._groups = None                     # packing is stale
+        self._multi.clear()
+        return variant.name
+
+    def register_graph(self, name: str, graph: ExecutionGraph,
+                       params: LogGPS, **meta) -> str:
+        return self.register(GraphVariant(name=name, graph=graph,
+                                          params=params, meta=dict(meta)))
+
+    @property
+    def variant_names(self) -> tuple:
+        return tuple(self._variants)
+
+    def _variant(self, name: Optional[str]) -> GraphVariant:
+        if not self._variants:
+            raise ValueError("no variants registered")
+        if name is None:
+            return next(iter(self._variants.values()))
+        if name not in self._variants:
+            raise ValueError(f"unknown variant {name!r} "
+                             f"(have {list(self._variants)})")
+        return self._variants[name]
+
+    # -- warm plans ----------------------------------------------------------
+    def engine(self, name: Optional[str] = None) -> SweepEngine:
+        """Per-variant warm engine (compiled on first use, then cached)."""
+        v = self._variant(name)
+        eng = self._engines.get(v.name)
+        if eng is None:
+            eng = self._engines[v.name] = SweepEngine(
+                v.graph, v.params, backend=self.backend, cache=self.cache)
+        return eng
+
+    def _bucket_engines(self) -> list:
+        """[(names, MultiSweepEngine)] — one packed engine per shape bucket."""
+        if self._groups is None:
+            names = list(self._variants)
+            plans = [self.engine(n).compiled for n in names]
+            self._groups = group_plans(plans)
+            self._multi = {}
+            for gi, idx in enumerate(self._groups):
+                self._multi[gi] = MultiSweepEngine(
+                    multi=pack_plans([plans[i] for i in idx]),
+                    names=[names[i] for i in idx], backend=self.backend,
+                    cache=self.cache)
+        names = list(self._variants)
+        return [([names[i] for i in idx], self._multi[gi])
+                for gi, idx in enumerate(self._groups)]
+
+    def warm(self, jit: bool = True) -> dict:
+        """Compile every variant plan and pack every bucket now (instead of
+        lazily on the first query).  With ``jit=True`` every engine — each
+        per-variant engine (curve/bandwidth/tolerance queries) and each
+        packed bucket engine (rank queries) — also runs a probe over the
+        default ΔL grid so the XLA programs are built before the first
+        real query hits them (grids of other sizes still jit on first use
+        — the scenario axis is shape-bucketed).  Returns packing stats."""
+        t0 = time.perf_counter()
+        buckets = self._bucket_engines()
+        if jit:
+            deltas = np.asarray(self.default_deltas, dtype=np.float64)
+            for name, v in self._variants.items():
+                self.engine(name).run(latency_grid(v.params, deltas),
+                                      use_cache=False)
+            for names, meng in buckets:
+                batches = [latency_grid(self._variants[n].params, deltas)
+                           for n in names]
+                meng.run(batches, use_cache=False)
+                # rank queries run values-only — pre-build that program too
+                meng.run(batches, compute_lam=False, use_cache=False)
+        return {"variants": len(self._variants), "buckets": len(buckets),
+                "bucket_sizes": [len(ns) for ns, _ in buckets],
+                "warm_s": time.perf_counter() - t0}
+
+    # -- queries -------------------------------------------------------------
+    def curve(self, req: AnalysisRequest) -> dict:
+        v = self._variant(req.variant)
+        deltas = np.asarray(req.deltas if req.deltas is not None
+                            else self.default_deltas, dtype=np.float64)
+        res = self.engine(v.name).run(latency_grid(v.params, deltas,
+                                                   cls=req.cls))
+        return {"variant": v.name, "cls": req.cls, "deltas": deltas,
+                "T": res.T, "lam": res.lam[:, req.cls],
+                "rho": res.rho[:, req.cls], "from_cache": res.from_cache}
+
+    def bandwidth(self, req: AnalysisRequest) -> dict:
+        v = self._variant(req.variant)
+        gs = np.asarray(req.gscales if req.gscales is not None
+                        else (1.0, 2.0, 4.0), dtype=np.float64)
+        # values-only: the payload exposes T alone, so don't pay for the
+        # λ-backtrace program
+        res = self.engine(v.name).run(bandwidth_grid(v.params, gs,
+                                                     cls=req.cls),
+                                      compute_lam=False)
+        return {"variant": v.name, "cls": req.cls, "gscales": gs,
+                "T": res.T, "from_cache": res.from_cache}
+
+    def tolerance(self, req: AnalysisRequest) -> dict:
+        v = self._variant(req.variant)
+        degr = tuple(req.degradations if req.degradations is not None
+                     else (0.01, 0.02, 0.05))
+        tol = tolerance_batched(self.engine(v.name), v.params, degr,
+                                cls=req.cls)
+        return {"variant": v.name, "cls": req.cls, "tolerance": tol}
+
+    def rank(self, req: AnalysisRequest) -> dict:
+        """Order every registered variant over a shared ΔL grid — one
+        compiled call per shape bucket, not one per variant.  Ranking needs
+        only T, so the run is values-only (the cheap program: no λ
+        backtrace compiled into the packed forward)."""
+        if not self._variants:
+            raise ValueError("no variants registered")
+        deltas = np.asarray(req.deltas if req.deltas is not None
+                            else self.default_deltas, dtype=np.float64)
+        lacking = [n for n, v in self._variants.items()
+                   if req.cls >= v.params.nclass]
+        if lacking:
+            raise ValueError(
+                f"cls={req.cls} is out of range for variants {lacking} — "
+                "a ranking must sweep every variant on the same class")
+        scored: list = []
+        calls = 0
+        for names, meng in self._bucket_engines():
+            batches = [latency_grid(self._variants[n].params, deltas,
+                                    cls=req.cls)
+                       for n in names]
+            before = meng.calls
+            res = meng.run(batches, compute_lam=False)
+            calls += meng.calls - before
+            scored.extend(res.rank(reduce=req.reduce))
+        scored.sort(key=lambda kv: kv[1])
+        return {"cls": req.cls, "deltas": deltas, "reduce": req.reduce,
+                "ranking": scored, "best": scored[0][0],
+                "compiled_calls": calls}
+
+    def placement(self, req: AnalysisRequest) -> dict:
+        """Algorithm-3 rank-mapping suggestion on a two-tier Φ.
+
+        Placement's cost model requires the variant's graph to be built
+        with zero link costs (``core.placement`` contract: ALL network
+        cost comes from Φ via the mapping) — registering a variant with
+        real LogGPS link parameters and then asking for a placement would
+        double-count every message (built-in elat/econst AND Φ), so that
+        is rejected rather than answered wrongly.
+        """
+        v = self._variant(req.variant)
+        if np.any(np.asarray(v.params.L)) or np.any(np.asarray(v.params.G)):
+            raise ValueError(
+                f"variant {v.name!r} was registered with nonzero link "
+                "params — placement queries need a zero-link-cost build "
+                "(L=0, G=0; all network cost comes from the Φ topology; "
+                "see core.placement)")
+        spec = dict(req.topo or {})
+        P = int(spec.pop("P", v.graph.nranks))
+        pod = int(spec.pop("pod", max(P // 2, 1)))
+        phi = placement_mod.ArchTopology.two_tier(P, pod, **spec)
+        pts = (placement_mod.latency_points(v.params, req.deltas, cls=req.cls)
+               if req.deltas is not None else None)
+        pi, hist = placement_mod.place(v.graph, phi, params=v.params,
+                                       scenarios=pts, topk=req.topk)
+        return {"variant": v.name, "mapping": pi, "history": hist,
+                "improvement": (1.0 - hist[-1] / hist[0]) if hist[0] else 0.0}
+
+    def stats(self, req: AnalysisRequest) -> dict:
+        return {"variants": list(self._variants),
+                "warm_engines": list(self._engines),
+                "buckets": None if self._groups is None else len(self._groups),
+                "cache": self.cache.stats.snapshot(),
+                "cache_entries": len(self.cache)}
+
+    _KINDS = {"curve": curve, "bandwidth": bandwidth, "tolerance": tolerance,
+              "rank": rank, "placement": placement, "stats": stats}
+
+    def handle(self, req: AnalysisRequest) -> AnalysisResponse:
+        """Dispatch one request; errors come back as ``ok=False`` responses
+        (a malformed query must not take the serve loop down)."""
+        t0 = time.perf_counter()
+        fn = self._KINDS.get(req.kind)
+        if fn is None:
+            return AnalysisResponse(
+                kind=req.kind, ok=False, payload={},
+                elapsed_ms=0.0,
+                error=f"unknown kind {req.kind!r} "
+                      f"(have {sorted(self._KINDS)})")
+        try:
+            payload = fn(self, req)
+            return AnalysisResponse(
+                kind=req.kind, ok=True, payload=payload,
+                elapsed_ms=(time.perf_counter() - t0) * 1e3)
+        except Exception as e:  # noqa: BLE001 — serve loop must survive
+            return AnalysisResponse(
+                kind=req.kind, ok=False, payload={},
+                elapsed_ms=(time.perf_counter() - t0) * 1e3,
+                error=f"{type(e).__name__}: {e}")
+
+    def handle_json(self, line: str) -> str:
+        """One serve-loop turn: JSON request line → JSON response line."""
+        try:
+            req = AnalysisRequest.from_json(line)
+        except (ValueError, TypeError, json.JSONDecodeError) as e:
+            return AnalysisResponse(kind="?", ok=False, payload={},
+                                    elapsed_ms=0.0,
+                                    error=f"bad request: {e}").to_json()
+        return self.handle(req).to_json()
+
+
+# -- CLI ----------------------------------------------------------------------
+
+def _demo_service(backend: str) -> AnalysisService:
+    """A small self-contained study: four allreduce expansions of the same
+    compute/collective chain (the Fig 10 axis at toy scale)."""
+    from repro.core import synth
+    from repro.core.loggps import cluster_params
+    from repro.sweep import collective_variants
+
+    p = cluster_params(L_us=3.0, o_us=5.0)
+    svc = AnalysisService(backend=backend)
+    for v in collective_variants(
+            lambda a: synth.allreduce_chain(8, 3, params=p, algo=a),
+            ["ring", "bidir_ring", "recursive_doubling", "tree"], p):
+        svc.register(v)
+    return svc
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="what-if analysis over warm compiled sweep plans")
+    ap.add_argument("--demo", action="store_true",
+                    help="register the built-in 4-variant collective study")
+    ap.add_argument("--backend", default="segment",
+                    choices=("segment", "pallas"))
+    ap.add_argument("--serve", action="store_true",
+                    help="JSON-lines request/response loop on stdin/stdout")
+    ap.add_argument("--query", default=None,
+                    help="one-shot query kind (curve/tolerance/rank/...)")
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--cls", type=int, default=0)
+    ap.add_argument("--deltas", default=None,
+                    help="ΔL grid as start:stop:num, e.g. 0:100:25")
+    args = ap.parse_args(argv)
+
+    if not args.demo:
+        raise SystemExit("no workload source: pass --demo (or embed "
+                         "AnalysisService in your own driver)")
+    svc = _demo_service(args.backend)
+    t0 = time.time()
+    info = svc.warm()
+    print(f"[analysis] warmed {info['variants']} variants into "
+          f"{info['buckets']} shape bucket(s) in {time.time() - t0:.2f}s",
+          file=sys.stderr)
+
+    if args.serve:
+        print("[analysis] serving; one JSON request per line "
+              '(e.g. {"kind": "rank"})', file=sys.stderr)
+        for line in sys.stdin:
+            line = line.strip()
+            if not line:
+                continue
+            print(svc.handle_json(line), flush=True)
+        return svc
+
+    deltas = None
+    if args.deltas:
+        lo, hi, num = args.deltas.split(":")
+        deltas = np.linspace(float(lo), float(hi), int(num)).tolist()
+    req = AnalysisRequest(kind=args.query or "rank", variant=args.variant,
+                          cls=args.cls, deltas=deltas)
+    resp = svc.handle(req)
+    print(resp.to_json())
+    return svc
+
+
+if __name__ == "__main__":
+    main()

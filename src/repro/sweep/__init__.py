@@ -1,33 +1,58 @@
 """repro.sweep — batched scenario-sweep engine (JAX/Pallas max-plus).
 
-LLAMP's workhorse loop is "re-evaluate one execution graph under many
-LogGPS parameter points" (latency curves, tolerance bisections, the
-Algorithm-2 breakpoint search).  The scalar path pays a full Python/numpy
-level walk per point; this subsystem compiles the graph ONCE into padded
-dense per-level tensors and evaluates a whole scenario grid in a single
-jit+vmap max-plus forward pass:
+LLAMP's workhorse loop is "re-evaluate execution graphs under many LogGPS
+parameter points" (latency curves, tolerance bisections, the Algorithm-2
+breakpoint search, collective/topology variant studies).  The scalar path
+pays a full Python/numpy level walk per point; this subsystem compiles
+graphs ONCE into padded dense per-level tensors and evaluates whole grids
+in single jit+vmap max-plus forward passes — batching over scenarios, and
+over *(graphs × scenarios)* for variant studies:
 
     from repro import sweep
+
+    # one graph × many scenarios
     eng  = sweep.SweepEngine(graph, params)          # compile once
     grid = sweep.latency_grid(params, deltas)        # or cartesian_grid(...)
     res  = eng.run(grid)                             # T/λ/ρ for every scenario
 
-Modules:
-    compile    — LevelPlan → CompiledPlan (bucketed rectangular tensors)
-    engine     — SweepEngine (+ tolerance_batched / breakpoints_batched)
-    scenarios  — ScenarioBatch grids; GraphVariant stamping (collectives,
-                 topologies) for axes that change the graph itself
-    cache      — content-hash LRU memo of sweep results
+    # many graphs × many scenarios (one compiled program per shape bucket)
+    variants = sweep.collective_variants(factory, algos, params)
+    out = sweep.sweep_variants(variants, lambda v: grid)   # {name: SweepResult}
 
-Results match ``core.dag`` exactly (same argmax tie-breaks, float64), and
-λ matches the explicit LP's reduced costs; ``core.sensitivity`` dispatches
-here automatically for multi-point sweeps.  The Pallas ``maxplus`` kernel
-is available as the inner-scatter backend (``backend="pallas"``).
+    meng = sweep.MultiSweepEngine.from_variants(variants)  # explicit control
+    multi = meng.run(grid)                                 # T[G, S]; .rank()
+
+Public surface (re-exported here):
+    SweepEngine / SweepResult         — one graph, S scenarios per call
+    MultiSweepEngine / MultiSweepResult — G packed graphs × S scenarios per call
+    CompiledPlan / compile_plan       — graph → bucketed rectangular tensors
+    MultiPlan / pack_plans / group_plans — pad plans to a common envelope and
+                                        stack them on a leading graph axis
+    ScenarioBatch + grid builders     — latency_grid / bandwidth_grid /
+                                        cartesian_grid / base_batch
+    GraphVariant stamping             — collective_variants / topology_variants
+                                        / sweep_variants (axes that change the
+                                        graph itself)
+    tolerance_batched / breakpoints_batched — dag.py's bisection loops in
+                                        lockstep, one engine call per round
+    SweepCache / DEFAULT_CACHE        — content-hash LRU memo of results
+                                        (canonical-bytes keys, process-stable)
+
+Results match ``core.dag`` exactly (same argmax tie-breaks, float64) — a
+graph packed into a MultiPlan returns bit-identical T/λ to its solo run —
+and λ matches the explicit LP's reduced costs; ``core.sensitivity``
+dispatches here automatically for multi-point sweeps.  The Pallas
+``maxplus`` kernel is the optional values-only inner-scatter backend
+(``backend="pallas"``; the batched variant takes graphs on the kernel's
+outer grid axis).  ``launch.analysis.AnalysisService`` serves what-if
+queries over warm engines built from these pieces.
 """
 
-from .cache import DEFAULT_CACHE, SweepCache  # noqa: F401
-from .compile import CompiledPlan, compile_plan  # noqa: F401
-from .engine import (SweepEngine, SweepResult, breakpoints_batched,  # noqa: F401
+from .cache import DEFAULT_CACHE, SweepCache, canonical_bytes  # noqa: F401
+from .compile import (CompiledPlan, MultiPlan, compile_plan,  # noqa: F401
+                      group_plans, pack_plans, repad_plan)
+from .engine import (MultiSweepEngine, MultiSweepResult,  # noqa: F401
+                     SweepEngine, SweepResult, breakpoints_batched,
                      tolerance_batched)
 from .scenarios import (GraphVariant, ScenarioBatch, bandwidth_grid,  # noqa: F401
                         base_batch, cartesian_grid, collective_variants,

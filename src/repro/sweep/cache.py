@@ -6,6 +6,11 @@ parameter grid share one entry, so re-running a study script — or the
 breakpoint search re-probing a grid it has already seen — costs a hash
 instead of a forward pass.  LRU-bounded and in-memory; results are small
 ([S] + [S, nclass] float64), the *inputs* were the expensive part.
+
+Hashes are computed over *canonical bytes* — dtype tag + shape + C-order
+buffer — never over Python object identities, so a key minted in one
+process matches the same logical inputs hashed in another (a prerequisite
+for sharing a cache across workers or persisting it).
 """
 
 from __future__ import annotations
@@ -13,14 +18,48 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 from collections import OrderedDict
-from typing import Optional
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+def canonical_bytes(arr) -> tuple:
+    """Stable byte encoding of an array as a (header, buffer) chunk pair:
+    dtype tag + shape, then the C-order data buffer.
+
+    ``tobytes()`` alone is ambiguous — a [2, 3] and a [3, 2] array of the
+    same values serialize identically — and id()-derived keys differ per
+    process.  This encoding is collision-safe across shapes/dtypes and
+    reproducible everywhere.  Feed the chunks to a hash incrementally
+    (``for chunk in canonical_bytes(a): sha.update(chunk)``) or join them.
+    """
+    a = np.ascontiguousarray(arr)
+    return (f"{a.dtype.str}|{a.shape}|".encode(), a.tobytes())
+
+
+def _update(sha, arr) -> None:
+    for chunk in canonical_bytes(arr):
+        sha.update(chunk)
 
 
 def result_key(plan_hash: str, scenarios, compute_lam: bool,
                backend: str) -> str:
-    sha = hashlib.sha1(plan_hash.encode())
-    sha.update(scenarios.L.tobytes())
-    sha.update(scenarios.gscale.tobytes())
+    sha = hashlib.sha1(b"sweep-result-v2|")
+    sha.update(plan_hash.encode())
+    _update(sha, scenarios.L)
+    _update(sha, scenarios.gscale)
+    sha.update(f"|{int(compute_lam)}|{backend}".encode())
+    return sha.hexdigest()
+
+
+def multi_result_key(multi_hash: str, batches: Sequence, compute_lam: bool,
+                     backend: str) -> str:
+    """Key for a MultiPlan run: per-graph scenario batches hashed in order."""
+    sha = hashlib.sha1(b"sweep-multi-result-v1|")
+    sha.update(multi_hash.encode())
+    for b in batches:
+        _update(sha, b.L)
+        _update(sha, b.gscale)
     sha.update(f"|{int(compute_lam)}|{backend}".encode())
     return sha.hexdigest()
 
@@ -36,9 +75,13 @@ class CacheStats:
         n = self.hits + self.misses
         return self.hits / n if n else 0.0
 
+    def snapshot(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "hit_rate": self.hit_rate}
+
 
 class SweepCache:
-    """LRU map: result_key → SweepResult."""
+    """LRU map: result_key → SweepResult (or MultiSweepResult)."""
 
     def __init__(self, capacity: int = 64):
         self.capacity = capacity

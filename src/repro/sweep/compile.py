@@ -32,19 +32,29 @@ Edge weights at a scenario (L, γ) are reconstructed as
 
 so that γ = 1 (build-time bandwidth) reproduces the built edge constant
 *bitwise* — the decomposition can never perturb latency-only sweeps.  γ
-scales the effective gap/byte G (γ > 1 = slower links), assuming ``params``
-matches the graph's build-time parameters; see :func:`compile_plan`.
+scales the effective gap/byte G (γ > 1 = slower links).  Graphs finalized
+by ``GraphBuilder`` record their per-edge gap shares (``g.egap``/
+``g.egclass``) and those are authoritative; the ``params``-based
+reconstruction backstops message edges without a recorded share —
+hand-built graphs and raw ``add_edge(nbytes=...)`` callers that didn't
+pass ``gap_us`` (see :func:`compile_plan`).
+
+Multi-graph packing: several :class:`CompiledPlan`\\ s whose bucketed shapes
+fit a common level/edge envelope re-pad into one :class:`MultiPlan` whose
+tensors carry a leading graph axis — a whole variant study (collectives ×
+topologies × scenario grid) then runs as ONE compiled XLA program instead
+of one call per variant.  See :func:`pack_plans` / :func:`group_plans`.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.graph import ExecutionGraph
+from repro.core.graph import ExecutionGraph, edge_gap_shares
 from repro.core.loggps import LogGPS
 
 
@@ -122,28 +132,43 @@ class CompiledPlan:
         return nlv * self.Vmax * Emax * 4
 
     def content_hash(self) -> str:
-        """SHA1 over the compiled tensors — keys memoized sweep results."""
+        """SHA1 over the compiled tensors — keys memoized sweep results.
+
+        Hashes canonical bytes (dtype + shape + C-order buffer, see
+        :func:`repro.sweep.cache.canonical_bytes`), so the key is stable
+        across processes and collision-safe across tensor layouts.
+        """
         h = getattr(self, "_hash", None)
         if h is None:
-            sha = hashlib.sha1(b"compiled-plan-v2")
+            from .cache import canonical_bytes
+            sha = hashlib.sha1(b"compiled-plan-v3")
             sha.update(np.int64([self.nv, self.nclass, self.nlevels]).tobytes())
             for a in (self.vsrc, self.vmaskd, self.vconst, self.vgap,
                       self.vgclass, self.vlat, self.vcost_lv, self.vert_of_slot):
-                sha.update(a.tobytes())
+                for chunk in canonical_bytes(a):
+                    sha.update(chunk)
             h = sha.hexdigest()
             object.__setattr__(self, "_hash", h)
         return h
 
 
 def compile_plan(g: ExecutionGraph, params: Optional[LogGPS] = None,
-                 bucket: bool = True) -> CompiledPlan:
+                 bucket: bool = True,
+                 extra_edge_cost: Optional[np.ndarray] = None) -> CompiledPlan:
     """Compile an execution graph into a :class:`CompiledPlan`.
 
-    ``params`` is only consulted to split build-time (s−1)·G gap costs out of
-    edge constants (enabling bandwidth-scale scenarios); pass the same
-    parameter object the graph was built with.  With ``params=None`` the gap
-    share is left at 0 and bandwidth scenarios become no-ops (latency sweeps
-    are unaffected either way).
+    Gap decomposition (the γ·G bandwidth-scenario axis) prefers the per-edge
+    shares the graph recorded at build time (``g.egap``/``g.egclass`` — exact
+    regardless of what parameters the caller now holds).  ``params`` is
+    consulted as a fallback for message edges without a recorded share
+    (hand-built graphs, or raw ``add_edge(nbytes=...)`` calls that didn't
+    pass ``gap_us``); with neither, the gap share is 0 and bandwidth
+    scenarios become no-ops (latency sweeps are unaffected either way).
+
+    ``extra_edge_cost`` (original edge order, µs) is added to each edge's
+    constant — the compiled analog of ``LevelPlan.forward(extra_edge_cost=)``,
+    used by the placement search to bake a candidate rank mapping's Φ link
+    costs into a plan.
     """
     nv, ne, nc = g.num_vertices, g.num_edges, g.nclass
     if nv == 0:
@@ -157,6 +182,9 @@ def compile_plan(g: ExecutionGraph, params: Optional[LogGPS] = None,
     esrc_s = g.esrc[eorder].astype(np.int64)
     edst_s = g.edst[eorder].astype(np.int64)
     econst_s = g.econst[eorder].astype(np.float64)
+    if extra_edge_cost is not None:
+        econst_s = econst_s + np.asarray(extra_edge_cost,
+                                         dtype=np.float64)[eorder]
     ebytes_s = g.ebytes[eorder].astype(np.float64)
     elat_s = g.elat[eorder].astype(np.float64)
     elvl_s = lvl_of_edge[eorder].astype(np.int64)
@@ -177,23 +205,11 @@ def compile_plan(g: ExecutionGraph, params: Optional[LogGPS] = None,
     nlv_p = _bucket(nlevels) if bucket else nlevels
     flat_dummy = nlv_p * Vmax
 
-    # -- gap decomposition (bandwidth scenarios) ----------------------------
-    egap_s = np.zeros(ne)
-    egclass_s = np.zeros(ne, dtype=np.int64)
-    if params is not None:
-        msg = np.nonzero(ebytes_s > 0)[0]
-        G = np.asarray(params.G, dtype=np.float64)
-        if params.rank_of_class is None:
-            cls = np.zeros(msg.shape[0], dtype=np.int64)
-        else:
-            src_r = g.vrank[esrc_s[msg]]
-            dst_r = g.vrank[edst_s[msg]]
-            cls = np.fromiter(
-                (params.link_class(int(a), int(b))
-                 for a, b in zip(src_r, dst_r)),
-                dtype=np.int64, count=msg.shape[0])
-        egclass_s[msg] = cls
-        egap_s[msg] = np.maximum(ebytes_s[msg] - 1.0, 0.0) * G[cls]
+    # -- gap decomposition (bandwidth scenarios): recorded shares are
+    #    authoritative, unknown shares reconstruct from params ------------
+    egap_o, egclass_o = edge_gap_shares(g, params)
+    egap_s = egap_o[eorder]
+    egclass_s = egclass_o[eorder]
 
     # -- vertex → (level, offset) flat slots --------------------------------
     vslot = np.arange(nv, dtype=np.int64) - v_ptr[vlvl_s]     # offset of vorder[i]
@@ -253,3 +269,216 @@ def compile_plan(g: ExecutionGraph, params: Optional[LogGPS] = None,
         egap=egap_p, egclass=egclass_p, elat=elat_p,
         nv=nv, nclass=nc, nlevels=nlevels,
     )
+
+
+# -- multi-graph packing ------------------------------------------------------
+
+def repad_plan(c: CompiledPlan, nlv_p: int, Vmax: int, Dmax: int,
+               Emax: int) -> CompiledPlan:
+    """Re-lay a compiled plan onto a larger (nlv_p, Vmax, Dmax, Emax) envelope.
+
+    Flat slots are recomputed for the new Vmax (``slot = lv·Vmax + offset``;
+    level-local offsets are envelope-independent), so the repadded plan's
+    forward pass produces *identical* floating-point results — padding only
+    adds masked −∞ candidates, and max-reductions are exact.
+    """
+    nlv0, V0, D0 = c.vsrc.shape
+    E0 = c.esrc.shape[1]
+    if (nlv_p, Vmax, Dmax, Emax) == (nlv0, V0, D0, E0):
+        return c
+    if nlv_p < nlv0 or Vmax < V0 or Dmax < D0 or Emax < E0:
+        raise ValueError(f"target envelope {(nlv_p, Vmax, Dmax, Emax)} smaller "
+                         f"than plan's {(nlv0, V0, D0, E0)}")
+    dummy0, dummy1 = c.flat_dummy, nlv_p * Vmax
+
+    def remap_slots(a):
+        """Old flat slots → new flat slots (pad slots → new dummy)."""
+        lv, off = a // V0, a % V0
+        return np.where(a == dummy0, dummy1, lv * Vmax + off).astype(np.int32)
+
+    vsrc = np.full((nlv_p, Vmax, Dmax), dummy1, dtype=np.int32)
+    vsrc[:nlv0, :V0, :D0] = remap_slots(c.vsrc.astype(np.int64))
+    vmaskd = np.zeros((nlv_p, Vmax, Dmax), dtype=bool)
+    vmaskd[:nlv0, :V0, :D0] = c.vmaskd
+
+    def grow(a, shape, fill=0.0):
+        out = np.full(shape, fill, dtype=a.dtype)
+        out[tuple(slice(0, s) for s in a.shape)] = a
+        return out
+
+    nc = c.nclass
+    vconst = grow(c.vconst, (nlv_p, Vmax, Dmax))
+    vgap = grow(c.vgap, (nlv_p, Vmax, Dmax))
+    vgclass = grow(c.vgclass, (nlv_p, Vmax, Dmax))
+    vlat = grow(c.vlat, (nlv_p, Vmax, Dmax, nc))
+    vlat_sum = grow(c.vlat_sum, (nlv_p, Vmax, Dmax))
+    vcost_lv = grow(c.vcost_lv, (nlv_p, Vmax))
+
+    valid_flat = np.zeros(dummy1 + 1, dtype=bool)
+    vert_of_slot = np.full(dummy1 + 1, c.nv, dtype=np.int32)
+    old = np.nonzero(c.valid_flat[:dummy0])[0]
+    new = (old // V0) * Vmax + old % V0
+    valid_flat[new] = True
+    vert_of_slot[new] = c.vert_of_slot[old]
+
+    esrc = np.full((nlv_p, Emax), dummy1, dtype=np.int32)
+    esrc[:nlv0, :E0] = remap_slots(c.esrc.astype(np.int64))
+    edstl = np.full((nlv_p, Emax), Vmax, dtype=np.int32)
+    edstl[:nlv0, :E0] = np.where(c.emask, c.edstl, Vmax)
+    emask = np.zeros((nlv_p, Emax), dtype=bool)
+    emask[:nlv0, :E0] = c.emask
+    econst = grow(c.econst, (nlv_p, Emax))
+    egap = grow(c.egap, (nlv_p, Emax))
+    egclass = grow(c.egclass, (nlv_p, Emax))
+    elat = grow(c.elat, (nlv_p, Emax, nc))
+
+    return CompiledPlan(
+        vsrc=vsrc, vmaskd=vmaskd, vconst=vconst, vgap=vgap, vgclass=vgclass,
+        vlat=vlat, vlat_sum=vlat_sum, vcost_lv=vcost_lv,
+        valid_flat=valid_flat, vert_of_slot=vert_of_slot,
+        esrc=esrc, edstl=edstl, emask=emask, econst=econst,
+        egap=egap, egclass=egclass, elat=elat,
+        nv=c.nv, nclass=nc, nlevels=c.nlevels,
+    )
+
+
+@dataclasses.dataclass
+class MultiPlan:
+    """G compiled plans stacked on a leading graph axis (common envelope).
+
+    Field names and meanings mirror :class:`CompiledPlan` with one extra
+    leading dimension; scalar per-plan metadata becomes per-graph arrays.
+    One MultiPlan = one XLA program for the whole variant group.
+    """
+
+    vsrc: np.ndarray       # [G, nlv_p, Vmax, Dmax] int32
+    vmaskd: np.ndarray     # [G, nlv_p, Vmax, Dmax] bool
+    vconst: np.ndarray
+    vgap: np.ndarray
+    vgclass: np.ndarray
+    vlat: np.ndarray       # [G, nlv_p, Vmax, Dmax, nclass]
+    vlat_sum: np.ndarray
+    vcost_lv: np.ndarray   # [G, nlv_p, Vmax]
+    valid_flat: np.ndarray  # [G, nlv_p·Vmax + 1]
+    vert_of_slot: np.ndarray
+    esrc: np.ndarray       # [G, nlv_p, Emax]
+    edstl: np.ndarray
+    emask: np.ndarray
+    econst: np.ndarray
+    egap: np.ndarray
+    egclass: np.ndarray
+    elat: np.ndarray       # [G, nlv_p, Emax, nclass]
+    nv: np.ndarray         # [G] int64
+    nlevels: np.ndarray    # [G] int64
+    nclass: int
+    plan_hashes: tuple     # member CompiledPlan content hashes, in order
+
+    @property
+    def G(self) -> int:
+        return int(self.vsrc.shape[0])
+
+    @property
+    def Vmax(self) -> int:
+        return int(self.vsrc.shape[2])
+
+    @property
+    def shape_key(self) -> tuple:
+        return self.vsrc.shape + self.esrc.shape[2:] + (self.nclass,)
+
+    def dense_indicator(self, neg: float = -1e30) -> np.ndarray:
+        """[G, nlv_p, Vmax, Emax] 0/−inf scatter matrices (Pallas backend)."""
+        G, nlv, Emax = self.esrc.shape
+        A = np.full((G, nlv, self.Vmax, Emax), neg, dtype=np.float32)
+        gi, lv, sl = np.nonzero(self.emask)
+        A[gi, lv, self.edstl[gi, lv, sl], sl] = 0.0
+        return A
+
+    def dense_bytes(self) -> int:
+        G, nlv, Emax = self.esrc.shape
+        return G * nlv * self.Vmax * Emax * 4
+
+    def content_hash(self) -> str:
+        """Order-sensitive hash over the member plans + envelope."""
+        h = getattr(self, "_hash", None)
+        if h is None:
+            sha = hashlib.sha1(b"multi-plan-v1")
+            sha.update(repr(self.shape_key).encode())
+            for ph in self.plan_hashes:
+                sha.update(ph.encode())
+            h = sha.hexdigest()
+            object.__setattr__(self, "_hash", h)
+        return h
+
+
+def pack_plans(plans: Sequence[CompiledPlan]) -> MultiPlan:
+    """Pad compiled plans to their common envelope and stack on a graph axis.
+
+    All plans must share ``nclass`` (the scenario row width).  The envelope is
+    the per-dimension max — already power-of-two bucketed, so packing never
+    invents new shapes beyond what the largest member compiled to.
+    """
+    if not plans:
+        raise ValueError("pack_plans needs at least one plan")
+    nc = plans[0].nclass
+    if any(p.nclass != nc for p in plans):
+        raise ValueError("cannot pack plans with different latency-class "
+                         "counts into one MultiPlan")
+    nlv = max(p.vsrc.shape[0] for p in plans)
+    Vm = max(p.vsrc.shape[1] for p in plans)
+    Dm = max(p.vsrc.shape[2] for p in plans)
+    Em = max(p.esrc.shape[1] for p in plans)
+    hashes = tuple(p.content_hash() for p in plans)
+    padded = [repad_plan(p, nlv, Vm, Dm, Em) for p in plans]
+
+    def stack(name):
+        return np.stack([getattr(p, name) for p in padded])
+
+    return MultiPlan(
+        vsrc=stack("vsrc"), vmaskd=stack("vmaskd"), vconst=stack("vconst"),
+        vgap=stack("vgap"), vgclass=stack("vgclass"), vlat=stack("vlat"),
+        vlat_sum=stack("vlat_sum"), vcost_lv=stack("vcost_lv"),
+        valid_flat=stack("valid_flat"), vert_of_slot=stack("vert_of_slot"),
+        esrc=stack("esrc"), edstl=stack("edstl"), emask=stack("emask"),
+        econst=stack("econst"), egap=stack("egap"), egclass=stack("egclass"),
+        elat=stack("elat"),
+        nv=np.asarray([p.nv for p in plans], dtype=np.int64),
+        nlevels=np.asarray([p.nlevels for p in plans], dtype=np.int64),
+        nclass=nc, plan_hashes=hashes,
+    )
+
+
+def group_plans(plans: Sequence[CompiledPlan],
+                max_inflation: float = 64.0) -> list:
+    """Partition plan indices into packable groups (the "shape buckets").
+
+    Plans pack together when they share ``nclass`` and no member's padded
+    tensor volume inflates beyond ``max_inflation``× its natural size (so a
+    toy graph never rides a 156M-event envelope).  Returns a list of index
+    lists covering ``range(len(plans))`` in order; a variant study runs one
+    compiled call per returned group.
+    """
+    def volume(shape4):
+        nlv, V, D, E = shape4
+        return nlv * V * max(D, E)
+
+    groups: list = []
+    meta: list = []           # (nclass, envelope shape4) per group
+    for i, p in enumerate(plans):
+        nat = p.vsrc.shape + (p.esrc.shape[1],)
+        placed = False
+        for gidx, (nc, env) in enumerate(meta):
+            if nc != p.nclass:
+                continue
+            new_env = tuple(max(a, b) for a, b in zip(env, nat))
+            members = [plans[j].vsrc.shape + (plans[j].esrc.shape[1],)
+                       for j in groups[gidx]] + [nat]
+            if all(volume(new_env) <= max_inflation * volume(m)
+                   for m in members):
+                groups[gidx].append(i)
+                meta[gidx] = (nc, new_env)
+                placed = True
+                break
+        if not placed:
+            groups.append([i])
+            meta.append((p.nclass, nat))
+    return groups

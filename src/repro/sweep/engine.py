@@ -39,8 +39,9 @@ import numpy as np
 
 from repro.core.loggps import LogGPS
 
-from .cache import DEFAULT_CACHE, SweepCache, result_key
-from .compile import CompiledPlan, _bucket, compile_plan
+from .cache import DEFAULT_CACHE, SweepCache, multi_result_key, result_key
+from .compile import (CompiledPlan, MultiPlan, _bucket, compile_plan,
+                      pack_plans)
 from .scenarios import ScenarioBatch, latency_grid
 
 BIG = 1e30          # matches kernels.maxplus NEG_INF magnitude
@@ -73,13 +74,16 @@ def _jax():
     return jax
 
 
-def _segment_forward(want_lam: bool):
-    """Build the jit'd vmapped gather/max forward (cached per flag).
+def _make_segment_one(want_lam: bool):
+    """The single-(graph, scenario) gather/max forward.
 
     Vertices live at level-major flat slots, each owning a padded row of
     in-edges, so one level is a gather → max over the in-edge axis →
     ``dynamic_update_slice`` of the level's slot block — scatter-free, which
-    is what makes the sweep fast on CPU/TPU alike.
+    is what makes the sweep fast on CPU/TPU alike.  ``vmap``'d over the
+    scenario axis (and, for :class:`MultiSweepEngine`, the graph axis:
+    padding only adds masked −∞ candidates and max is exact, so a packed
+    graph's outputs are bit-identical to its solo run).
     """
     jax = _jax()
     jnp = jax.numpy
@@ -111,16 +115,20 @@ def _segment_forward(want_lam: bool):
                 best = jnp.max(jnp.where(hit, cs, -BIG), axis=1)
                 sel = hit & (cs >= best[:, None] - ATOL)
                 chosen = jnp.max(jnp.where(sel, didx, -1), axis=1)   # [Vmax]
-                chc = jnp.maximum(chosen, 0)[:, None]
-                srcv = jnp.take_along_axis(vsrc[lv], chc, axis=1)[:, 0]
+                # one-hot of the chosen in-edge ordinal; masked reductions
+                # instead of take_along_axis (gathers lower poorly under the
+                # extra graph-axis vmap; Dmax is small, so a reduce is cheap)
+                onehot = sel & (didx[None, :] == chosen[:, None])
+                srcv = jnp.max(jnp.where(onehot, vsrc[lv], 0), axis=1)
                 has = (chosen >= 0)[:, None]
                 sl_new = jnp.where(
                     has, slope[srcv]
-                    + jnp.take_along_axis(vlat[lv], chc[:, :, None],
-                                          axis=1)[:, 0], 0.0)
+                    + jnp.sum(jnp.where(onehot[:, :, None], vlat[lv], 0.0),
+                              axis=1), 0.0)
                 ss_new = jnp.where(
                     has[:, 0], ssum[srcv]
-                    + jnp.take_along_axis(vlat_sum[lv], chc, axis=1)[:, 0], 0.0)
+                    + jnp.sum(jnp.where(onehot, vlat_sum[lv], 0.0), axis=1),
+                    0.0)
                 off = lv * Vmax
                 return (dus(t_end, ts + vcost_lv[lv], (off,)),
                         dus(slope, sl_new, (off, 0)),
@@ -146,8 +154,27 @@ def _segment_forward(want_lam: bool):
         T = jnp.max(jnp.where(valid_flat, t_end, -BIG))
         return T, jnp.zeros((vlat.shape[3],))
 
-    batched = jax.vmap(one, in_axes=(None,) * 10 + (0, 0))
-    return jax.jit(batched)
+    return one
+
+
+def _segment_forward(want_lam: bool):
+    """jit'd forward over one graph × S scenarios → T [S], λ [S, nc]."""
+    jax = _jax()
+    one = _make_segment_one(want_lam)
+    return jax.jit(jax.vmap(one, in_axes=(None,) * 10 + (0, 0)))
+
+
+def _segment_forward_multi(want_lam: bool):
+    """jit'd forward over G graphs × S scenarios → T [G, S], λ [G, S, nc].
+
+    Inner vmap rides scenarios, outer vmap rides the MultiPlan's graph axis
+    (every plan tensor gains a leading G dim, and scenarios are per-graph
+    [G, S, ·] so variant groups with different base points batch together).
+    """
+    jax = _jax()
+    one = _make_segment_one(want_lam)
+    over_s = jax.vmap(one, in_axes=(None,) * 10 + (0, 0))
+    return jax.jit(jax.vmap(over_s, in_axes=(0,) * 12))
 
 
 def _dense_forward():
@@ -181,14 +208,76 @@ def _dense_forward():
     return jax.jit(fwd)
 
 
+def _dense_forward_multi():
+    """Values-only multi-graph forward: the batched Pallas (max,+) kernel
+    runs every packed graph's level scatter in one launch (graphs on the
+    kernel's outer grid axis, scenarios on the 128-wide lane axis)."""
+    jax = _jax()
+    jnp = jax.numpy
+    from repro.kernels.maxplus.ops import maxplus_matvec_batched
+
+    def fwd(A, esrc, emask, econst, egap, egclass, elat, vcost_lv,
+            valid_flat, Lmat, GSmat):
+        G, nlv, Emax = esrc.shape
+        Vmax = vcost_lv.shape[2]
+        S = Lmat.shape[1]
+        nflat = valid_flat.shape[1]
+
+        def body(lv, t_end):
+            # gse[g, e, s] = GSmat[g, s, egclass[g, lv, e]]
+            gse = jnp.take_along_axis(
+                jnp.swapaxes(GSmat, 1, 2), egclass[:, lv][:, :, None], axis=1)
+            w = (econst[:, lv][:, :, None]
+                 + egap[:, lv][:, :, None] * (gse - 1.0)
+                 + jnp.einsum("gec,gsc->ges", elat[:, lv], Lmat))
+            cand = jnp.take_along_axis(t_end, esrc[:, lv][:, :, None], axis=1) + w
+            cand = jnp.where(emask[:, lv][:, :, None], cand,
+                             -BIG).astype(jnp.float32)
+            ts = maxplus_matvec_batched(A[:, lv], cand)       # [G, Vmax, S]
+            ts = jnp.maximum(ts, 0.0)
+            return jax.lax.dynamic_update_slice(
+                t_end, ts + vcost_lv[:, lv][:, :, None], (0, lv * Vmax, 0))
+
+        t_end = jax.lax.fori_loop(0, nlv, body,
+                                  jnp.zeros((G, nflat, S), jnp.float32))
+        return jnp.max(jnp.where(valid_flat[:, :, None], t_end, -BIG), axis=1)
+
+    return jax.jit(fwd)
+
+
 _FWD_CACHE: dict = {}
 
 
-def _get_forward(kind: str, want_lam: bool = False):
-    key = (kind, want_lam)
+def _stage_arrays(plan, kind: str, max_dense_bytes: int) -> tuple:
+    """Device-stage a plan's tensors for one backend.  CompiledPlan and
+    MultiPlan share field names (the latter just carries a leading graph
+    axis), so both engines stage through this one helper."""
+    jnp = _jax().numpy
+    if kind == "segment":
+        return tuple(jnp.asarray(a) for a in (
+            plan.vsrc, plan.vmaskd, plan.vconst, plan.vgap, plan.vgclass,
+            plan.vlat, plan.vlat_sum, plan.vcost_lv, plan.valid_flat,
+            plan.vert_of_slot))
+    if plan.dense_bytes() > max_dense_bytes:
+        raise ValueError(
+            f"dense pallas backend needs {plan.dense_bytes() >> 20} MiB "
+            f"of indicator tensors (> {max_dense_bytes >> 20}); "
+            "use backend='segment'")
+    return tuple(jnp.asarray(a) for a in (
+        plan.dense_indicator(-BIG), plan.esrc, plan.emask,
+        plan.econst.astype(np.float32), plan.egap.astype(np.float32),
+        plan.egclass, plan.elat.astype(np.float32),
+        plan.vcost_lv.astype(np.float32), plan.valid_flat))
+
+
+def _get_forward(kind: str, want_lam: bool = False, multi: bool = False):
+    key = (kind, want_lam, multi)
     if key not in _FWD_CACHE:
-        _FWD_CACHE[key] = (_segment_forward(want_lam) if kind == "segment"
-                           else _dense_forward())
+        if kind == "segment":
+            fn = (_segment_forward_multi if multi else _segment_forward)(want_lam)
+        else:
+            fn = (_dense_forward_multi if multi else _dense_forward)()
+        _FWD_CACHE[key] = fn
     return _FWD_CACHE[key]
 
 
@@ -216,31 +305,15 @@ class SweepEngine:
         self.params = params
         self.backend = backend
         self.cache = cache
+        self.calls = 0            # compiled-program dispatches (cache hits excluded)
         self._dev: dict = {}
 
     # -- device-array staging (inside enable_x64 so float64 survives) -------
     def _arrays(self, kind: str):
-        if kind in self._dev:
-            return self._dev[kind]
-        jnp = _jax().numpy
-        c = self.compiled
-        if kind == "segment":
-            arrs = tuple(jnp.asarray(a) for a in (
-                c.vsrc, c.vmaskd, c.vconst, c.vgap, c.vgclass,
-                c.vlat, c.vlat_sum, c.vcost_lv, c.valid_flat, c.vert_of_slot))
-        else:
-            if c.dense_bytes() > self.MAX_DENSE_BYTES:
-                raise ValueError(
-                    f"dense pallas backend needs {c.dense_bytes() >> 20} MiB "
-                    f"of indicator tensors (> {self.MAX_DENSE_BYTES >> 20}); "
-                    "use backend='segment'")
-            arrs = tuple(jnp.asarray(a) for a in (
-                c.dense_indicator(-BIG), c.esrc, c.emask,
-                c.econst.astype(np.float32), c.egap.astype(np.float32),
-                c.egclass, c.elat.astype(np.float32),
-                c.vcost_lv.astype(np.float32), c.valid_flat))
-        self._dev[kind] = arrs
-        return arrs
+        if kind not in self._dev:
+            self._dev[kind] = _stage_arrays(self.compiled, kind,
+                                            self.MAX_DENSE_BYTES)
+        return self._dev[kind]
 
     def run(self, scenarios: ScenarioBatch, compute_lam: bool = True,
             backend: Optional[str] = None,
@@ -271,7 +344,18 @@ class SweepEngine:
                     lam=None if hit.lam is None else hit.lam.copy(),
                     rho=None if hit.rho is None else hit.rho.copy(),
                     scenarios=scenarios, from_cache=True)
+        res = self._run_uncached(scenarios, compute_lam, backend)
+        if cache is not None:
+            # store a private copy: the caller may mutate the returned
+            # arrays in place, which must never poison later cache hits
+            cache.put(key, dataclasses.replace(
+                res, T=res.T.copy(),
+                lam=None if res.lam is None else res.lam.copy(),
+                rho=None if res.rho is None else res.rho.copy()))
+        return res
 
+    def _run_uncached(self, scenarios: ScenarioBatch, compute_lam: bool,
+                      backend: str) -> SweepResult:
         S = scenarios.S
         Sp = _bucket(S, lo=4)
         Lmat = np.repeat(scenarios.L[-1:], Sp, axis=0)
@@ -296,6 +380,7 @@ class SweepEngine:
                                jnp.asarray(GSmat, dtype=jnp.float32)))
             T = T.astype(np.float64)[:S]
             lam = None
+        self.calls += 1
 
         if compute_lam:
             rho = np.where(T[:, None] > 0,
@@ -303,11 +388,11 @@ class SweepEngine:
                            0.0)
         else:
             lam, rho = None, None
-        res = SweepResult(T=T, lam=lam, rho=rho, scenarios=scenarios,
-                          backend=backend)
-        if cache is not None:
-            cache.put(key, res)
-        return res
+        # np.array: np.asarray of a jax buffer is a read-only view; results
+        # must be writable (and consistent with the writable cache-hit copies)
+        return SweepResult(T=np.array(T),
+                           lam=None if lam is None else np.array(lam),
+                           rho=rho, scenarios=scenarios, backend=backend)
 
     def latency_curve(self, deltas: Sequence[float], cls: int = 0,
                       params: Optional[LogGPS] = None,
@@ -317,6 +402,216 @@ class SweepEngine:
             raise ValueError("engine has no params; pass params=")
         return self.run(latency_grid(p, deltas, cls=cls),
                         compute_lam=compute_lam)
+
+
+# -- multi-graph engine: (graph × scenario) in one compiled program -----------
+
+@dataclasses.dataclass
+class MultiSweepResult:
+    """Per-graph sweep tensors: row g is graph g's :class:`SweepResult`."""
+
+    T: np.ndarray                    # [G, S] µs
+    lam: Optional[np.ndarray]        # [G, S, nclass] or None
+    rho: Optional[np.ndarray]        # [G, S, nclass] or None
+    scenarios: list                  # per-graph ScenarioBatch
+    names: tuple
+    backend: str
+    from_cache: bool = False
+
+    @property
+    def G(self) -> int:
+        return int(self.T.shape[0])
+
+    @property
+    def S(self) -> int:
+        return int(self.T.shape[1])
+
+    def __getitem__(self, key) -> SweepResult:
+        """Graph g's slice as a plain :class:`SweepResult` (by index or name)."""
+        g = self.names.index(key) if isinstance(key, str) else int(key)
+        return SweepResult(
+            T=self.T[g].copy(),
+            lam=None if self.lam is None else self.lam[g].copy(),
+            rho=None if self.rho is None else self.rho[g].copy(),
+            scenarios=self.scenarios[g], backend=self.backend,
+            from_cache=self.from_cache)
+
+    def split(self) -> dict:
+        """{name: SweepResult} — the ``sweep_variants`` return shape."""
+        return {name: self[i] for i, name in enumerate(self.names)}
+
+    def rank(self, reduce: str = "mean") -> list:
+        """Variants ordered best-first by makespan over the grid.
+
+        ``reduce``: 'mean' | 'max' | 'final' (last scenario row — e.g. the
+        worst latency point of an ascending grid).
+        """
+        if reduce == "mean":
+            obj = self.T.mean(axis=1)
+        elif reduce == "max":
+            obj = self.T.max(axis=1)
+        elif reduce == "final":
+            obj = self.T[:, -1]
+        else:
+            raise ValueError(f"unknown reduce {reduce!r}")
+        order = np.argsort(obj, kind="stable")
+        return [(self.names[i], float(obj[i])) for i in order]
+
+
+class MultiSweepEngine:
+    """Evaluate G packed graphs × S scenarios in one compiled program.
+
+    The multi-graph analog of :class:`SweepEngine`: graphs compile once into
+    a :class:`~repro.sweep.compile.MultiPlan` (common padded envelope) and
+    every ``run`` is a single jit dispatch over the (graph, scenario) grid —
+    a whole collective/topology variant study per call.
+
+    >>> eng = MultiSweepEngine([(v.graph, v.params) for v in variants],
+    ...                        names=[v.name for v in variants])
+    >>> res = eng.run(sweep.latency_grid(params, deltas))   # broadcast grid
+    >>> res.T.shape, res["algo=ring"].T.shape               # [G, S], [S]
+    """
+
+    MAX_DENSE_BYTES = SweepEngine.MAX_DENSE_BYTES
+
+    def __init__(self, graphs_params=None, names=None,
+                 backend: str = "segment",
+                 multi: Optional[MultiPlan] = None,
+                 cache: Optional[SweepCache] = DEFAULT_CACHE):
+        if multi is None:
+            if not graphs_params:
+                raise ValueError("need (graph, params) pairs or a MultiPlan")
+            multi = pack_plans([compile_plan(g, p) for g, p in graphs_params])
+        if backend not in ("segment", "pallas"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self.multi = multi
+        self.params = ([p for _, p in graphs_params]
+                       if graphs_params else [None] * multi.G)
+        self.names = tuple(names) if names else tuple(
+            f"g{i}" for i in range(multi.G))
+        if len(self.names) != multi.G:
+            raise ValueError(f"{len(self.names)} names for {multi.G} graphs")
+        self.backend = backend
+        self.cache = cache
+        self.calls = 0
+        self._dev: dict = {}
+
+    @classmethod
+    def from_variants(cls, variants, **kw):
+        """Build from :class:`~repro.sweep.scenarios.GraphVariant`\\ s (which
+        must share one latency-class count — pre-group with
+        :func:`~repro.sweep.compile.group_plans` otherwise)."""
+        return cls([(v.graph, v.params) for v in variants],
+                   names=[v.name for v in variants], **kw)
+
+    def _arrays(self, kind: str):
+        if kind not in self._dev:
+            self._dev[kind] = _stage_arrays(self.multi, kind,
+                                            self.MAX_DENSE_BYTES)
+        return self._dev[kind]
+
+    def _batches(self, scenarios) -> list:
+        """Normalize to one ScenarioBatch per graph (broadcast a single one)."""
+        if isinstance(scenarios, ScenarioBatch):
+            batches = [scenarios] * self.multi.G
+        else:
+            batches = list(scenarios)
+        if len(batches) != self.multi.G:
+            raise ValueError(f"{len(batches)} scenario batches for "
+                             f"{self.multi.G} graphs")
+        S = batches[0].S
+        for b in batches:
+            if b.nclass != self.multi.nclass:
+                raise ValueError(f"scenario batch has {b.nclass} classes, "
+                                 f"packed graphs have {self.multi.nclass}")
+            if b.S != S:
+                raise ValueError("per-graph scenario batches must share S "
+                                 f"(got {b.S} vs {S})")
+        return batches
+
+    def run(self, scenarios, compute_lam: bool = True,
+            backend: Optional[str] = None,
+            use_cache: bool = True) -> MultiSweepResult:
+        """One compiled call → :class:`MultiSweepResult` over every graph.
+
+        ``scenarios``: one :class:`ScenarioBatch` (broadcast to all graphs)
+        or a per-graph sequence with equal S (variant studies whose base
+        parameter points differ).
+        """
+        backend = backend or self.backend
+        if backend not in ("segment", "pallas"):
+            raise ValueError(f"unknown backend {backend!r}")
+        if backend == "pallas" and compute_lam:
+            return self.run(scenarios, compute_lam=True, backend="segment",
+                            use_cache=use_cache)
+        batches = self._batches(scenarios)
+        cache = self.cache if use_cache else None
+        key = None
+        if cache is not None:
+            key = multi_result_key(self.multi.content_hash(), batches,
+                                   compute_lam, backend)
+            hit = cache.get(key)
+            if hit is not None:
+                # copy the arrays (callers may mutate results in place) and
+                # restamp names: the key is content-addressed, so the hit
+                # may come from an engine that named the same plans
+                # differently
+                return dataclasses.replace(
+                    hit, T=hit.T.copy(),
+                    lam=None if hit.lam is None else hit.lam.copy(),
+                    rho=None if hit.rho is None else hit.rho.copy(),
+                    scenarios=batches, names=self.names, from_cache=True)
+
+        G, nc = self.multi.G, self.multi.nclass
+        S = batches[0].S
+        Sp = _bucket(S, lo=4)
+        Lmat = np.empty((G, Sp, nc))
+        GSmat = np.empty((G, Sp, nc))
+        for i, b in enumerate(batches):
+            Lmat[i, :S] = b.L
+            Lmat[i, S:] = b.L[-1]
+            GSmat[i, :S] = b.gscale
+            GSmat[i, S:] = b.gscale[-1]
+
+        if backend == "segment":
+            from jax.experimental import enable_x64
+            with enable_x64():
+                jnp = _jax().numpy
+                arrs = self._arrays("segment")
+                fwd = _get_forward("segment", compute_lam, multi=True)
+                T, lam = fwd(*arrs, jnp.asarray(Lmat), jnp.asarray(GSmat))
+                T = np.asarray(T)[:, :S]
+                lam = np.asarray(lam)[:, :S]
+        elif backend == "pallas":
+            jnp = _jax().numpy
+            arrs = self._arrays("pallas")
+            fwd = _get_forward("pallas", multi=True)
+            T = np.asarray(fwd(*arrs, jnp.asarray(Lmat, dtype=jnp.float32),
+                               jnp.asarray(GSmat, dtype=jnp.float32)))
+            T = T.astype(np.float64)[:, :S]
+            lam = None
+        self.calls += 1
+
+        if compute_lam:
+            Lall = np.stack([b.L for b in batches])            # [G, S, nc]
+            rho = np.where(T[:, :, None] > 0,
+                           Lall * lam / np.maximum(T[:, :, None], 1e-300),
+                           0.0)
+        else:
+            lam, rho = None, None
+        # np.array: np.asarray of a jax buffer is a read-only view; results
+        # must be writable (and consistent with the writable cache-hit copies)
+        res = MultiSweepResult(T=np.array(T),
+                               lam=None if lam is None else np.array(lam),
+                               rho=rho, scenarios=batches,
+                               names=self.names, backend=backend)
+        if cache is not None:
+            # store a private copy so caller mutations never poison hits
+            cache.put(key, dataclasses.replace(
+                res, T=res.T.copy(),
+                lam=None if res.lam is None else res.lam.copy(),
+                rho=None if res.rho is None else res.rho.copy()))
+        return res
 
 
 # -- lockstep-batched bisections (the dag.py loops, one engine call/round) ----

@@ -169,17 +169,61 @@ def topology_variants(factory: Callable[[topo_mod.Topology, LogGPS],
 
 def sweep_variants(variants: Sequence[GraphVariant],
                    batch_of: Callable[[GraphVariant], ScenarioBatch],
-                   backend: str = "segment", compute_lam: bool = True) -> dict:
-    """Run the batched engine once per graph variant → {name: SweepResult}.
+                   backend: str = "segment", compute_lam: bool = True,
+                   batched: bool = True, max_inflation: float = 64.0,
+                   stats: Optional[dict] = None, cache="default") -> dict:
+    """Run the whole variant study batched → {name: SweepResult}.
 
     ``batch_of(variant)`` builds the tensor-batchable sub-grid for that
-    variant (classes can differ across topologies, so the batch is per
-    variant).
-    """
-    from .engine import SweepEngine  # local import to avoid cycle
+    variant (base points can differ per variant; latency-class counts can
+    differ across topologies).
 
-    out = {}
-    for v in variants:
-        eng = SweepEngine(v.graph, v.params, backend=backend)
-        out[v.name] = eng.run(batch_of(v), compute_lam=compute_lam)
-    return out
+    With ``batched=True`` (default) variants are grouped into shape buckets
+    (:func:`~repro.sweep.compile.group_plans`: same class count, bounded
+    padding inflation), each bucket packs into one
+    :class:`~repro.sweep.compile.MultiPlan`, and the study costs one
+    compiled call *per bucket* — not one per variant.  ``batched=False``
+    restores the per-variant loop (one engine + call per graph).
+
+    ``stats``, if given, is filled with {'groups': …, 'calls': …} so callers
+    can assert how many compiled dispatches the study cost.
+
+    ``cache``: a :class:`~repro.sweep.cache.SweepCache`, ``None`` to
+    disable result memoization (e.g. benchmarks that count compiled
+    dispatches), or the default shared cache.
+    """
+    from .cache import DEFAULT_CACHE
+    from .compile import compile_plan, group_plans, pack_plans
+    from .engine import MultiSweepEngine, SweepEngine  # avoid cycle
+
+    if cache == "default":
+        cache = DEFAULT_CACHE
+
+    if not batched:
+        out = {}
+        calls = 0
+        for v in variants:
+            eng = SweepEngine(v.graph, v.params, backend=backend,
+                              cache=cache)
+            out[v.name] = eng.run(batch_of(v), compute_lam=compute_lam)
+            calls += eng.calls
+        if stats is not None:
+            stats.update(groups=len(variants), calls=calls)
+        return out
+
+    plans = [compile_plan(v.graph, v.params) for v in variants]
+    groups = group_plans(plans, max_inflation=max_inflation)
+    results: dict = {}
+    calls = 0
+    for idx in groups:
+        eng = MultiSweepEngine(
+            multi=pack_plans([plans[i] for i in idx]),
+            names=[variants[i].name for i in idx], backend=backend,
+            cache=cache)
+        res = eng.run([batch_of(variants[i]) for i in idx],
+                      compute_lam=compute_lam)
+        results.update(res.split())
+        calls += eng.calls
+    if stats is not None:
+        stats.update(groups=len(groups), calls=calls)
+    return {v.name: results[v.name] for v in variants}

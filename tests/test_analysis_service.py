@@ -1,0 +1,180 @@
+"""launch.analysis — warm-plan what-if service over the sweep stack.
+
+The contract: every query kind answers from warm compiled plans (engines
+are built once and reused), results agree with the direct core/sweep APIs,
+and the JSON-lines protocol survives malformed input (a bad request yields
+an ok=False response, never an exception).
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+
+from repro.core import dag, synth
+from repro.core.loggps import cluster_params
+from repro import sweep
+from repro.launch.analysis import (AnalysisRequest, AnalysisResponse,
+                                   AnalysisService, _demo_service)
+
+
+@pytest.fixture(scope="module")
+def svc():
+    p = cluster_params(L_us=3.0, o_us=5.0)
+    s = AnalysisService(default_deltas=(0.0, 10.0, 20.0))
+    for v in sweep.collective_variants(
+            lambda a: synth.allreduce_chain(8, 2, params=p, algo=a),
+            ["ring", "recursive_doubling"], p):
+        s.register(v)
+    return s
+
+
+def test_register_and_warm(svc):
+    assert svc.variant_names == ("algo=ring", "algo=recursive_doubling")
+    with pytest.raises(ValueError, match="already registered"):
+        svc.register(svc._variants["algo=ring"])
+    info = svc.warm()
+    assert info["variants"] == 2
+    assert info["buckets"] >= 1
+    assert sum(info["bucket_sizes"]) == 2
+
+
+def test_curve_matches_direct_engine(svc):
+    resp = svc.handle(AnalysisRequest(kind="curve", variant="algo=ring",
+                                      deltas=[0.0, 15.0, 30.0]))
+    assert resp.ok, resp.error
+    v = svc._variants["algo=ring"]
+    ref = sweep.SweepEngine(v.graph, v.params, cache=None).run(
+        sweep.latency_grid(v.params, [0.0, 15.0, 30.0]))
+    np.testing.assert_array_equal(resp.payload["T"], ref.T)
+    np.testing.assert_array_equal(resp.payload["lam"], ref.lam[:, 0])
+    # the service's engine stays warm: same query again is a cache hit
+    resp2 = svc.handle(AnalysisRequest(kind="curve", variant="algo=ring",
+                                       deltas=[0.0, 15.0, 30.0]))
+    assert resp2.payload["from_cache"]
+
+
+def test_rank_orders_variants_one_call_per_bucket(svc):
+    resp = svc.handle(AnalysisRequest(kind="rank", deltas=[0.0, 25.0, 50.0],
+                                      reduce="final"))
+    assert resp.ok, resp.error
+    # under rising latency, recursive doubling beats ring (Fig 10)
+    assert resp.payload["best"] == "algo=recursive_doubling"
+    assert len(resp.payload["ranking"]) == 2
+    assert resp.payload["compiled_calls"] <= len(svc.variant_names)
+
+
+def test_tolerance_matches_scalar(svc):
+    resp = svc.handle(AnalysisRequest(kind="tolerance",
+                                      variant="algo=ring",
+                                      degradations=[0.05]))
+    assert resp.ok, resp.error
+    v = svc._variants["algo=ring"]
+    ref = dag.tolerance(v.graph, v.params, 0.05)
+    assert resp.payload["tolerance"][0.05] == pytest.approx(ref, rel=1e-6)
+
+
+def test_bandwidth_query(svc):
+    resp = svc.handle(AnalysisRequest(kind="bandwidth", variant="algo=ring",
+                                      gscales=[1.0, 4.0]))
+    assert resp.ok, resp.error
+    T = np.asarray(resp.payload["T"])
+    assert T[1] > T[0]                  # 4× slower links ⇒ longer step
+
+
+def test_placement_query():
+    """Placement suggestions ride the same service (two-tier Φ spec)."""
+    from repro.core.graph import GraphBuilder
+    from repro.core.loggps import LogGPS
+    zero = LogGPS(L=(0.0,), G=(0.0,), o=0.5, S=1e18)
+    b = GraphBuilder(4, 1)
+    for _ in range(4):
+        b.add_calc(0, 1.0)
+        b.add_message(0, 1, 65536.0, zero)
+        b.add_message(2, 3, 131072.0, zero)
+    s = AnalysisService()
+    s.register_graph("app", b.finalize(), zero)
+    resp = s.handle(AnalysisRequest(
+        kind="placement", topo={"pod": 2, "L_fast": 1.0, "L_slow": 20.0,
+                                "G_fast": 1e-5, "G_slow": 4e-5}))
+    assert resp.ok, resp.error
+    assert sorted(resp.payload["mapping"]) == [0, 1, 2, 3]
+    hist = resp.payload["history"]
+    assert hist[-1] <= hist[0]
+
+
+def test_placement_rejects_nonzero_link_params(svc):
+    """A variant registered with real link params would double-count every
+    message under Φ — the service must refuse, not answer wrongly."""
+    resp = svc.handle(AnalysisRequest(kind="placement"))
+    assert not resp.ok and "zero-link-cost" in resp.error
+
+
+def test_stats_and_unknown_kind(svc):
+    resp = svc.handle(AnalysisRequest(kind="stats"))
+    assert resp.ok and resp.payload["variants"] == list(svc.variant_names)
+    assert resp.payload["cache"]["hits"] >= 1    # the repeated curve query
+    bad = svc.handle(AnalysisRequest(kind="explode"))
+    assert not bad.ok and "unknown kind" in bad.error
+
+
+def test_query_errors_become_responses(svc):
+    """A failing query must produce ok=False, not take the loop down."""
+    resp = svc.handle(AnalysisRequest(kind="curve", variant="nope"))
+    assert not resp.ok and "unknown variant" in resp.error
+    # a rank over a class some variant lacks is an error, never a silent
+    # ranking of incomparable sweeps
+    resp = svc.handle(AnalysisRequest(kind="rank", cls=1))
+    assert not resp.ok and "out of range" in resp.error
+
+
+def test_json_lines_protocol(svc):
+    line = AnalysisRequest(kind="rank", deltas=[0.0, 30.0]).to_json()
+    out = json.loads(svc.handle_json(line))
+    assert out["ok"] and out["kind"] == "rank"
+    assert out["payload"]["best"] == "algo=recursive_doubling"
+    assert isinstance(out["payload"]["deltas"], list)   # ndarray serialized
+    # malformed JSON and unknown fields are survivable protocol errors
+    assert not json.loads(svc.handle_json("{not json"))["ok"]
+    bad = json.loads(svc.handle_json('{"kind": "rank", "frobnicate": 1}'))
+    assert not bad["ok"] and "frobnicate" in bad["error"]
+
+
+def test_response_serialization_roundtrip():
+    resp = AnalysisResponse(kind="curve", ok=True,
+                            payload={"T": np.asarray([1.0, 2.0]),
+                                     "n": np.int64(3)},
+                            elapsed_ms=1.5)
+    out = json.loads(resp.to_json())
+    assert out["payload"]["T"] == [1.0, 2.0] and out["payload"]["n"] == 3
+
+
+def test_unbounded_tolerance_serializes_as_strict_json():
+    """An unbounded tolerance (class never on the critical path) must come
+    back over the wire as the string "inf", never the bare Infinity token
+    that breaks strict JSON consumers."""
+    from repro.core.graph import GraphBuilder
+    from repro.core.loggps import LogGPS
+    p = LogGPS(L=(1.0,), G=(1e-6,), o=0.5, S=1e18)
+    b = GraphBuilder(2, 1)
+    for _ in range(3):                  # pure compute: no latency edges
+        b.add_calc(0, 10.0)
+        b.add_calc(1, 10.0)
+    s = AnalysisService()
+    s.register_graph("compute_only", b.finalize(), p)
+    line = s.handle_json('{"kind": "tolerance", "degradations": [0.01]}')
+    assert "Infinity" not in line
+    out = json.loads(line)
+    assert out["ok"], out["error"]
+    assert out["payload"]["tolerance"]["0.01"] == "inf"
+
+
+def test_demo_service_cli_rank():
+    """The --demo CLI study: 4 collective variants, rank query end-to-end."""
+    svc = _demo_service("segment")
+    assert len(svc.variant_names) == 4
+    resp = svc.handle(AnalysisRequest(kind="rank", deltas=[0.0, 40.0]))
+    assert resp.ok, resp.error
+    assert resp.payload["compiled_calls"] < 4   # packed, not per-variant

@@ -191,9 +191,12 @@ def test_result_cache(params):
     r2 = eng.run(batch)
     assert r2.from_cache and cache.stats.hits == 1
     np.testing.assert_array_equal(r1.T, r2.T)
-    # hits hand out copies: caller mutation must not poison the cache
+    ref = r1.T.copy()
+    # both miss and hit results are private copies: caller mutation of
+    # either must not poison the cache
+    r1.T[:] = -2.0
     r2.T[:] = -1.0
-    np.testing.assert_array_equal(eng.run(batch).T, r1.T)
+    np.testing.assert_array_equal(eng.run(batch).T, ref)
     # structurally identical graph, fresh engine → same content hash → hit
     g2 = synth.stencil2d(2, 2, 2, params=params)
     eng2 = sweep.SweepEngine(g2, params, cache=cache)
@@ -223,6 +226,301 @@ def test_engine_rejects_mismatched_classes(params):
         eng.run(sweep.latency_grid(two_cls, [0.0, 1.0]))
     with pytest.raises(ValueError, match="engine"):
         sensitivity.latency_curve(g, params, [0.0, 1.0], engine="batched")
+
+
+# -- multi-graph packing (MultiPlan): packed ≡ solo, bit for bit -------------
+
+def _collective_topology_variants():
+    """3 collective algorithms × 2 two-class topologies = 6 GraphVariants
+    sharing one latency-class count (so they can pack)."""
+    from repro.core.loggps import tpu_pod_params
+    out = []
+    for pod, tag in ((2, "pod2"), (4, "pod4")):
+        p = tpu_pod_params(pod_size=pod)
+        for algo in ("ring", "recursive_doubling", "tree"):
+            g = synth.allreduce_chain(8, 2, params=p, algo=algo)
+            out.append(sweep.GraphVariant(name=f"{tag}/{algo}", graph=g,
+                                          params=p,
+                                          meta={"algo": algo, "pod": pod}))
+    return out
+
+
+def test_multiplan_matches_solo_bit_for_bit():
+    """MultiPlan results ≡ per-variant SweepEngine.run across 3 collective
+    algorithms × 2 topologies × 50 scenarios — exact equality (λ tie-breaks
+    included), not approx: padding only adds masked −∞ candidates and max
+    is exact, so packing must never perturb a single bit."""
+    variants = _collective_topology_variants()
+    deltas = np.linspace(0.0, 80.0, 50)
+
+    solo = {}
+    for v in variants:
+        eng = sweep.SweepEngine(v.graph, v.params, cache=None)
+        solo[v.name] = eng.run(sweep.latency_grid(v.params, deltas))
+
+    meng = sweep.MultiSweepEngine.from_variants(variants, cache=None)
+    res = meng.run([sweep.latency_grid(v.params, deltas) for v in variants])
+    assert res.T.shape == (len(variants), 50)
+    for i, v in enumerate(variants):
+        np.testing.assert_array_equal(res.T[i], solo[v.name].T)
+        np.testing.assert_array_equal(res.lam[i], solo[v.name].lam)
+        np.testing.assert_array_equal(res.rho[i], solo[v.name].rho)
+        # __getitem__ by index and by name give the same slice
+        np.testing.assert_array_equal(res[i].T, res[v.name].T)
+
+
+def test_multiplan_repad_is_exact(params):
+    """A plan re-padded onto a larger envelope runs bit-identically."""
+    from repro.sweep.compile import repad_plan
+    g = synth.stencil2d(3, 3, 3, params=params)
+    c = sweep.compile_plan(g, params)
+    grid = sweep.latency_grid(params, np.linspace(0.0, 40.0, 7))
+    base = sweep.SweepEngine(compiled=c, params=params, cache=None).run(grid)
+    nlv, V, D = c.vsrc.shape
+    big = repad_plan(c, nlv * 2, V * 2, D * 2, c.esrc.shape[1] * 2)
+    res = sweep.SweepEngine(compiled=big, params=params, cache=None).run(grid)
+    np.testing.assert_array_equal(res.T, base.T)
+    np.testing.assert_array_equal(res.lam, base.lam)
+    with pytest.raises(ValueError, match="smaller"):
+        repad_plan(c, nlv // 2, V, D, c.esrc.shape[1])
+
+
+def test_group_plans_buckets_and_inflation(params):
+    from repro.core.loggps import tpu_pod_params
+    small = sweep.compile_plan(synth.stencil2d(2, 2, 2, params=params), params)
+    huge = sweep.compile_plan(synth.allreduce_chain(16, 6, params=params),
+                              params)
+    # same nclass but wildly different volume: inflation bound splits them
+    groups = sweep.group_plans([small, huge, small], max_inflation=4.0)
+    assert [0, 2] in groups and [1] in groups
+    # everything fits one bucket when the bound is loose
+    assert sweep.group_plans([small, small], max_inflation=64.0) == [[0, 1]]
+    # different latency-class counts never pack
+    p2 = tpu_pod_params(pod_size=2)
+    two = sweep.compile_plan(synth.stencil2d(2, 2, 2, params=p2), p2)
+    assert sweep.group_plans([small, two]) == [[0], [1]]
+    with pytest.raises(ValueError, match="class"):
+        sweep.pack_plans([small, two])
+
+
+def test_sweep_variants_batched_call_count(params):
+    """A variant study costs one compiled call per shape bucket."""
+    variants = sweep.collective_variants(
+        lambda a: synth.allreduce_chain(8, 1, params=params, algo=a),
+        ["ring", "bidir_ring", "recursive_doubling", "tree"], params)
+    batch_of = lambda v: sweep.latency_grid(params, np.linspace(0, 50, 20))
+    stats = {}
+    batched = sweep.sweep_variants(variants, batch_of, stats=stats,
+                                   batched=True, cache=None)
+    assert stats["groups"] < len(variants)      # buckets merged variants
+    assert stats["calls"] == stats["groups"] <= len(variants)
+    loop_stats = {}
+    loop = sweep.sweep_variants(variants, batch_of, stats=loop_stats,
+                                batched=False, cache=None)
+    assert loop_stats["calls"] == len(variants)
+    for name, ref in loop.items():
+        np.testing.assert_array_equal(batched[name].T, ref.T)
+        np.testing.assert_array_equal(batched[name].lam, ref.lam)
+
+
+def test_multisweep_rank_and_broadcast(params):
+    variants = sweep.collective_variants(
+        lambda a: synth.allreduce_chain(8, 2, params=params, algo=a),
+        ["ring", "recursive_doubling"], params)
+    meng = sweep.MultiSweepEngine.from_variants(variants, cache=None)
+    # one ScenarioBatch broadcasts to every graph
+    res = meng.run(sweep.latency_grid(params, np.linspace(0, 40, 10)))
+    order = res.rank(reduce="final")
+    assert order[0][0] == "algo=recursive_doubling"   # Fig 10 ordering
+    assert order[0][1] <= order[1][1]
+    with pytest.raises(ValueError, match="reduce"):
+        res.rank(reduce="median")
+    with pytest.raises(ValueError, match="scenario batches"):
+        meng.run([sweep.latency_grid(params, [0.0])])
+
+
+def test_multisweep_result_cache(params):
+    variants = sweep.collective_variants(
+        lambda a: synth.allreduce_chain(8, 1, params=params, algo=a),
+        ["ring", "tree"], params)
+    cache = sweep_cache.SweepCache(capacity=4)
+    meng = sweep.MultiSweepEngine.from_variants(variants, cache=cache)
+    grid = sweep.latency_grid(params, [0.0, 10.0, 20.0])
+    r1 = meng.run(grid)
+    assert not r1.from_cache
+    r2 = meng.run(grid)
+    assert r2.from_cache and meng.calls == 1
+    np.testing.assert_array_equal(r1.T, r2.T)
+    ref = r1.T.copy()
+    r1.T[:] = -2.0                      # miss result is a private copy too
+    r2.T[:] = -1.0                      # hits hand out copies
+    np.testing.assert_array_equal(meng.run(grid).T, ref)
+    # a different engine over the same plans hits content-addressed — but
+    # the result must carry THAT engine's names, not the cached ones
+    meng2 = sweep.MultiSweepEngine.from_variants(variants, cache=cache)
+    meng2.names = ("renamed_ring", "renamed_tree")
+    r3 = meng2.run(grid)
+    assert r3.from_cache and r3.names == ("renamed_ring", "renamed_tree")
+    np.testing.assert_array_equal(r3["renamed_ring"].T, ref[0])
+
+
+# -- gap decomposition: build-time shares recorded on the graph ---------------
+
+def test_gap_shares_survive_params_drift(params):
+    """Regression for the ROADMAP caveat: bandwidth scenarios must be exact
+    even when the params handed to compile_plan differ from the build-time
+    ones — the graph's recorded egap/egclass are authoritative."""
+    g = synth.cg_like(2, 2, 3, params=params)
+    assert g.egap is not None and g.egclass is not None
+    assert float(g.egap.sum()) > 0
+    drifted = params.replace(G=tuple(7.0 * x for x in params.G))
+    eng = sweep.SweepEngine(compiled=sweep.compile_plan(g, drifted),
+                            params=params, cache=None)
+    res = eng.run(sweep.bandwidth_grid(params, [1.0, 2.0, 4.0]))
+    for i, gs in enumerate([1.0, 2.0, 4.0]):
+        p2 = params.replace(G=tuple(gs * x for x in params.G))
+        g2 = synth.cg_like(2, 2, 3, params=p2)
+        ref = dag.evaluate(g2, p2.replace(L=params.L)).T
+        assert res.T[i] == pytest.approx(ref, rel=1e-12), gs
+
+
+def test_gap_shares_on_traced_graphs():
+    """Graphs built by core.tracer record per-edge gap shares, and the
+    scalar bandwidth_curve path consumes them."""
+    from repro import configs
+    from repro.core.tracer import TraceSpec, trace_step
+    from repro.models.config import TRAIN_4K
+    cfg, _ = configs.get("llama3.2-3b")
+    ts = TraceSpec(pods=1, data=2, model=2)
+    g = trace_step(cfg, TRAIN_4K, ts)
+    assert g.egap is not None
+    assert float(g.egap.sum()) > 0
+    p = ts.params()
+    curve = sensitivity.bandwidth_curve(g, p, [1.0, 3.0], engine="scalar")
+    assert curve.T[1] > curve.T[0]      # slower links ⇒ longer step
+    eng = sweep.SweepEngine(g, p, cache=None)
+    res = eng.run(sweep.bandwidth_grid(p, [1.0, 3.0]))
+    np.testing.assert_allclose(res.T, curve.T, rtol=1e-9)
+
+
+def test_recorded_zero_gap_is_authoritative(params):
+    """A graph built under G=0 recorded zero gap shares — bandwidth sweeps
+    must stay flat on BOTH dispatch paths even when the caller now holds
+    nonzero-G params (reconstruction must not override explicit zeros)."""
+    p0 = params.replace(G=(0.0,))
+    g = synth.stencil2d(3, 3, 3, params=p0)
+    assert float(np.nansum(g.egap)) == 0.0
+    gs = np.linspace(1.0, 4.0, 9)        # ≥ SWEEP_MIN_POINTS → auto=sweep
+    swept = sensitivity.bandwidth_curve(g, params, gs, engine="sweep")
+    scalar = sensitivity.bandwidth_curve(g, params, gs, engine="scalar")
+    np.testing.assert_allclose(swept.T, scalar.T, rtol=1e-12)
+    assert float(np.ptp(swept.T)) == 0.0          # flat: no gap to scale
+
+
+def test_gap_reconstruction_backstops_raw_add_edge(params):
+    """Message edges added via raw add_edge() without gap_us (the pre-gap-
+    recording idiom) still get the params-based gap split — recorded zeros
+    must not shadow the reconstruction."""
+    from repro.core.graph import GraphBuilder
+
+    def build(p):
+        b = GraphBuilder(2, 1)
+        b.add_calc(0, 5.0)
+        sv = b.add_send_vertex(0, p.o)
+        rv = b.add_recv_vertex(1, p.o)
+        b.add_edge(sv, rv, const_us=p.gap_cost(8192.0), nbytes=8192.0,
+                   lat=((0, 1),))                    # note: no gap_us
+        b.add_calc(1, 5.0)
+        return b.finalize()
+
+    g = build(params)
+    # the raw message edge recorded NaN = "share unknown", not a zero
+    assert np.isnan(g.egap[g.ebytes > 0]).all()
+    eng = sweep.SweepEngine(g, params, cache=None)
+    res = eng.run(sweep.bandwidth_grid(params, [1.0, 3.0]))
+    for i, gs in enumerate([1.0, 3.0]):
+        p2 = params.replace(G=tuple(gs * x for x in params.G))
+        ref = dag.evaluate(build(p2), p2.replace(L=params.L)).T
+        assert res.T[i] == pytest.approx(ref, rel=1e-12), gs
+
+
+def test_topology_stamper_gap_excludes_switch_constant(params):
+    """TopologyStamper folds h·d_switch into econst; only the (s-1)·G share
+    may scale with γ (the gap share must not swallow the hop constant)."""
+    from repro.core import topology
+    topo = topology.fat_tree(4)
+    p = topology.topology_params(topo)
+    stamp = topology.TopologyStamper(topo, p)
+    from repro.core.graph import GraphBuilder
+    b = GraphBuilder(4, topo.nclasses)
+    b.add_calc(0, 1.0)
+    stamp.message(b, 0, 2, 4096.0)
+    g = b.finalize()
+    msg = int(np.nonzero(g.ebytes > 0)[0][0])
+    assert 0 < g.egap[msg] < g.econst[msg]
+
+
+# -- cache: canonical-byte hashing, eviction, stats ---------------------------
+
+def test_content_hash_stable_across_processes(params):
+    """The compiled-plan hash is a function of canonical bytes, never of
+    Python object identity — a fresh process mints the same key."""
+    import os
+    import pathlib
+    import subprocess
+    import sys
+    prog = (
+        "from repro.core import synth\n"
+        "from repro.core.loggps import cluster_params\n"
+        "from repro.sweep.compile import compile_plan\n"
+        "p = cluster_params(L_us=3.0, o_us=5.0)\n"
+        "g = synth.stencil2d(2, 2, 2, params=p)\n"
+        "print(compile_plan(g, p).content_hash())\n"
+    )
+    local_hash = sweep.compile_plan(
+        synth.stencil2d(2, 2, 2, params=params), params).content_hash()
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    env = {**os.environ,
+           "PYTHONPATH": src + os.pathsep + os.environ.get("PYTHONPATH", "")}
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, check=True, env=env)
+    assert out.stdout.strip() == local_hash
+
+
+def test_canonical_bytes_disambiguates_layouts():
+    a = np.arange(6, dtype=np.float64).reshape(2, 3)
+    assert a.tobytes() == a.reshape(3, 2).tobytes()      # the trap
+    assert (b"".join(sweep_cache.canonical_bytes(a))
+            != b"".join(sweep_cache.canonical_bytes(a.reshape(3, 2))))
+    assert (b"".join(sweep_cache.canonical_bytes(a))
+            != b"".join(sweep_cache.canonical_bytes(a.astype(np.float32))))
+    # F-order view hashes like its C-order copy (same logical array)
+    f = np.asfortranarray(a)
+    assert (b"".join(sweep_cache.canonical_bytes(f))
+            == b"".join(sweep_cache.canonical_bytes(a)))
+
+
+def test_cache_eviction_and_stats(params):
+    cache = sweep_cache.SweepCache(capacity=2)
+    g = synth.stencil2d(2, 2, 2, params=params)
+    eng = sweep.SweepEngine(g, params, cache=cache)
+    grids = [sweep.latency_grid(params, [float(k)]) for k in range(3)]
+    for b in grids:
+        eng.run(b)
+    assert len(cache) == 2
+    st = cache.stats
+    assert (st.hits, st.misses, st.evictions) == (0, 3, 1)
+    # grid 0 was evicted (LRU): re-running it misses and evicts grid 1
+    assert not eng.run(grids[0]).from_cache
+    assert cache.stats.misses == 4 and cache.stats.evictions == 2
+    # grids 2 and 0 are resident: hits, and hit_rate reflects 2/6
+    assert eng.run(grids[2]).from_cache and eng.run(grids[0]).from_cache
+    assert cache.stats.hits == 2
+    assert cache.stats.hit_rate == pytest.approx(2 / 6)
+    snap = cache.stats.snapshot()
+    assert snap["evictions"] == 2
+    cache.clear()
+    assert len(cache) == 0 and cache.stats.misses == 0
 
 
 def test_sensitivity_memoizes_engine(params):

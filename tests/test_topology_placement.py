@@ -69,9 +69,9 @@ def test_torus_hops_wraparound():
     assert t.hops(0, 10) == 4          # (2,2) away
 
 
-def test_placement_improves_biased_workload():
-    """Alg. 3 moves chatty rank pairs onto fast links: runtime must improve
-    over a deliberately-bad initial mapping (and never regress)."""
+def _biased_two_tier_fixture():
+    """The two-tier topology fixture: chatty rank pairs with distinct sizes,
+    an adversarial cross-pod start, and a fast/slow-link Φ."""
     P, pod = 8, 4
     zero = LogGPS(L=(0.0,), G=(0.0,), o=0.5, S=1e18)
     b = GraphBuilder(P, 1)
@@ -88,8 +88,15 @@ def test_placement_improves_biased_workload():
     g = b.finalize()
     phi = placement.ArchTopology.two_tier(P, pod, L_fast=1.0, L_slow=20.0,
                                           G_fast=1e-5, G_slow=4e-5)
-    # adversarial start: partners split across pods
-    pi0 = np.array([0, 4, 1, 5, 2, 6, 3, 7])
+    pi0 = np.array([0, 4, 1, 5, 2, 6, 3, 7])   # partners split across pods
+    return g, zero, phi, pi0, pod
+
+
+def test_placement_improves_biased_workload():
+    """Alg. 3 moves chatty rank pairs onto fast links: runtime must improve
+    over a deliberately-bad initial mapping (and never regress)."""
+    g, zero, phi, pi0, pod = _biased_two_tier_fixture()
+    P = g.nranks
     sched0, plan = placement.evaluate_mapping(g, zero, phi, pi0)
     pi, hist = placement.place(g, phi, params=zero, pi0=pi0)
     sched1, _ = placement.evaluate_mapping(g, zero, phi, pi, plan)
@@ -97,4 +104,65 @@ def test_placement_improves_biased_workload():
     assert sched1.T < sched0.T * 0.9   # a real improvement, not noise
     # partners end up in the same pod
     for r in range(0, P, 2):
+        assert pi[r] // pod == pi[r + 1] // pod
+
+
+def test_batched_placement_matches_scalar_reference():
+    """The MultiPlan-scored greedy loop (engine='auto') must reproduce the
+    seed implementation's final mapping AND objective history exactly on
+    the two-tier topology fixture."""
+    g, zero, phi, pi0, _ = _biased_two_tier_fixture()
+    pi_ref, hist_ref = placement.place(g, phi, params=zero, pi0=pi0.copy(),
+                                       engine="scalar")
+    pi_bat, hist_bat = placement.place(g, phi, params=zero, pi0=pi0.copy(),
+                                       engine="auto")
+    np.testing.assert_array_equal(pi_bat, pi_ref)
+    np.testing.assert_allclose(hist_bat, hist_ref, rtol=1e-12)
+    # default initial mapping too (pi0=None path)
+    pi_ref2, _ = placement.place(g, phi, params=zero, engine="scalar")
+    pi_bat2, _ = placement.place(g, phi, params=zero, engine="auto")
+    np.testing.assert_array_equal(pi_bat2, pi_ref2)
+    with pytest.raises(ValueError, match="batched"):
+        placement.place(g, phi, params=zero, engine="scalar", topk=3)
+    with pytest.raises(ValueError, match="engine"):
+        placement.place(g, phi, params=zero, engine="fastest")
+
+
+def test_swap_gain_matrix_matches_pairwise():
+    """Vectorized all-pairs gains ≡ the reference per-pair swap_gain."""
+    g, zero, phi, pi0, _ = _biased_two_tier_fixture()
+    P = g.nranks
+    plan = dag.LevelPlan(g)
+    extra = placement.mapping_edge_cost(g, phi, pi0)
+    sched = plan.forward(zero, extra_edge_cost=extra)
+    D_L, D_G = plan.pairwise_counts(sched)
+    gains = placement.swap_gain_matrix(D_L, D_G, pi0, phi)
+    for i in range(P):
+        for j in range(i + 1, P):
+            ref = placement.swap_gain(i, j, D_L, D_G, pi0, phi)
+            assert gains[i, j] == pytest.approx(ref, rel=1e-9, abs=1e-9), (i, j)
+
+
+def test_mapping_edge_cost_matches_evaluate_mapping():
+    g, zero, phi, pi0, _ = _biased_two_tier_fixture()
+    sched, plan = placement.evaluate_mapping(g, zero, phi, pi0)
+    extra = placement.mapping_edge_cost(g, phi, pi0)
+    assert plan.forward(zero, extra_edge_cost=extra).T == pytest.approx(
+        sched.T, rel=1e-12)
+
+
+def test_grid_robust_placement_improves_under_latency():
+    """Scoring swaps over a ΔL grid still fixes the adversarial mapping —
+    and the result is at least as good as the start at every grid point."""
+    pytest.importorskip("jax")
+    g, zero, phi, pi0, pod = _biased_two_tier_fixture()
+    pts = placement.latency_points(zero, [0.0, 5.0, 10.0])
+    pi, hist = placement.place(g, phi, params=zero, pi0=pi0.copy(),
+                               scenarios=pts, topk=3)
+    assert len(hist) >= 2 and hist[-1] < hist[0]
+    for pt in pts:
+        T0, _ = placement.evaluate_mapping(g, pt, phi, pi0)
+        T1, _ = placement.evaluate_mapping(g, pt, phi, pi)
+        assert T1.T <= T0.T + 1e-9
+    for r in range(0, g.nranks, 2):
         assert pi[r] // pod == pi[r + 1] // pod
