@@ -14,7 +14,10 @@ it pays off — ≥ :data:`SWEEP_MIN_POINTS` curve points, ≥
 :data:`SWEEP_MIN_DEGRADATIONS` tolerance levels, or large graphs for the
 breakpoint search.  ``engine="scalar"`` forces the numpy path,
 ``engine="sweep"`` forces (and surfaces errors from) the batched path;
-the default ``"auto"`` falls back to scalar if JAX is unavailable.
+the default ``"auto"`` falls back to scalar if JAX is unavailable
+(silently — that is an expected install state) and warns once before
+falling back on any *other* engine failure, so real sweep bugs never
+vanish into a slow-but-correct scalar loop.
 """
 
 from __future__ import annotations
@@ -75,11 +78,80 @@ def _check_engine_arg(engine: str) -> None:
                          f"got {engine!r}")
 
 
+def _warn_sweep_fallback(where: str, err: Exception) -> None:
+    """One-time RuntimeWarning when ``engine="auto"`` abandons the batched
+    path for a reason other than "JAX isn't installed".  A bare silent
+    fallback here used to swallow real engine bugs — results stayed
+    plausible (the scalar path is correct) while every sweep quietly ran
+    orders of magnitude slower.  (Keyed through the sweep engine's shared
+    warn-once registry; only reachable after ``repro.sweep`` imported.)"""
+    from repro.sweep.engine import _warn_once
+    _warn_once(
+        ("sensitivity-fallback", where, type(err).__name__),
+        f"sensitivity.{where}: batched sweep engine failed with "
+        f"{type(err).__name__}: {err} — falling back to the scalar "
+        "loop for this and later calls; pass engine='sweep' to surface "
+        "the error")
+
+
+def _sweep_engine_or_fallback(g: ExecutionGraph, params: LogGPS,
+                              engine: str, where: str):
+    """Resolve the batched engine for one dispatch site.
+
+    ImportError (JAX not installed) is an expected state → quiet ``None``.
+    Any other construction failure (compile_plan, rank_of_class raising,
+    …) follows the same contract as run-time failures: surface it under
+    ``engine="sweep"``, warn once and fall back under ``"auto"``.
+    """
+    try:
+        return _sweep_engine(g, params)
+    except ImportError:
+        return None
+    except Exception as e:  # noqa: BLE001 — deliberate auto-fallback
+        if engine == "sweep":
+            raise
+        _warn_sweep_fallback(where, e)
+        return None
+
+
+def _params_memo_key(g: ExecutionGraph, params: LogGPS) -> tuple:
+    """Content-addressed memo key for a (graph, params) compiled engine.
+
+    ``rank_of_class`` is an opaque callable, so it is keyed by what it
+    *computes* — the evaluated rank→rank class matrix over the graph's
+    ranks (canonical bytes, as in ``sweep.cache``) — never by ``id()``:
+    after GC, CPython reuses ids, so an id key can alias a *different*
+    mapping to a stale compiled engine, and logically-equal params built
+    twice would never share one.
+    """
+    if params.rank_of_class is None:
+        cls_key = None
+    else:
+        # evaluating P² rank pairs is not free — cache the evaluated
+        # matrix bytes on the params instance (its callable is fixed, so
+        # per-instance caching is content-correct; an equal params built
+        # elsewhere recomputes once and lands on the same key)
+        P = int(g.nranks)
+        cache = getattr(params, "_class_matrix_bytes", None)
+        if cache is None:
+            cache = {}
+            object.__setattr__(params, "_class_matrix_bytes", cache)
+        cls_key = cache.get(P)
+        if cls_key is None:
+            from repro.sweep.cache import canonical_bytes
+            m = np.asarray([[params.link_class(i, j) for j in range(P)]
+                            for i in range(P)], dtype=np.int32)
+            cls_key = cache[P] = b"".join(canonical_bytes(m))
+    return (tuple(params.L), tuple(params.G), params.o, params.g, params.S,
+            cls_key)
+
+
 def _sweep_engine(g: ExecutionGraph, params: LogGPS):
     """Build (or reuse) a batched SweepEngine; None if JAX is unavailable.
 
-    Compiled engines are memoized on the graph object per parameter set, so
-    repeated sensitivity calls on one graph pay compile_plan once.
+    Compiled engines are memoized on the graph object per parameter set
+    (content-keyed, see :func:`_params_memo_key`), so repeated sensitivity
+    calls on one graph pay compile_plan once.
     """
     try:
         from repro.sweep import SweepEngine
@@ -89,8 +161,7 @@ def _sweep_engine(g: ExecutionGraph, params: LogGPS):
     if memo is None:
         memo = {}
         object.__setattr__(g, "_sweep_engines", memo)
-    key = (tuple(params.L), tuple(params.G), params.o, params.S,
-           id(params.rank_of_class))
+    key = _params_memo_key(g, params)
     eng = memo.get(key)
     if eng is None:
         eng = memo[key] = SweepEngine(g, params)
@@ -107,14 +178,19 @@ def latency_curve(g: ExecutionGraph, params: LogGPS, deltas: Sequence[float],
     if want_sweep:
         try:
             from repro.sweep import latency_grid
-            eng = _sweep_engine(g, params)
-            if eng is not None:
+        except ImportError:
+            latency_grid = None              # jax unavailable: quiet scalar path
+        eng = (None if latency_grid is None else
+               _sweep_engine_or_fallback(g, params, engine, "latency_curve"))
+        if eng is not None:
+            try:
                 res = eng.run(latency_grid(params, deltas_arr, cls=cls))
                 return LatencyCurve(deltas=deltas_arr, T=res.T,
                                     lam=res.lam[:, cls], rho=res.rho[:, cls])
-        except Exception:
-            if engine == "sweep":
-                raise
+            except Exception as e:
+                if engine == "sweep":
+                    raise
+                _warn_sweep_fallback("latency_curve", e)
     plan = plan or dag.LevelPlan(g)
     Ts, lams, rhos = [], [], []
     for d in deltas_arr:
@@ -143,12 +219,17 @@ def latency_tolerance(g: ExecutionGraph, params: LogGPS,
     if want_sweep:
         try:
             from repro.sweep import tolerance_batched
-            eng = _sweep_engine(g, params)
-            if eng is not None:
+        except ImportError:
+            tolerance_batched = None              # jax unavailable: quiet scalar path
+        eng = (None if tolerance_batched is None else
+               _sweep_engine_or_fallback(g, params, engine, "latency_tolerance"))
+        if eng is not None:
+            try:
                 return tolerance_batched(eng, params, degr, cls=cls)
-        except Exception:
-            if engine == "sweep":
-                raise
+            except Exception as e:
+                if engine == "sweep":
+                    raise
+                _warn_sweep_fallback("latency_tolerance", e)
     plan = plan or dag.LevelPlan(g)
     return {p: dag.tolerance(g, params, p, cls=cls, plan=plan)
             for p in degr}
@@ -176,14 +257,19 @@ def bandwidth_curve(g: ExecutionGraph, params: LogGPS,
     if want_sweep:
         try:
             from repro.sweep import bandwidth_grid
-            eng = _sweep_engine(g, params)
-            if eng is not None:
+        except ImportError:
+            bandwidth_grid = None              # jax unavailable: quiet scalar path
+        eng = (None if bandwidth_grid is None else
+               _sweep_engine_or_fallback(g, params, engine, "bandwidth_curve"))
+        if eng is not None:
+            try:
                 res = eng.run(bandwidth_grid(params, gs, cls=cls))
                 return LatencyCurve(deltas=gs, T=res.T,
                                     lam=res.lam[:, cls], rho=res.rho[:, cls])
-        except Exception:
-            if engine == "sweep":
-                raise
+            except Exception as e:
+                if engine == "sweep":
+                    raise
+                _warn_sweep_fallback("bandwidth_curve", e)
     plan = plan or dag.LevelPlan(g)
     egap, egclass = edge_gap_shares(g, params)
     scale = np.where(egclass == cls, 1.0, 0.0) * egap
@@ -210,10 +296,15 @@ def critical_latencies(g: ExecutionGraph, params: LogGPS, L_min: float,
     if want_sweep:
         try:
             from repro.sweep import breakpoints_batched
-            eng = _sweep_engine(g, params)
-            if eng is not None:
+        except ImportError:
+            breakpoints_batched = None              # jax unavailable: quiet scalar path
+        eng = (None if breakpoints_batched is None else
+               _sweep_engine_or_fallback(g, params, engine, "critical_latencies"))
+        if eng is not None:
+            try:
                 return breakpoints_batched(eng, params, L_min, L_max, cls=cls)
-        except Exception:
-            if engine == "sweep":
-                raise
+            except Exception as e:
+                if engine == "sweep":
+                    raise
+                _warn_sweep_fallback("critical_latencies", e)
     return dag.breakpoints(g, params, L_min, L_max, cls=cls, plan=plan)

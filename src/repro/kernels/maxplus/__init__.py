@@ -1,2 +1,3 @@
-from .ops import maxplus_matvec, maxplus_matvec_batched  # noqa: F401
-from .ref import maxplus_matvec_ref  # noqa: F401
+from .ops import (maxplus_matvec, maxplus_matvec_argmax,  # noqa: F401
+                  maxplus_matvec_argmax_batched, maxplus_matvec_batched)
+from .ref import maxplus_matvec_argmax_ref, maxplus_matvec_ref  # noqa: F401

@@ -66,6 +66,159 @@ def maxplus_matvec_kernel(A, t, *, bm: int = 128, bn: int = 128,
     )(A, t)
 
 
+def _maxplus_argmax_kernel(A_ref, t_ref, c_ref, o_ref, i_ref,
+                           accv_ref, acck_ref, acci_ref, *, n_n: int, bn: int):
+    jn = pl.program_id(1)
+
+    @pl.when(jn == 0)
+    def _init():
+        accv_ref[...] = jnp.full_like(accv_ref, NEG_INF)
+        acck_ref[...] = jnp.full_like(acck_ref, NEG_INF)
+        acci_ref[...] = jnp.full_like(acci_ref, -1)
+
+    A = A_ref[...]                       # [bm, bn]
+    t = t_ref[...]                       # [bn, K]
+    c = c_ref[...]                       # [bn, K] tie key per candidate
+    bm, K = accv_ref.shape
+    cand = A[:, :, None] + t[None, :, :]             # [bm, bn, K]
+    # global candidate ordinal (column of the full N axis)
+    jidx = (jax.lax.broadcasted_iota(jnp.int32, (bm, bn, K), 1)
+            + jn * bn)
+    # block-local lexicographic argmax of (value, key, ordinal) — exact
+    # comparisons so the three-stage reduction below stays associative
+    # across blocks
+    bv = jnp.max(cand, axis=1)                       # [bm, K]
+    tie = cand >= bv[:, None, :]
+    bk = jnp.max(jnp.where(tie, c[None, :, :], NEG_INF), axis=1)
+    tie &= c[None, :, :] >= bk[:, None, :]
+    bi = jnp.max(jnp.where(tie, jidx, -1), axis=1)   # [bm, K]
+    # merge with the running accumulator (same lexicographic rule)
+    av, ak, ai = accv_ref[...], acck_ref[...], acci_ref[...]
+    better = (bv > av) | ((bv == av) & ((bk > ak) | ((bk == ak) & (bi > ai))))
+    accv_ref[...] = jnp.where(better, bv, av)
+    acck_ref[...] = jnp.where(better, bk, ak)
+    acci_ref[...] = jnp.where(better, bi, ai)
+
+    @pl.when(jn == n_n - 1)
+    def _finish():
+        o_ref[...] = accv_ref[...].astype(o_ref.dtype)
+        i_ref[...] = acci_ref[...]
+
+
+def maxplus_matvec_argmax_kernel(A, t, c, *, bm: int = 128, bn: int = 128,
+                                 interpret: bool = False):
+    """(max,+) mat-vec that also emits the realizing candidate's ordinal.
+
+    A: [M, N] (−inf = no edge); t: [N, K] candidate values; c: [N, K]
+    tie keys → (out [M, K], idx [M, K] int32) where ``idx[i, k]`` is the
+    lexicographic argmax over j of ``(A[i,j]+t[j,k], c[j,k], j)`` — the λ
+    backtrace's "max cumulative slope, then max ordinal" rule among exact
+    value ties.  Rows with no finite candidate return idx of the −∞
+    sentinel chain (mask with ``out >= 0`` downstream).
+    """
+    M, N = A.shape
+    _, K = t.shape
+    bm = min(bm, M)
+    bn = min(bn, N)
+    assert M % bm == 0 and N % bn == 0
+    grid = (M // bm, N // bn)
+    kernel = functools.partial(_maxplus_argmax_kernel, n_n=N // bn, bn=bn)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, K), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, K), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, K), t.dtype),
+            jax.ShapeDtypeStruct((M, K), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, K), jnp.float32),
+                        pltpu.VMEM((bm, K), jnp.float32),
+                        pltpu.VMEM((bm, K), jnp.int32)],
+        interpret=interpret,
+    )(A, t, c)
+
+
+def _maxplus_argmax_batched_kernel(A_ref, t_ref, c_ref, o_ref, i_ref,
+                                   accv_ref, acck_ref, acci_ref,
+                                   *, n_n: int, bn: int):
+    jn = pl.program_id(2)
+
+    @pl.when(jn == 0)
+    def _init():
+        accv_ref[...] = jnp.full_like(accv_ref, NEG_INF)
+        acck_ref[...] = jnp.full_like(acck_ref, NEG_INF)
+        acci_ref[...] = jnp.full_like(acci_ref, -1)
+
+    A = A_ref[0]                         # [bm, bn]
+    t = t_ref[0]                         # [bn, K]
+    c = c_ref[0]                         # [bn, K]
+    bm, K = accv_ref.shape
+    cand = A[:, :, None] + t[None, :, :]
+    jidx = (jax.lax.broadcasted_iota(jnp.int32, (bm, bn, K), 1)
+            + jn * bn)
+    bv = jnp.max(cand, axis=1)
+    tie = cand >= bv[:, None, :]
+    bk = jnp.max(jnp.where(tie, c[None, :, :], NEG_INF), axis=1)
+    tie &= c[None, :, :] >= bk[:, None, :]
+    bi = jnp.max(jnp.where(tie, jidx, -1), axis=1)
+    av, ak, ai = accv_ref[...], acck_ref[...], acci_ref[...]
+    better = (bv > av) | ((bv == av) & ((bk > ak) | ((bk == ak) & (bi > ai))))
+    accv_ref[...] = jnp.where(better, bv, av)
+    acck_ref[...] = jnp.where(better, bk, ak)
+    acci_ref[...] = jnp.where(better, bi, ai)
+
+    @pl.when(jn == n_n - 1)
+    def _finish():
+        o_ref[0] = accv_ref[...].astype(o_ref.dtype)
+        i_ref[0] = acci_ref[...]
+
+
+def maxplus_matvec_argmax_batched_kernel(A, t, c, *, bm: int = 128,
+                                         bn: int = 128,
+                                         interpret: bool = False):
+    """Graph-batched argmax-emitting (max,+): A [G, M, N], t/c [G, N, K] →
+    (out [G, M, K], idx [G, M, K]).  Graphs ride the outermost grid axis
+    (one block pipeline per graph, as in :func:`maxplus_matvec_batched_kernel`);
+    K (scenarios) rides the 128-wide lane axis."""
+    G, M, N = A.shape
+    _, _, K = t.shape
+    bm = min(bm, M)
+    bn = min(bn, N)
+    assert M % bm == 0 and N % bn == 0
+    grid = (G, M // bm, N // bn)
+    kernel = functools.partial(_maxplus_argmax_batched_kernel,
+                               n_n=N // bn, bn=bn)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bn), lambda g, i, j: (g, i, j)),
+            pl.BlockSpec((1, bn, K), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, bn, K), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bm, K), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, bm, K), lambda g, i, j: (g, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((G, M, K), t.dtype),
+            jax.ShapeDtypeStruct((G, M, K), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, K), jnp.float32),
+                        pltpu.VMEM((bm, K), jnp.float32),
+                        pltpu.VMEM((bm, K), jnp.int32)],
+        interpret=interpret,
+    )(A, t, c)
+
+
 def _maxplus_batched_kernel(A_ref, t_ref, o_ref, acc_ref, *, n_n: int):
     jn = pl.program_id(2)
 

@@ -6,7 +6,9 @@ import functools
 
 import jax
 
-from .kernel import maxplus_matvec_batched_kernel, maxplus_matvec_kernel
+from .kernel import (maxplus_matvec_argmax_batched_kernel,
+                     maxplus_matvec_argmax_kernel,
+                     maxplus_matvec_batched_kernel, maxplus_matvec_kernel)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
@@ -14,6 +16,28 @@ def maxplus_matvec(A, t, *, bm: int = 128, bn: int = 128, interpret: bool = None
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     return maxplus_matvec_kernel(A, t, bm=bm, bn=bn, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def maxplus_matvec_argmax(A, t, c, *, bm: int = 128, bn: int = 128,
+                          interpret: bool = None):
+    """(max,+) mat-vec emitting the realizing candidate ordinal: the λ
+    backtrace consumes the [M, K] int32 index plane (lexicographic argmax
+    of (value, tie key c, ordinal))."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return maxplus_matvec_argmax_kernel(A, t, c, bm=bm, bn=bn,
+                                        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def maxplus_matvec_argmax_batched(A, t, c, *, bm: int = 128, bn: int = 128,
+                                  interpret: bool = None):
+    """[G, M, N] ⊗ [G, N, K] → ([G, M, K], [G, M, K] int32 argmax)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return maxplus_matvec_argmax_batched_kernel(A, t, c, bm=bm, bn=bn,
+                                                interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))

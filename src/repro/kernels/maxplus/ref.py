@@ -8,3 +8,16 @@ import jax.numpy as jnp
 def maxplus_matvec_ref(A, t):
     """A: [M, N]; t: [N, K] → out[i,k] = max_j A[i,j] + t[j,k]."""
     return jnp.max(A[:, :, None] + t[None, :, :], axis=1)
+
+
+def maxplus_matvec_argmax_ref(A, t, c):
+    """Oracle for the argmax-emitting kernel: lexicographic argmax over j of
+    (A[i,j]+t[j,k], c[j,k], j) with exact comparisons, plus the max value."""
+    cand = A[:, :, None] + t[None, :, :]             # [M, N, K]
+    out = jnp.max(cand, axis=1)
+    tie = cand >= out[:, None, :]
+    bk = jnp.max(jnp.where(tie, c[None, :, :], -jnp.inf), axis=1)
+    tie &= c[None, :, :] >= bk[:, None, :]
+    jidx = jnp.arange(A.shape[1], dtype=jnp.int32)[None, :, None]
+    idx = jnp.max(jnp.where(tie, jidx, -1), axis=1)
+    return out, idx

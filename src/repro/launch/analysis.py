@@ -65,6 +65,8 @@ class AnalysisRequest:
     reduce: str = "mean"                        # rank objective: mean|max|final
     topo: Optional[dict] = None                 # placement Φ spec (two_tier kw)
     topk: int = 1                               # placement candidate width
+    backend: Optional[str] = None               # per-query segment|pallas
+    shard: Optional[int] = None                 # device count (None = off)
 
     @staticmethod
     def from_json(line: str) -> "AnalysisRequest":
@@ -206,12 +208,17 @@ class AnalysisService:
 
     # -- queries -------------------------------------------------------------
     def curve(self, req: AnalysisRequest) -> dict:
+        """T/λ/ρ over a ΔL grid.  ``req.backend`` picks the compiled path
+        per query (λ is first-class on both segment and pallas now);
+        ``req.shard`` fans the scenario axis across local devices."""
         v = self._variant(req.variant)
         deltas = np.asarray(req.deltas if req.deltas is not None
                             else self.default_deltas, dtype=np.float64)
         res = self.engine(v.name).run(latency_grid(v.params, deltas,
-                                                   cls=req.cls))
+                                                   cls=req.cls),
+                                      backend=req.backend, shard=req.shard)
         return {"variant": v.name, "cls": req.cls, "deltas": deltas,
+                "backend": res.backend,
                 "T": res.T, "lam": res.lam[:, req.cls],
                 "rho": res.rho[:, req.cls], "from_cache": res.from_cache}
 
@@ -223,8 +230,10 @@ class AnalysisService:
         # λ-backtrace program
         res = self.engine(v.name).run(bandwidth_grid(v.params, gs,
                                                      cls=req.cls),
-                                      compute_lam=False)
+                                      compute_lam=False,
+                                      backend=req.backend, shard=req.shard)
         return {"variant": v.name, "cls": req.cls, "gscales": gs,
+                "backend": res.backend,
                 "T": res.T, "from_cache": res.from_cache}
 
     def tolerance(self, req: AnalysisRequest) -> dict:
@@ -232,7 +241,7 @@ class AnalysisService:
         degr = tuple(req.degradations if req.degradations is not None
                      else (0.01, 0.02, 0.05))
         tol = tolerance_batched(self.engine(v.name), v.params, degr,
-                                cls=req.cls)
+                                cls=req.cls, backend=req.backend)
         return {"variant": v.name, "cls": req.cls, "tolerance": tol}
 
     def rank(self, req: AnalysisRequest) -> dict:
@@ -257,7 +266,10 @@ class AnalysisService:
                                     cls=req.cls)
                        for n in names]
             before = meng.calls
-            res = meng.run(batches, compute_lam=False)
+            # shard rides the packed MultiPlan's graph axis (the natural
+            # shard_map mesh axis): big variant studies split across devices
+            res = meng.run(batches, compute_lam=False,
+                           backend=req.backend, shard=req.shard)
             calls += meng.calls - before
             scored.extend(res.rank(reduce=req.reduce))
         scored.sort(key=lambda kv: kv[1])
@@ -369,6 +381,10 @@ def main(argv=None):
     ap.add_argument("--cls", type=int, default=0)
     ap.add_argument("--deltas", default=None,
                     help="ΔL grid as start:stop:num, e.g. 0:100:25")
+    ap.add_argument("--shard", type=int, default=None,
+                    help="split one-shot queries over this many local "
+                         "devices (scenario axis for curve/bandwidth, "
+                         "graph axis for rank)")
     args = ap.parse_args(argv)
 
     if not args.demo:
@@ -396,7 +412,7 @@ def main(argv=None):
         lo, hi, num = args.deltas.split(":")
         deltas = np.linspace(float(lo), float(hi), int(num)).tolist()
     req = AnalysisRequest(kind=args.query or "rank", variant=args.variant,
-                          cls=args.cls, deltas=deltas)
+                          cls=args.cls, deltas=deltas, shard=args.shard)
     resp = svc.handle(req)
     print(resp.to_json())
     return svc

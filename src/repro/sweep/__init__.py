@@ -42,10 +42,14 @@ Results match ``core.dag`` exactly (same argmax tie-breaks, float64) — a
 graph packed into a MultiPlan returns bit-identical T/λ to its solo run —
 and λ matches the explicit LP's reduced costs; ``core.sensitivity``
 dispatches here automatically for multi-point sweeps.  The Pallas
-``maxplus`` kernel is the optional values-only inner-scatter backend
-(``backend="pallas"``; the batched variant takes graphs on the kernel's
-outer grid axis).  ``launch.analysis.AnalysisService`` serves what-if
-queries over warm engines built from these pieces.
+``maxplus`` kernel is the inner-scatter backend (``backend="pallas"``;
+graphs ride the kernel's outer grid axis in the batched variant) and
+serves λ/ρ natively via its argmax-emitting variant — no segment
+redispatch.  ``run(shard=...)`` splits the scenario axis (single graph)
+or the MultiPlan graph axis (packed) across local devices with
+``shard_map``, bit-equal to single-device runs.
+``launch.analysis.AnalysisService`` serves what-if queries over warm
+engines built from these pieces (per-request backend/shard).
 """
 
 from .cache import DEFAULT_CACHE, SweepCache, canonical_bytes  # noqa: F401

@@ -19,11 +19,26 @@ no scatters, which is what makes it fast on CPU and TPU alike.  Runs in
 float64 inside a scoped ``enable_x64`` so the sweep is bit-compatible with
 the numpy engine.  The per-scenario axis is ``vmap``'d.
 
-``pallas``: the existing ``repro.kernels.maxplus`` TPU kernel as the inner
-scatter — each level's scatter-max is a (max,+) mat-vec of a 0/−inf
-incidence matrix with per-edge candidate values, scenarios riding the
-128-wide lane axis.  Values-only (float32 accumulators, like the TPU VPU),
-so λ/ρ requests fall back to the segment pass; tolerance ≈ 1e-6 relative.
+``pallas``: the ``repro.kernels.maxplus`` TPU kernel as the inner scatter —
+each level's scatter-max is a (max,+) mat-vec of a 0/−inf incidence matrix
+with per-edge candidate values, scenarios riding the 128-wide lane axis.
+λ/ρ requests run the argmax-emitting kernel variant (per-level realizing
+edge slots recorded forward, consumed by a reverse backtrace scan), so the
+pallas backend serves T *and* sensitivities natively — no segment
+redispatch.  Float32 accumulators (like the TPU VPU): tolerance ≈ 1e-6
+relative vs segment.
+
+λ on the segment backend is **two-pass** by default: a values-only
+``fori_loop`` forward recording per-level argmax slots, then a reverse
+backtrace scan — bit-identical to the original fused single-loop backtrace
+(kept under ``fused=True`` as the reference) at roughly the values-only
+program's compile cost.
+
+Device sharding: ``run(..., shard=...)`` splits the scenario axis
+(:class:`SweepEngine`) or the MultiPlan's leading graph axis
+(:class:`MultiSweepEngine`) across local devices with ``shard_map``;
+per-element arithmetic is unchanged, so sharded results are bit-identical
+to single-device runs.
 
 Also here: lockstep-batched versions of the bisection loops from
 ``core.dag`` (``tolerance_batched``, ``breakpoints_batched``) — every probe
@@ -74,7 +89,19 @@ def _jax():
     return jax
 
 
-def _make_segment_one(want_lam: bool):
+_WARNED: set = set()
+
+
+def _warn_once(key: tuple, message: str) -> None:
+    """Emit a RuntimeWarning once per key (backend overrides, engine
+    fallbacks) — loud enough to see, quiet enough for sweep loops."""
+    if key not in _WARNED:
+        _WARNED.add(key)
+        import warnings
+        warnings.warn(message, RuntimeWarning, stacklevel=3)
+
+
+def _make_segment_one(want_lam: bool, fused: bool = False):
     """The single-(graph, scenario) gather/max forward.
 
     Vertices live at level-major flat slots, each owning a padded row of
@@ -84,6 +111,23 @@ def _make_segment_one(want_lam: bool):
     scenario axis (and, for :class:`MultiSweepEngine`, the graph axis:
     padding only adds masked −∞ candidates and max is exact, so a packed
     graph's outputs are bit-identical to its solo run).
+
+    λ layouts (``want_lam``): the default is **two-pass** — a values
+    forward that records, per slot, the chosen in-edge's source slot
+    (critical-path next pointer) and latency row under the scalar engine's
+    value/slope/ordinal tie-breaks, then a reverse backtrace *pointer
+    chase* from the sink, then an ascending-level accumulation of the
+    visited rows.  The ascending final sum replays the fused layout's
+    exact float addition order, so results are *bit-identical* to
+    ``fused=True`` — the original single-loop backtrace that drags a
+    [nflat, nclass] slope accumulation through every level (kept as the
+    equivalence reference).  The recorded rows are plain per-level writes,
+    so the two-pass loop body stays close to the values-only body; on
+    XLA:CPU the two layouts measure within ±15% of each other on compile
+    and runtime, because the tie-break arithmetic itself (not the slope
+    carry) is what keeps any bit-exact λ program well above the
+    values-only compile cost — see ``benchmarks/bench_sweep.py``'s
+    ``lam_compile`` lines.
     """
     jax = _jax()
     jnp = jax.numpy
@@ -104,29 +148,94 @@ def _make_segment_one(want_lam: bool):
             ts = jnp.maximum(jnp.max(cand, axis=1), 0.0)   # t_start ≥ 0
             return cand, ts
 
+        def choose(lv, t_end, ssum):
+            """Per-vertex chosen in-edge ordinal for one level.
+
+            The scalar LevelPlan.forward rule: realizing edges (value within
+            ATOL of the level max), max-total-slope tie-break, then max
+            ordinal.  Shared by the fused and two-pass layouts so their
+            tie-break arithmetic is literally the same ops.
+            """
+            cand, ts = relax(lv, t_end)
+            hit = vmaskd[lv] & (cand >= ts[:, None] - ATOL)
+            cs = ssum[vsrc[lv]] + vlat_sum[lv]
+            best = jnp.max(jnp.where(hit, cs, -BIG), axis=1)
+            sel = hit & (cs >= best[:, None] - ATOL)
+            chosen = jnp.max(jnp.where(sel, didx, -1), axis=1)   # [Vmax]
+            return ts, chosen, sel
+
+        def sink_slot(t_end, ssum):
+            """The scalar rule: among makespan sinks, the max-ssum one with
+            the smallest original vertex id."""
+            T = jnp.max(jnp.where(valid_flat, t_end, -BIG))
+            sink = valid_flat & (t_end >= T - ATOL)
+            mx = jnp.max(jnp.where(sink, ssum, -BIG))
+            top = sink & (ssum >= mx)
+            v = jnp.argmin(jnp.where(top, vert_of_slot,
+                                     jnp.iinfo(jnp.int32).max))
+            return T, v
+
+        if want_lam and not fused:
+            # -- pass 1: values + slope-sum carry, recording per slot the
+            #    chosen in-edge's *source slot* (a critical-path next
+            #    pointer) and its latency row — no [nflat, nc] slope
+            #    accumulation in the loop.  The per-edge reads are ordinal
+            #    gathers of exactly the elements the fused layout's one-hot
+            #    reductions sum, so every recorded value is bit-identical --
+            def body(lv, carry):
+                t_end, ssum, nxt, lrow = carry
+                ts, chosen, _ = choose(lv, t_end, ssum)
+                has = chosen >= 0
+                ch = jnp.where(has, chosen, 0)[:, None]
+                srcslot = jnp.take_along_axis(vsrc[lv], ch, axis=1)[:, 0]
+                vls = jnp.take_along_axis(vlat_sum[lv], ch, axis=1)[:, 0]
+                ss_new = jnp.where(has, ssum[srcslot] + vls, 0.0)
+                off = lv * Vmax
+                own = off + jnp.arange(Vmax, dtype=jnp.int32)
+                nxt_row = jnp.where(has, srcslot.astype(jnp.int32), own)
+                row = jnp.where(
+                    has[:, None],
+                    jnp.take_along_axis(vlat[lv], ch[:, :, None],
+                                        axis=1)[:, 0], 0.0)
+                return (dus(t_end, ts + vcost_lv[lv], (off,)),
+                        dus(ssum, ss_new, (off,)),
+                        dus(nxt, nxt_row, (off,)),
+                        dus(lrow, row, (off, 0)))
+
+            init = (jnp.zeros(nflat), jnp.zeros(nflat),
+                    jnp.arange(nflat, dtype=jnp.int32),
+                    jnp.zeros((nflat, nc)))
+            t_end, ssum, nxt, lrow = jax.lax.fori_loop(0, nlv, body, init)
+            T, v = sink_slot(t_end, ssum)
+
+            # -- pass 2: reverse backtrace = pointer chase from the sink
+            #    slot (slots without a chosen edge self-point, with zero
+            #    latency rows, so stalled steps are exact no-ops) ------------
+            _, visited = jax.lax.scan(lambda cur, _: (nxt[cur], cur),
+                                      jnp.int32(v), None, length=nlv)
+            # -- pass 3: ascending-level accumulation — flipping the walk
+            #    replays the fused layout's exact float addition order
+            #    (leading stall levels add exact +0.0), so λ is
+            #    bit-identical to ``fused=True`` ----------------------------
+            lam, _ = jax.lax.scan(lambda acc, r: (acc + r, 0.0),
+                                  jnp.zeros(nc), lrow[visited][::-1])
+            return T, lam
+
         if want_lam:
+            # -- fused reference layout: [nflat, nc] slope carry in-loop,
+            #    one-hot masked reductions (the original formulation) --------
             def body(lv, carry):
                 t_end, slope, ssum = carry
-                cand, ts = relax(lv, t_end)
-                # realizing edges, max-total-slope then max-ordinal tie-break
-                # (exactly the scalar LevelPlan.forward rule)
-                hit = vmaskd[lv] & (cand >= ts[:, None] - ATOL)
-                cs = ssum[vsrc[lv]] + vlat_sum[lv]
-                best = jnp.max(jnp.where(hit, cs, -BIG), axis=1)
-                sel = hit & (cs >= best[:, None] - ATOL)
-                chosen = jnp.max(jnp.where(sel, didx, -1), axis=1)   # [Vmax]
-                # one-hot of the chosen in-edge ordinal; masked reductions
-                # instead of take_along_axis (gathers lower poorly under the
-                # extra graph-axis vmap; Dmax is small, so a reduce is cheap)
+                ts, chosen, sel = choose(lv, t_end, ssum)
                 onehot = sel & (didx[None, :] == chosen[:, None])
                 srcv = jnp.max(jnp.where(onehot, vsrc[lv], 0), axis=1)
-                has = (chosen >= 0)[:, None]
+                has = chosen >= 0
                 sl_new = jnp.where(
-                    has, slope[srcv]
+                    has[:, None], slope[srcv]
                     + jnp.sum(jnp.where(onehot[:, :, None], vlat[lv], 0.0),
                               axis=1), 0.0)
                 ss_new = jnp.where(
-                    has[:, 0], ssum[srcv]
+                    has, ssum[srcv]
                     + jnp.sum(jnp.where(onehot, vlat_sum[lv], 0.0), axis=1),
                     0.0)
                 off = lv * Vmax
@@ -136,15 +245,8 @@ def _make_segment_one(want_lam: bool):
 
             init = (jnp.zeros(nflat), jnp.zeros((nflat, nc)), jnp.zeros(nflat))
             t_end, slope, ssum = jax.lax.fori_loop(0, nlv, body, init)
-            T = jnp.max(jnp.where(valid_flat, t_end, -BIG))
-            sink = valid_flat & (t_end >= T - ATOL)
-            # scalar rule: among makespan sinks, the max-ssum one with the
-            # smallest original vertex id
-            mx = jnp.max(jnp.where(sink, ssum, -BIG))
-            top = sink & (ssum >= mx)
-            v = jnp.argmin(jnp.where(top, vert_of_slot, jnp.iinfo(jnp.int32).max))
-            lam = slope[v]
-            return T, lam
+            T, v = sink_slot(t_end, ssum)
+            return T, slope[v]
 
         def body(lv, t_end):
             _, ts = relax(lv, t_end)
@@ -157,95 +259,258 @@ def _make_segment_one(want_lam: bool):
     return one
 
 
-def _segment_forward(want_lam: bool):
-    """jit'd forward over one graph × S scenarios → T [S], λ [S, nc]."""
+def _segment_core(want_lam: bool, fused: bool = False):
+    """Unjitted forward over one graph × S scenarios → T [S], λ [S, nc]."""
     jax = _jax()
-    one = _make_segment_one(want_lam)
-    return jax.jit(jax.vmap(one, in_axes=(None,) * 10 + (0, 0)))
+    one = _make_segment_one(want_lam, fused)
+    return jax.vmap(one, in_axes=(None,) * 10 + (0, 0))
 
 
-def _segment_forward_multi(want_lam: bool):
-    """jit'd forward over G graphs × S scenarios → T [G, S], λ [G, S, nc].
+def _segment_core_multi(want_lam: bool, fused: bool = False):
+    """Unjitted forward over G graphs × S scenarios → T [G, S], λ [G, S, nc].
 
     Inner vmap rides scenarios, outer vmap rides the MultiPlan's graph axis
     (every plan tensor gains a leading G dim, and scenarios are per-graph
     [G, S, ·] so variant groups with different base points batch together).
     """
     jax = _jax()
-    one = _make_segment_one(want_lam)
+    one = _make_segment_one(want_lam, fused)
     over_s = jax.vmap(one, in_axes=(None,) * 10 + (0, 0))
-    return jax.jit(jax.vmap(over_s, in_axes=(0,) * 12))
+    return jax.vmap(over_s, in_axes=(0,) * 12)
 
 
-def _dense_forward():
-    """Values-only forward with the Pallas (max,+) kernel as inner scatter."""
+def _dense_core(want_lam: bool = False):
+    """Forward with the Pallas (max,+) kernel as the inner scatter.
+
+    Values-only runs the plain kernel; with ``want_lam`` the argmax-emitting
+    kernel variant records each level's realizing edge slot (tie keys =
+    cumulative slope sums, mirroring the segment rule) and a reverse
+    backtrace scan over the recorded slots recovers λ — T/λ/ρ straight from
+    the pallas backend, no segment redispatch.  Float32 accumulators (TPU
+    VPU layout) → T matches segment to ~1e-6 relative.  Tie caveat: the
+    kernel compares candidates *exactly* (a tolerance-grouped tie set is
+    not associative across its blocked reduction), where segment groups
+    float64 candidates within ATOL — structurally tied paths still compare
+    equal in f32 (identical op sequences), but a pair of paths whose f64
+    sums tie only to within ATOL can resolve differently and shift λ by a
+    whole count; segment is the bit-exact reference when that matters.
+    """
     jax = _jax()
     jnp = jax.numpy
-    from repro.kernels.maxplus.ops import maxplus_matvec
+    from repro.kernels.maxplus.ops import (maxplus_matvec,
+                                           maxplus_matvec_argmax)
 
     def fwd(A, esrc, emask, econst, egap, egclass, elat, vcost_lv,
-            valid_flat, Lmat, GSmat):
+            valid_flat, vert_of_slot, Lmat, GSmat):
         nlv, Emax = esrc.shape
         Vmax = vcost_lv.shape[1]
         S = Lmat.shape[0]
+        nc = elat.shape[2]
         nflat = valid_flat.shape[0]
+        elat_sum = jnp.sum(elat, axis=2)                        # [nlv, Emax]
 
-        def body(lv, t_end):
+        def edge_cand(lv, t_end):
             gse = GSmat[:, egclass[lv]].T                       # [Emax, S]
             w = (econst[lv][:, None] + egap[lv][:, None] * (gse - 1.0)
                  + elat[lv] @ Lmat.T)
             cand = t_end[esrc[lv]] + w
-            cand = jnp.where(emask[lv][:, None], cand, -BIG).astype(jnp.float32)
-            ts = maxplus_matvec(A[lv], cand)                    # [Vmax, S]
-            ts = jnp.maximum(ts, 0.0)
-            return jax.lax.dynamic_update_slice(
-                t_end, ts + vcost_lv[lv][:, None], (lv * Vmax, 0))
+            return jnp.where(emask[lv][:, None], cand,
+                             -BIG).astype(jnp.float32)
 
-        t_end = jax.lax.fori_loop(0, nlv, body,
-                                  jnp.zeros((nflat, S), jnp.float32))
-        return jnp.max(jnp.where(valid_flat[:, None], t_end, -BIG), axis=0)
+        if not want_lam:
+            def body(lv, t_end):
+                ts = maxplus_matvec(A[lv], edge_cand(lv, t_end))
+                ts = jnp.maximum(ts, 0.0)                       # [Vmax, S]
+                return jax.lax.dynamic_update_slice(
+                    t_end, ts + vcost_lv[lv][:, None], (lv * Vmax, 0))
 
-    return jax.jit(fwd)
+            t_end = jax.lax.fori_loop(0, nlv, body,
+                                      jnp.zeros((nflat, S), jnp.float32))
+            T = jnp.max(jnp.where(valid_flat[:, None], t_end, -BIG), axis=0)
+            return T, jnp.zeros((S, nc), jnp.float32)
+
+        def body(lv, carry):
+            t_end, ssum, chosen_all = carry
+            cand = edge_cand(lv, t_end)
+            cs = (ssum[esrc[lv]]
+                  + elat_sum[lv][:, None]).astype(jnp.float32)  # [Emax, S]
+            raw, eidx = maxplus_matvec_argmax(A[lv], cand, cs)  # [Vmax, S]
+            ts = jnp.maximum(raw, 0.0)
+            chosen = jnp.where(raw >= 0.0, eidx, -1)
+            e_s = jnp.where(chosen >= 0, chosen, 0)
+            src_slot = esrc[lv][e_s]                            # [Vmax, S]
+            gss = jnp.take_along_axis(ssum, src_slot, axis=0)
+            ss_new = jnp.where(chosen >= 0, gss + elat_sum[lv][e_s], 0.0)
+            off = lv * Vmax
+            return (jax.lax.dynamic_update_slice(
+                        t_end, ts + vcost_lv[lv][:, None], (off, 0)),
+                    jax.lax.dynamic_update_slice(ssum, ss_new, (off, 0)),
+                    jax.lax.dynamic_update_slice(chosen_all, chosen[None],
+                                                 (lv, 0, 0)))
+
+        init = (jnp.zeros((nflat, S), jnp.float32),
+                jnp.zeros((nflat, S), jnp.float32),
+                jnp.full((nlv, Vmax, S), -1, jnp.int32))
+        t_end, ssum, chosen_all = jax.lax.fori_loop(0, nlv, body, init)
+        T = jnp.max(jnp.where(valid_flat[:, None], t_end, -BIG), axis=0)
+        sink = valid_flat[:, None] & (t_end >= T[None, :])
+        mx = jnp.max(jnp.where(sink, ssum, -BIG), axis=0)
+        top = sink & (ssum >= mx[None, :])
+        vsel = jnp.argmin(jnp.where(top, vert_of_slot[:, None],
+                                    jnp.iinfo(jnp.int32).max), axis=0)
+
+        sidx = jnp.arange(S)
+
+        def back(i, carry):
+            cur, lam = carry
+            lv = nlv - 1 - i
+            onlvl = (cur >= lv * Vmax) & (cur < (lv + 1) * Vmax)
+            off = jnp.where(onlvl, cur - lv * Vmax, 0)
+            e = chosen_all[lv, off, sidx]                       # [S]
+            take = onlvl & (e >= 0)
+            e_s = jnp.where(take, e, 0)
+            lam = lam + jnp.where(take[:, None], elat[lv, e_s, :], 0.0)
+            cur = jnp.where(take, esrc[lv, e_s], cur)
+            return cur, lam
+
+        _, lam = jax.lax.fori_loop(
+            0, nlv, back,
+            (vsel.astype(jnp.int32), jnp.zeros((S, nc), jnp.float32)))
+        return T, lam
+
+    return fwd
 
 
-def _dense_forward_multi():
-    """Values-only multi-graph forward: the batched Pallas (max,+) kernel
-    runs every packed graph's level scatter in one launch (graphs on the
-    kernel's outer grid axis, scenarios on the 128-wide lane axis)."""
+def _dense_core_multi(want_lam: bool = False):
+    """Multi-graph pallas forward: the batched (max,+) kernel runs every
+    packed graph's level scatter in one launch (graphs on the kernel's
+    outer grid axis, scenarios on the 128-wide lane axis); with
+    ``want_lam`` the batched argmax kernel records the realizing edge slots
+    and the reverse backtrace runs per (graph, scenario)."""
     jax = _jax()
     jnp = jax.numpy
-    from repro.kernels.maxplus.ops import maxplus_matvec_batched
+    from repro.kernels.maxplus.ops import (maxplus_matvec_argmax_batched,
+                                           maxplus_matvec_batched)
 
     def fwd(A, esrc, emask, econst, egap, egclass, elat, vcost_lv,
-            valid_flat, Lmat, GSmat):
+            valid_flat, vert_of_slot, Lmat, GSmat):
         G, nlv, Emax = esrc.shape
         Vmax = vcost_lv.shape[2]
         S = Lmat.shape[1]
+        nc = elat.shape[3]
         nflat = valid_flat.shape[1]
+        elat_sum = jnp.sum(elat, axis=3)                     # [G, nlv, Emax]
 
-        def body(lv, t_end):
+        def edge_cand(lv, t_end):
             # gse[g, e, s] = GSmat[g, s, egclass[g, lv, e]]
             gse = jnp.take_along_axis(
                 jnp.swapaxes(GSmat, 1, 2), egclass[:, lv][:, :, None], axis=1)
             w = (econst[:, lv][:, :, None]
                  + egap[:, lv][:, :, None] * (gse - 1.0)
                  + jnp.einsum("gec,gsc->ges", elat[:, lv], Lmat))
-            cand = jnp.take_along_axis(t_end, esrc[:, lv][:, :, None], axis=1) + w
-            cand = jnp.where(emask[:, lv][:, :, None], cand,
+            cand = jnp.take_along_axis(t_end, esrc[:, lv][:, :, None],
+                                       axis=1) + w
+            return jnp.where(emask[:, lv][:, :, None], cand,
                              -BIG).astype(jnp.float32)
-            ts = maxplus_matvec_batched(A[:, lv], cand)       # [G, Vmax, S]
-            ts = jnp.maximum(ts, 0.0)
-            return jax.lax.dynamic_update_slice(
-                t_end, ts + vcost_lv[:, lv][:, :, None], (0, lv * Vmax, 0))
 
-        t_end = jax.lax.fori_loop(0, nlv, body,
-                                  jnp.zeros((G, nflat, S), jnp.float32))
-        return jnp.max(jnp.where(valid_flat[:, :, None], t_end, -BIG), axis=1)
+        if not want_lam:
+            def body(lv, t_end):
+                ts = maxplus_matvec_batched(A[:, lv], edge_cand(lv, t_end))
+                ts = jnp.maximum(ts, 0.0)                    # [G, Vmax, S]
+                return jax.lax.dynamic_update_slice(
+                    t_end, ts + vcost_lv[:, lv][:, :, None], (0, lv * Vmax, 0))
 
-    return jax.jit(fwd)
+            t_end = jax.lax.fori_loop(0, nlv, body,
+                                      jnp.zeros((G, nflat, S), jnp.float32))
+            T = jnp.max(jnp.where(valid_flat[:, :, None], t_end, -BIG), axis=1)
+            return T, jnp.zeros((G, S, nc), jnp.float32)
+
+        def body(lv, carry):
+            t_end, ssum, chosen_all = carry
+            cand = edge_cand(lv, t_end)
+            cs = (jnp.take_along_axis(ssum, esrc[:, lv][:, :, None], axis=1)
+                  + elat_sum[:, lv][:, :, None]).astype(jnp.float32)
+            raw, eidx = maxplus_matvec_argmax_batched(A[:, lv], cand, cs)
+            ts = jnp.maximum(raw, 0.0)                       # [G, Vmax, S]
+            chosen = jnp.where(raw >= 0.0, eidx, -1)
+            e_s = jnp.where(chosen >= 0, chosen, 0)
+            src_slot = jnp.take_along_axis(esrc[:, lv][:, :, None], e_s,
+                                           axis=1)           # [G, Vmax, S]
+            gss = jnp.take_along_axis(ssum, src_slot, axis=1)
+            ces = jnp.take_along_axis(elat_sum[:, lv][:, :, None], e_s,
+                                      axis=1)
+            ss_new = jnp.where(chosen >= 0, gss + ces, 0.0)
+            off = lv * Vmax
+            return (jax.lax.dynamic_update_slice(
+                        t_end, ts + vcost_lv[:, lv][:, :, None], (0, off, 0)),
+                    jax.lax.dynamic_update_slice(ssum, ss_new, (0, off, 0)),
+                    jax.lax.dynamic_update_slice(chosen_all, chosen[:, None],
+                                                 (0, lv, 0, 0)))
+
+        init = (jnp.zeros((G, nflat, S), jnp.float32),
+                jnp.zeros((G, nflat, S), jnp.float32),
+                jnp.full((G, nlv, Vmax, S), -1, jnp.int32))
+        t_end, ssum, chosen_all = jax.lax.fori_loop(0, nlv, body, init)
+        T = jnp.max(jnp.where(valid_flat[:, :, None], t_end, -BIG), axis=1)
+        sink = valid_flat[:, :, None] & (t_end >= T[:, None, :])
+        mx = jnp.max(jnp.where(sink, ssum, -BIG), axis=1)
+        top = sink & (ssum >= mx[:, None, :])
+        vsel = jnp.argmin(jnp.where(top, vert_of_slot[:, :, None],
+                                    jnp.iinfo(jnp.int32).max), axis=1)
+
+        def back(i, carry):
+            cur, lam = carry                                  # [G, S], [G, S, nc]
+            lv = nlv - 1 - i
+            onlvl = (cur >= lv * Vmax) & (cur < (lv + 1) * Vmax)
+            off = jnp.where(onlvl, cur - lv * Vmax, 0)
+            e = jnp.take_along_axis(chosen_all[:, lv], off[:, None, :],
+                                    axis=1)[:, 0, :]          # [G, S]
+            take = onlvl & (e >= 0)
+            e_s = jnp.where(take, e, 0)
+            rows = jnp.take_along_axis(elat[:, lv], e_s[:, :, None],
+                                       axis=1)                # [G, S, nc]
+            lam = lam + jnp.where(take[:, :, None], rows, 0.0)
+            cur = jnp.where(take,
+                            jnp.take_along_axis(esrc[:, lv], e_s, axis=1),
+                            cur)
+            return cur, lam
+
+        _, lam = jax.lax.fori_loop(
+            0, nlv, back,
+            (vsel.astype(jnp.int32), jnp.zeros((G, S, nc), jnp.float32)))
+        return T, lam
+
+    return fwd
 
 
 _FWD_CACHE: dict = {}
+_MESHES: dict = {}
+
+
+def _device_mesh(ndev: int):
+    """1-D device mesh over the first ``ndev`` local devices (cached)."""
+    jax = _jax()
+    if ndev not in _MESHES:
+        _MESHES[ndev] = jax.sharding.Mesh(
+            np.asarray(jax.devices()[:ndev]), ("x",))
+    return _MESHES[ndev]
+
+
+def _resolve_shard(shard, size: int) -> Optional[int]:
+    """Normalize a ``shard=`` request to a device count that divides the
+    batch axis (None = unsharded).  ``True``/"auto" = all local devices;
+    an int = at most that many.  The count is walked down to the largest
+    divisor of ``size`` so sharded and single-device runs stay bit-equal
+    (no pad rows, no uneven splits)."""
+    if not shard:
+        return None
+    jax = _jax()
+    avail = len(jax.devices())
+    ndev = avail if shard is True or shard == "auto" else min(int(shard), avail)
+    ndev = max(min(ndev, size), 1)
+    while size % ndev:
+        ndev -= 1
+    return ndev if ndev > 1 else None
 
 
 def _stage_arrays(plan, kind: str, max_dense_bytes: int) -> tuple:
@@ -267,18 +532,49 @@ def _stage_arrays(plan, kind: str, max_dense_bytes: int) -> tuple:
         plan.dense_indicator(-BIG), plan.esrc, plan.emask,
         plan.econst.astype(np.float32), plan.egap.astype(np.float32),
         plan.egclass, plan.elat.astype(np.float32),
-        plan.vcost_lv.astype(np.float32), plan.valid_flat))
+        plan.vcost_lv.astype(np.float32), plan.valid_flat,
+        plan.vert_of_slot))
 
 
-def _get_forward(kind: str, want_lam: bool = False, multi: bool = False):
-    key = (kind, want_lam, multi)
-    if key not in _FWD_CACHE:
-        if kind == "segment":
-            fn = (_segment_forward_multi if multi else _segment_forward)(want_lam)
+#: positional plan args every core takes ahead of (Lmat, GSmat)
+_N_PLAN_ARGS = 10
+
+
+def _get_forward(kind: str, want_lam: bool = False, multi: bool = False,
+                 fused: bool = False, mesh=None):
+    """Build (or fetch) the jitted forward for one (backend, λ, multi) cell.
+
+    With ``mesh`` the core is wrapped in ``shard_map`` before jit: multi
+    forwards shard the MultiPlan's leading graph axis (every input and both
+    outputs split on it — the natural axis, each graph's program is
+    independent); single-graph forwards replicate the plan tensors and
+    shard the scenario axis.  Per-element arithmetic is unchanged either
+    way, so sharded results are bit-identical to single-device runs.
+    """
+    jax = _jax()
+    mesh_key = None if mesh is None else tuple(
+        d.id for d in np.asarray(mesh.devices).flat)
+    fused = bool(fused and want_lam and kind == "segment")
+    key = (kind, want_lam, multi, fused, mesh_key)
+    if key in _FWD_CACHE:
+        return _FWD_CACHE[key]
+    if kind == "segment":
+        core = (_segment_core_multi if multi else _segment_core)(want_lam,
+                                                                 fused)
+    else:
+        core = (_dense_core_multi if multi else _dense_core)(want_lam)
+    if mesh is not None:
+        from jax.experimental.shard_map import shard_map
+        P = jax.sharding.PartitionSpec
+        if multi:
+            in_specs = (P("x"),) * (_N_PLAN_ARGS + 2)
         else:
-            fn = (_dense_forward_multi if multi else _dense_forward)()
-        _FWD_CACHE[key] = fn
-    return _FWD_CACHE[key]
+            in_specs = (P(),) * _N_PLAN_ARGS + (P("x"), P("x"))
+        core = shard_map(core, mesh=mesh, in_specs=in_specs,
+                         out_specs=(P("x"), P("x")), check_rep=False)
+    fn = jax.jit(core)
+    _FWD_CACHE[key] = fn
+    return fn
 
 
 class SweepEngine:
@@ -292,7 +588,7 @@ class SweepEngine:
     MAX_DENSE_BYTES = 256 << 20
 
     def __init__(self, graph=None, params: Optional[LogGPS] = None,
-                 backend: str = "segment",
+                 backend: str = "segment", shard=None,
                  compiled: Optional[CompiledPlan] = None,
                  cache: Optional[SweepCache] = DEFAULT_CACHE):
         if compiled is None:
@@ -304,6 +600,7 @@ class SweepEngine:
         self.compiled = compiled
         self.params = params
         self.backend = backend
+        self.shard = shard        # default device sharding (None = off)
         self.cache = cache
         self.calls = 0            # compiled-program dispatches (cache hits excluded)
         self._dev: dict = {}
@@ -316,18 +613,31 @@ class SweepEngine:
         return self._dev[kind]
 
     def run(self, scenarios: ScenarioBatch, compute_lam: bool = True,
-            backend: Optional[str] = None,
+            backend: Optional[str] = None, shard=None,
             use_cache: bool = True) -> SweepResult:
-        """Evaluate every scenario; returns numpy-backed :class:`SweepResult`."""
+        """Evaluate every scenario; returns numpy-backed :class:`SweepResult`.
+
+        ``backend="pallas"`` serves T *and* λ/ρ directly — the argmax-
+        emitting (max,+) kernel records the λ backtrace, no segment
+        redispatch.  ``shard`` (None/True/"auto"/int) splits the scenario
+        axis across local devices via ``shard_map``; results stay
+        bit-identical to the single-device run.
+        """
         backend = backend or self.backend
         if backend not in ("segment", "pallas"):
             raise ValueError(f"unknown backend {backend!r}")
         if backend == "pallas" and compute_lam:
-            # the (max,+) kernel emits values only — λ needs the argmax
-            # backtrace, so the whole evaluation runs on the segment path
-            # (running both would be strictly slower for the same answer)
-            return self.run(scenarios, compute_lam=True, backend="segment",
-                            use_cache=use_cache)
+            # guard: if the λ-emitting kernel cannot even be built on this
+            # install, say so ONCE and fall back — never silently ignore an
+            # explicit backend choice
+            try:
+                _get_forward("pallas", True)
+            except ImportError as e:
+                _warn_once(("override", "pallas-lam"),
+                           "backend='pallas' with compute_lam=True needs the "
+                           f"argmax (max,+) kernel, which failed to import "
+                           f"({e}); overriding to backend='segment'")
+                backend = "segment"
         c = self.compiled
         if scenarios.nclass != c.nclass:
             raise ValueError(f"scenario batch has {scenarios.nclass} classes, "
@@ -344,7 +654,8 @@ class SweepEngine:
                     lam=None if hit.lam is None else hit.lam.copy(),
                     rho=None if hit.rho is None else hit.rho.copy(),
                     scenarios=scenarios, from_cache=True)
-        res = self._run_uncached(scenarios, compute_lam, backend)
+        res = self._run_uncached(scenarios, compute_lam, backend,
+                                 shard if shard is not None else self.shard)
         if cache is not None:
             # store a private copy: the caller may mutate the returned
             # arrays in place, which must never poison later cache hits
@@ -355,31 +666,33 @@ class SweepEngine:
         return res
 
     def _run_uncached(self, scenarios: ScenarioBatch, compute_lam: bool,
-                      backend: str) -> SweepResult:
+                      backend: str, shard=None) -> SweepResult:
         S = scenarios.S
         Sp = _bucket(S, lo=4)
         Lmat = np.repeat(scenarios.L[-1:], Sp, axis=0)
         Lmat[:S] = scenarios.L
         GSmat = np.repeat(scenarios.gscale[-1:], Sp, axis=0)
         GSmat[:S] = scenarios.gscale
+        ndev = _resolve_shard(shard, Sp)
+        mesh = _device_mesh(ndev) if ndev else None
 
         if backend == "segment":
             from jax.experimental import enable_x64
             with enable_x64():
                 jnp = _jax().numpy
                 arrs = self._arrays("segment")
-                fwd = _get_forward("segment", compute_lam)
+                fwd = _get_forward("segment", compute_lam, mesh=mesh)
                 T, lam = fwd(*arrs, jnp.asarray(Lmat), jnp.asarray(GSmat))
                 T = np.asarray(T)[:S]
                 lam = np.asarray(lam)[:S]
         elif backend == "pallas":
             jnp = _jax().numpy
             arrs = self._arrays("pallas")
-            fwd = _get_forward("pallas")
-            T = np.asarray(fwd(*arrs, jnp.asarray(Lmat, dtype=jnp.float32),
-                               jnp.asarray(GSmat, dtype=jnp.float32)))
-            T = T.astype(np.float64)[:S]
-            lam = None
+            fwd = _get_forward("pallas", compute_lam, mesh=mesh)
+            T, lam = fwd(*arrs, jnp.asarray(Lmat, dtype=jnp.float32),
+                         jnp.asarray(GSmat, dtype=jnp.float32))
+            T = np.asarray(T).astype(np.float64)[:S]
+            lam = np.asarray(lam).astype(np.float64)[:S]
         self.calls += 1
 
         if compute_lam:
@@ -475,7 +788,7 @@ class MultiSweepEngine:
     MAX_DENSE_BYTES = SweepEngine.MAX_DENSE_BYTES
 
     def __init__(self, graphs_params=None, names=None,
-                 backend: str = "segment",
+                 backend: str = "segment", shard=None,
                  multi: Optional[MultiPlan] = None,
                  cache: Optional[SweepCache] = DEFAULT_CACHE):
         if multi is None:
@@ -485,6 +798,7 @@ class MultiSweepEngine:
         if backend not in ("segment", "pallas"):
             raise ValueError(f"unknown backend {backend!r}")
         self.multi = multi
+        self.shard = shard
         self.params = ([p for _, p in graphs_params]
                        if graphs_params else [None] * multi.G)
         self.names = tuple(names) if names else tuple(
@@ -530,20 +844,29 @@ class MultiSweepEngine:
         return batches
 
     def run(self, scenarios, compute_lam: bool = True,
-            backend: Optional[str] = None,
+            backend: Optional[str] = None, shard=None,
             use_cache: bool = True) -> MultiSweepResult:
         """One compiled call → :class:`MultiSweepResult` over every graph.
 
         ``scenarios``: one :class:`ScenarioBatch` (broadcast to all graphs)
         or a per-graph sequence with equal S (variant studies whose base
-        parameter points differ).
+        parameter points differ).  ``backend="pallas"`` returns λ/ρ directly
+        (batched argmax kernel).  ``shard`` splits the MultiPlan's leading
+        graph axis across local devices via ``shard_map`` — the natural
+        mesh axis; results stay bit-identical to the single-device run.
         """
         backend = backend or self.backend
         if backend not in ("segment", "pallas"):
             raise ValueError(f"unknown backend {backend!r}")
         if backend == "pallas" and compute_lam:
-            return self.run(scenarios, compute_lam=True, backend="segment",
-                            use_cache=use_cache)
+            try:
+                _get_forward("pallas", True, multi=True)
+            except ImportError as e:
+                _warn_once(("override", "pallas-lam"),
+                           "backend='pallas' with compute_lam=True needs the "
+                           f"argmax (max,+) kernel, which failed to import "
+                           f"({e}); overriding to backend='segment'")
+                backend = "segment"
         batches = self._batches(scenarios)
         cache = self.cache if use_cache else None
         key = None
@@ -573,23 +896,27 @@ class MultiSweepEngine:
             GSmat[i, :S] = b.gscale
             GSmat[i, S:] = b.gscale[-1]
 
+        ndev = _resolve_shard(shard if shard is not None else self.shard,
+                              G)
+        mesh = _device_mesh(ndev) if ndev else None
         if backend == "segment":
             from jax.experimental import enable_x64
             with enable_x64():
                 jnp = _jax().numpy
                 arrs = self._arrays("segment")
-                fwd = _get_forward("segment", compute_lam, multi=True)
+                fwd = _get_forward("segment", compute_lam, multi=True,
+                                   mesh=mesh)
                 T, lam = fwd(*arrs, jnp.asarray(Lmat), jnp.asarray(GSmat))
                 T = np.asarray(T)[:, :S]
                 lam = np.asarray(lam)[:, :S]
         elif backend == "pallas":
             jnp = _jax().numpy
             arrs = self._arrays("pallas")
-            fwd = _get_forward("pallas", multi=True)
-            T = np.asarray(fwd(*arrs, jnp.asarray(Lmat, dtype=jnp.float32),
-                               jnp.asarray(GSmat, dtype=jnp.float32)))
-            T = T.astype(np.float64)[:, :S]
-            lam = None
+            fwd = _get_forward("pallas", compute_lam, multi=True, mesh=mesh)
+            T, lam = fwd(*arrs, jnp.asarray(Lmat, dtype=jnp.float32),
+                         jnp.asarray(GSmat, dtype=jnp.float32))
+            T = np.asarray(T).astype(np.float64)[:, :S]
+            lam = np.asarray(lam).astype(np.float64)[:, :S]
         self.calls += 1
 
         if compute_lam:
@@ -616,25 +943,27 @@ class MultiSweepEngine:
 
 # -- lockstep-batched bisections (the dag.py loops, one engine call/round) ----
 
-def _probe(eng: SweepEngine, params: LogGPS, Lvals, cls: int):
+def _probe(eng: SweepEngine, params: LogGPS, Lvals, cls: int,
+           backend: Optional[str] = None):
     batch = latency_grid(params, np.asarray(Lvals, dtype=np.float64),
                          cls=cls, absolute=True)
-    res = eng.run(batch, compute_lam=True, use_cache=False)
+    res = eng.run(batch, compute_lam=True, use_cache=False, backend=backend)
     return res.T, res.lam[:, cls]
 
 
 def tolerance_batched(eng: SweepEngine, params: LogGPS,
                       degradations: Sequence[float], cls: int = 0,
                       L_hi: float = 1e7, tol: float = 1e-6,
-                      max_iter: int = 200) -> dict:
+                      max_iter: int = 200,
+                      backend: Optional[str] = None) -> dict:
     """All of ``dag.tolerance``'s bisections in lockstep: each round probes
     every still-active degradation level in one batched forward."""
     degr = np.asarray(list(degradations), dtype=np.float64)
     S = degr.shape[0]
     L0 = float(params.L[cls])
-    T0 = _probe(eng, params, [L0], cls)[0][0]
+    T0 = _probe(eng, params, [L0], cls, backend)[0][0]
     budgets = (1.0 + degr) * T0
-    Thi = _probe(eng, params, [L_hi], cls)[0][0]
+    Thi = _probe(eng, params, [L_hi], cls, backend)[0][0]
 
     out = np.empty(S)
     done = Thi <= budgets
@@ -645,11 +974,11 @@ def tolerance_batched(eng: SweepEngine, params: LogGPS,
         act = np.nonzero(~done)[0]
         if act.size == 0:
             break
-        Tb, lb = _probe(eng, params, b[act], cls)
+        Tb, lb = _probe(eng, params, b[act], cls, backend)
         x = np.where(lb > 0, b[act] + (budgets[act] - Tb) / np.where(lb > 0, lb, 1.0),
                      (a[act] + b[act]) / 2)
         x = np.clip(x, a[act], b[act])
-        Tx, _ = _probe(eng, params, x, cls)
+        Tx, _ = _probe(eng, params, x, cls, backend)
         conv = np.abs(Tx - budgets[act]) <= tol * np.maximum(1.0, budgets[act])
         out[act[conv]] = x[conv] - L0
         done[act[conv]] = True
@@ -666,10 +995,11 @@ def tolerance_batched(eng: SweepEngine, params: LogGPS,
 
 def breakpoints_batched(eng: SweepEngine, params: LogGPS, L_min: float,
                         L_max: float, cls: int = 0, tol: float = 1e-9,
-                        max_bp: int = 10_000, max_depth: int = 80) -> list:
+                        max_bp: int = 10_000, max_depth: int = 80,
+                        backend: Optional[str] = None) -> list:
     """``dag.breakpoints`` with the recursion flattened level-by-level: all
     frontier intervals' probe points are evaluated in one batched call."""
-    (ya, yb), (sa, sb) = _probe(eng, params, [L_min, L_max], cls)
+    (ya, yb), (sa, sb) = _probe(eng, params, [L_min, L_max], cls, backend)
     frontier = [(L_min, float(ya), float(sa), L_max, float(yb), float(sb), 0)]
     out: list = []
     while frontier and len(out) < max_bp:
@@ -681,7 +1011,7 @@ def breakpoints_batched(eng: SweepEngine, params: LogGPS, L_min: float,
         for (A, yA, sA, B, yB, sB, _) in work:
             x = (yB - sB * B - (yA - sA * A)) / (sA - sB)
             xs.append(min(max(x, A + tol), B - tol))
-        ys, ss = _probe(eng, params, xs, cls)
+        ys, ss = _probe(eng, params, xs, cls, backend)
         frontier = []
         for (A, yA, sA, B, yB, sB, d), x, yx, sx in zip(work, xs, ys, ss):
             if len(out) >= max_bp:

@@ -37,7 +37,24 @@ class ScenarioBatch:
     def __post_init__(self):
         self.L = np.atleast_2d(np.asarray(self.L, dtype=np.float64))
         self.gscale = np.atleast_2d(np.asarray(self.gscale, dtype=np.float64))
-        assert self.L.shape == self.gscale.shape
+        # real exceptions, not asserts: shape/NaN bugs must surface under
+        # ``python -O`` too, and a single non-finite row would poison the
+        # whole batched forward (max-reductions propagate NaN everywhere)
+        if self.L.shape != self.gscale.shape:
+            raise ValueError(
+                f"scenario L and gscale shapes disagree: L is {self.L.shape}, "
+                f"gscale is {self.gscale.shape}")
+        bad = ~(np.isfinite(self.L).all(axis=1)
+                & np.isfinite(self.gscale).all(axis=1))
+        if bad.any():
+            rows = np.nonzero(bad)[0]
+            shown = rows[:8].tolist()
+            more = "" if rows.size <= 8 else f" (+{rows.size - 8} more)"
+            raise ValueError(
+                f"non-finite scenario rows {shown}{more}: "
+                f"L={self.L[rows[0]]}, gscale={self.gscale[rows[0]]} — "
+                "NaN/inf would poison every vertex the batched forward "
+                "touches")
 
     @property
     def S(self) -> int:

@@ -84,6 +84,28 @@ def test_bandwidth_query(svc):
     assert T[1] > T[0]                  # 4× slower links ⇒ longer step
 
 
+def test_per_request_backend_plumbs_to_engine(svc):
+    """A query can pick the compiled backend per request — pallas answers
+    λ natively now (no segment redirect), matching segment to f32
+    tolerance."""
+    seg = svc.handle(AnalysisRequest(kind="curve", variant="algo=ring",
+                                     deltas=[0.0, 10.0, 20.0]))
+    pal = svc.handle(AnalysisRequest(kind="curve", variant="algo=ring",
+                                     deltas=[0.0, 10.0, 20.0],
+                                     backend="pallas"))
+    assert pal.ok, pal.error
+    assert pal.payload["backend"] == "pallas"
+    assert seg.payload["backend"] == "segment"
+    np.testing.assert_allclose(pal.payload["T"], seg.payload["T"], rtol=1e-5)
+    np.testing.assert_allclose(pal.payload["lam"], seg.payload["lam"],
+                               rtol=1e-4, atol=1e-4)
+    # rank queries accept it too (packed MultiPlan call per bucket)
+    r = svc.handle(AnalysisRequest(kind="rank", deltas=[0.0, 25.0],
+                                   backend="pallas", reduce="final"))
+    assert r.ok, r.error
+    assert r.payload["best"] == "algo=recursive_doubling"
+
+
 def test_placement_query():
     """Placement suggestions ride the same service (two-tier Φ spec)."""
     from repro.core.graph import GraphBuilder

@@ -80,6 +80,49 @@ def test_maxplus_semiring_identity():
     np.testing.assert_allclose(np.asarray(o), np.asarray(t), atol=1e-6)
 
 
+@pytest.mark.parametrize("M,N,K,bm,bn", [(64, 128, 8, 32, 32),
+                                         (128, 128, 16, 64, 64)])
+def test_maxplus_argmax_matches_ref(M, N, K, bm, bn):
+    """The argmax-emitting kernel returns the lexicographic
+    (value, tie-key, ordinal) argmax across blocked reductions — exact ties
+    injected on purpose so the key and ordinal stages both fire."""
+    from repro.kernels.maxplus import (maxplus_matvec_argmax,
+                                      maxplus_matvec_argmax_ref)
+    rng = np.random.default_rng(11)
+    A = np.where(rng.random((M, N)) < 0.3,
+                 rng.uniform(0.0, 10.0, (M, N)), -1e30).astype(np.float32)
+    t = rng.uniform(0.0, 100.0, (N, K)).astype(np.float32)
+    c = rng.integers(0, 6, (N, K)).astype(np.float32)
+    # exact value ties across block boundaries: identical columns + edges
+    t[3] = t[N - 5]
+    A[7, 3] = A[7, N - 5] = 1.0
+    c[3] = c[N - 5]                      # key tie too → ordinal decides
+    o, i = maxplus_matvec_argmax(A, t, c, bm=bm, bn=bn)
+    ro, ri = maxplus_matvec_argmax_ref(jnp.asarray(A), jnp.asarray(t),
+                                       jnp.asarray(c))
+    np.testing.assert_array_equal(np.asarray(o), np.asarray(ro))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+    assert int(np.asarray(i)[7].max()) >= 0
+
+
+def test_maxplus_argmax_batched_matches_ref():
+    from repro.kernels.maxplus import (maxplus_matvec_argmax_batched,
+                                      maxplus_matvec_argmax_ref)
+    rng = np.random.default_rng(12)
+    G, M, N, K = 3, 32, 64, 8
+    A = np.where(rng.random((G, M, N)) < 0.4,
+                 rng.uniform(0.0, 5.0, (G, M, N)), -1e30).astype(np.float32)
+    t = rng.uniform(0.0, 50.0, (G, N, K)).astype(np.float32)
+    c = rng.integers(0, 4, (G, N, K)).astype(np.float32)
+    o, i = maxplus_matvec_argmax_batched(A, t, c, bm=16, bn=16)
+    for g in range(G):
+        ro, ri = maxplus_matvec_argmax_ref(jnp.asarray(A[g]),
+                                           jnp.asarray(t[g]),
+                                           jnp.asarray(c[g]))
+        np.testing.assert_array_equal(np.asarray(o[g]), np.asarray(ro))
+        np.testing.assert_array_equal(np.asarray(i[g]), np.asarray(ri))
+
+
 def test_model_attention_consistent_with_kernel():
     """models.layers.sdpa (XLA twin) ≡ Pallas flash kernel on GQA shapes."""
     from repro.models.layers import sdpa

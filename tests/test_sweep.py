@@ -105,11 +105,13 @@ def test_pallas_backend_matches_segment(params):
     pal = eng.run(batch, backend="pallas", compute_lam=False)
     # float32 accumulators (TPU VPU layout) → relative tolerance
     np.testing.assert_allclose(pal.T, seg.T, rtol=1e-5)
-    # λ needs the backtrace the kernel doesn't emit: the whole evaluation
-    # delegates to the segment path (exact, no double work)
+    # λ/ρ come straight from the argmax-emitting kernel — NO segment
+    # redirect (the pre-PR-3 silent fallback)
     lam_req = eng.run(batch, backend="pallas", compute_lam=True)
-    assert lam_req.backend == "segment"
-    np.testing.assert_array_equal(lam_req.T, seg.T)
+    assert lam_req.backend == "pallas"
+    np.testing.assert_allclose(lam_req.T, seg.T, rtol=1e-5)
+    np.testing.assert_allclose(lam_req.lam, seg.lam, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(lam_req.rho, seg.rho, rtol=1e-4, atol=1e-5)
     with pytest.raises(ValueError, match="backend"):
         eng.run(batch, backend="cuda")
 
@@ -521,6 +523,243 @@ def test_cache_eviction_and_stats(params):
     assert snap["evictions"] == 2
     cache.clear()
     assert len(cache) == 0 and cache.stats.misses == 0
+
+
+# -- PR 3: pallas λ backtrace, two-pass segment λ, sharding, guards ----------
+
+def test_pallas_lambda_matches_segment_100_random_graphs():
+    """backend='pallas' with compute_lam=True answers from the argmax
+    (max,+) kernel — over the same ≥100 random graph × point matrix as the
+    scalar-equivalence test, λ must match segment λ to ≤1e-5 relative
+    (float32 kernel accumulators)."""
+    rng = np.random.default_rng(7)
+    combos = 0
+    for i in range(25):
+        p = LogGPS(L=(float(rng.uniform(0.5, 8.0)),),
+                   G=(float(rng.uniform(1e-6, 1e-4)),),
+                   o=float(rng.uniform(0.0, 4.0)), S=1e9)
+        g = synth.random_dag(rng, nranks=int(rng.integers(2, 5)), nops=40,
+                             p_msg=float(rng.uniform(0.2, 0.6)), params=p)
+        eng = sweep.SweepEngine(g, p, cache=None)
+        deltas = np.sort(rng.uniform(0.0, 60.0, size=4))
+        batch = sweep.latency_grid(p, deltas)
+        seg = eng.run(batch)
+        pal = eng.run(batch, backend="pallas")
+        assert pal.backend == "pallas"
+        np.testing.assert_allclose(pal.T, seg.T, rtol=1e-5)
+        np.testing.assert_allclose(pal.lam, seg.lam, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(pal.rho, seg.rho, rtol=1e-4, atol=1e-5)
+        combos += batch.S
+    assert combos >= 100
+
+
+def test_multiplan_pallas_lambda_matches_segment():
+    """The batched argmax kernel serves λ for a whole packed MultiPlan
+    (graphs on the kernel's outer grid axis)."""
+    variants = _collective_topology_variants()
+    meng = sweep.MultiSweepEngine.from_variants(variants, cache=None)
+    deltas = np.linspace(0.0, 80.0, 10)
+    batches = [sweep.latency_grid(v.params, deltas) for v in variants]
+    seg = meng.run(batches)
+    pal = meng.run(batches, backend="pallas")
+    assert pal.backend == "pallas"
+    np.testing.assert_allclose(pal.T, seg.T, rtol=1e-5)
+    np.testing.assert_allclose(pal.lam, seg.lam, rtol=1e-5, atol=1e-5)
+
+
+def test_two_pass_lambda_bit_identical_to_fused(params):
+    """The default two-pass segment λ (next-pointer records + reverse
+    pointer chase) reproduces the fused single-loop backtrace bit-for-bit —
+    tie-heavy collective graphs and multi-class params included."""
+    from jax.experimental import enable_x64
+    import jax.numpy as jnp
+    p2 = tpu_pod_params(pod_size=2)
+    cases = [(synth.allreduce_chain(8, 3, params=params), params),
+             (synth.stencil2d(3, 3, 4, params=params), params),
+             (synth.stencil2d(2, 2, 3, params=p2), p2)]
+    for g, p in cases:
+        eng = sweep.SweepEngine(g, p, cache=None)
+        grid = sweep.latency_grid(p, np.linspace(0.0, 60.0, 9))
+        res = eng.run(grid)                        # two-pass default
+        S = grid.S
+        Sp = sweep_engine._bucket(S, lo=4)
+        Lm = np.repeat(grid.L[-1:], Sp, axis=0)
+        Lm[:S] = grid.L
+        GS = np.repeat(grid.gscale[-1:], Sp, axis=0)
+        GS[:S] = grid.gscale
+        with enable_x64():
+            fwd = sweep_engine._get_forward("segment", True, fused=True)
+            Tf, lf = fwd(*eng._arrays("segment"), jnp.asarray(Lm),
+                         jnp.asarray(GS))
+        np.testing.assert_array_equal(np.asarray(Tf)[:S], res.T)
+        np.testing.assert_array_equal(np.asarray(lf)[:S], res.lam)
+
+
+def test_sharded_matches_single_device():
+    """Sharded runs (shard_map over the MultiPlan graph axis / the
+    single-graph scenario axis) are bit-equal to single-device runs on a
+    forced ≥2-device CPU mesh.  Subprocess: the XLA flag must be set
+    before jax initializes."""
+    import os
+    import pathlib
+    import subprocess
+    import sys
+    prog = (
+        "import numpy as np, jax\n"
+        "assert len(jax.devices()) == 2, jax.devices()\n"
+        "from repro.core import synth\n"
+        "from repro.core.loggps import cluster_params\n"
+        "from repro import sweep\n"
+        "p = cluster_params(L_us=3.0, o_us=5.0)\n"
+        "variants = sweep.collective_variants(\n"
+        "    lambda a: synth.allreduce_chain(8, 1, params=p, algo=a),\n"
+        "    ['ring', 'recursive_doubling'], p)\n"
+        "meng = sweep.MultiSweepEngine.from_variants(variants, cache=None)\n"
+        "grid = sweep.latency_grid(p, np.linspace(0.0, 40.0, 8))\n"
+        "base = meng.run(grid)\n"
+        "sh = meng.run(grid, shard=True)\n"
+        "assert np.array_equal(base.T, sh.T)\n"
+        "assert np.array_equal(base.lam, sh.lam)\n"
+        "g = synth.stencil2d(2, 2, 3, params=p)\n"
+        "eng = sweep.SweepEngine(g, p, cache=None)\n"
+        "b = eng.run(grid)\n"
+        "s = eng.run(grid, shard=True)\n"
+        "assert np.array_equal(b.T, s.T) and np.array_equal(b.lam, s.lam)\n"
+        "bp = eng.run(grid, backend='pallas')\n"
+        "sp = eng.run(grid, backend='pallas', shard=True)\n"
+        "assert np.array_equal(bp.T, sp.T)\n"
+        "assert np.array_equal(bp.lam, sp.lam)\n"
+        "print('OK')\n"
+    )
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    env = {**os.environ,
+           "PYTHONPATH": src + os.pathsep + os.environ.get("PYTHONPATH", ""),
+           "XLA_FLAGS": (os.environ.get("XLA_FLAGS", "")
+                         + " --xla_force_host_platform_device_count=2")}
+    res = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert res.returncode == 0 and res.stdout.strip() == "OK", res.stderr
+
+
+def test_resolve_shard_divisor_walkdown(params):
+    """shard requests resolve to a divisor of the batch axis (or None)."""
+    assert sweep_engine._resolve_shard(None, 8) is None
+    assert sweep_engine._resolve_shard(False, 8) is None
+    assert sweep_engine._resolve_shard(1, 8) is None
+    # single local device in-process: every request degrades to None
+    assert sweep_engine._resolve_shard(True, 8) in (None, 2, 4, 8)
+
+
+def test_scenario_batch_validation():
+    """Shape/NaN validation raises real ValueErrors (not -O-stripped
+    asserts) naming the offending shapes / rows."""
+    with pytest.raises(ValueError, match="shapes disagree"):
+        sweep.ScenarioBatch(L=np.zeros((3, 2)), gscale=np.ones((2, 2)))
+    L = np.ones((4, 1))
+    L[2, 0] = np.nan
+    with pytest.raises(ValueError, match=r"non-finite scenario rows \[2\]"):
+        sweep.ScenarioBatch(L=L, gscale=np.ones((4, 1)))
+    G = np.ones((3, 1))
+    G[1, 0] = np.inf
+    with pytest.raises(ValueError, match=r"rows \[1\]"):
+        sweep.ScenarioBatch(L=np.ones((3, 1)), gscale=G)
+
+
+def test_auto_dispatch_warns_once_then_falls_back(params, monkeypatch):
+    """engine='auto' no longer swallows real engine bugs: a non-import
+    failure warns once (RuntimeWarning) and falls back to the scalar loop;
+    engine='sweep' surfaces it."""
+    import warnings as warnings_mod
+    g = synth.cg_like(2, 2, 3, params=params)
+    deltas = np.linspace(0.0, 20.0, 10)
+    ref = sensitivity.latency_curve(g, params, deltas, engine="scalar")
+
+    def boom(self, *a, **k):
+        raise RuntimeError("injected engine failure")
+
+    monkeypatch.setattr(sweep.SweepEngine, "run", boom)
+    sweep_engine._WARNED.clear()       # the shared warn-once registry
+    with pytest.warns(RuntimeWarning, match="injected engine failure"):
+        auto = sensitivity.latency_curve(g, params, deltas)
+    np.testing.assert_allclose(auto.T, ref.T)
+    np.testing.assert_allclose(auto.lam, ref.lam)
+    # warned once: the second call falls back silently
+    with warnings_mod.catch_warnings():
+        warnings_mod.simplefilter("error", RuntimeWarning)
+        auto2 = sensitivity.latency_curve(g, params, deltas)
+    np.testing.assert_allclose(auto2.T, ref.T)
+    with pytest.raises(RuntimeError, match="injected"):
+        sensitivity.latency_curve(g, params, deltas, engine="sweep")
+
+
+def test_auto_dispatch_survives_engine_construction_failure(params,
+                                                            monkeypatch):
+    """Engine *construction* failures follow the same contract as run-time
+    ones: engine='auto' warns once and returns the scalar answer,
+    engine='sweep' surfaces the error (ImportError alone stays quiet)."""
+    g = synth.cg_like(2, 2, 3, params=params)
+    deltas = np.linspace(0.0, 20.0, 10)
+    ref = sensitivity.latency_curve(g, params, deltas, engine="scalar")
+
+    def boom(self, *a, **k):
+        raise RuntimeError("injected construction failure")
+
+    monkeypatch.setattr(sweep.SweepEngine, "__init__", boom)
+    sweep_engine._WARNED.clear()
+    with pytest.warns(RuntimeWarning, match="injected construction failure"):
+        auto = sensitivity.latency_curve(g, params, deltas)
+    np.testing.assert_allclose(auto.T, ref.T)
+    with pytest.raises(RuntimeError, match="injected construction"):
+        sensitivity.latency_curve(g, params, deltas, engine="sweep")
+
+
+def test_pallas_lam_override_warns_once(params, monkeypatch):
+    """If the argmax kernel can't even be imported, an explicit
+    backend='pallas' λ request is overridden to segment WITH a one-time
+    warning — never silently."""
+    import warnings as warnings_mod
+    g = synth.stencil2d(2, 2, 2, params=params)
+    eng = sweep.SweepEngine(g, params, cache=None)
+    batch = sweep.latency_grid(params, [0.0, 5.0])
+    seg = eng.run(batch)
+
+    real = sweep_engine._get_forward
+
+    def fake(kind, want_lam=False, multi=False, fused=False, mesh=None):
+        if kind == "pallas" and want_lam:
+            raise ImportError("no argmax kernel in this build")
+        return real(kind, want_lam, multi, fused, mesh)
+
+    monkeypatch.setattr(sweep_engine, "_get_forward", fake)
+    sweep_engine._WARNED.clear()
+    with pytest.warns(RuntimeWarning, match="overriding to backend='segment'"):
+        res = eng.run(batch, backend="pallas", compute_lam=True)
+    assert res.backend == "segment"
+    np.testing.assert_array_equal(res.T, seg.T)
+    np.testing.assert_array_equal(res.lam, seg.lam)
+    with warnings_mod.catch_warnings():          # one-time: second is quiet
+        warnings_mod.simplefilter("error", RuntimeWarning)
+        res2 = eng.run(batch, backend="pallas", compute_lam=True,
+                       use_cache=False)
+    assert res2.backend == "segment"
+
+
+def test_sensitivity_memo_key_is_content_based():
+    """Regression for the id(rank_of_class) memo key: logically-equal
+    params built twice (distinct callables, same class mapping) share one
+    compiled engine; a different mapping gets its own."""
+    p1 = tpu_pod_params(pod_size=2)
+    g = synth.stencil2d(2, 2, 2, params=p1)
+    deltas = np.linspace(0.0, 10.0, 10)
+    sensitivity.latency_curve(g, p1, deltas, cls=1)
+    p2 = tpu_pod_params(pod_size=2)              # fresh, content-equal
+    assert p2.rank_of_class is not p1.rank_of_class
+    sensitivity.latency_curve(g, p2, deltas, cls=1)
+    memo = getattr(g, "_sweep_engines")
+    assert len(memo) == 1, "content-equal params must share one engine"
+    p3 = tpu_pod_params(pod_size=4)              # different class mapping
+    sensitivity.latency_curve(g, p3, deltas, cls=1)
+    assert len(memo) == 2
 
 
 def test_sensitivity_memoizes_engine(params):
