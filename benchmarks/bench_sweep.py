@@ -215,6 +215,121 @@ def lam_compile(out, n_scenarios=256):
                  f"vs_values={t_fused / t_vals:.2f}x"))
 
 
+def _biased_placement_workload(P, iters):
+    """Chatty rank pairs with distinct message sizes and an adversarial
+    start mapping that splits every pair across pods — the greedy search
+    has real work to do (the bench_placement fixture, parameterized)."""
+    from repro.core import placement
+    from repro.core.graph import GraphBuilder
+    from repro.core.loggps import LogGPS
+
+    zero = LogGPS(L=(0.0,), G=(0.0,), o=0.5, S=1e18)
+    b = GraphBuilder(P, 1)
+    for it in range(iters):
+        for idx, r in enumerate(range(0, P, 2)):
+            b.add_calc(r, 1.0)
+            sz = 65536.0 * (1.0 + 0.25 * idx)
+            b.add_message(r, r + 1, sz, zero)
+            b.add_message(r + 1, r, sz, zero)
+    g = b.finalize()
+    phi = placement.ArchTopology.two_tier(P, P // 2, L_fast=1.0,
+                                          L_slow=20.0, G_fast=1e-5,
+                                          G_slow=4e-5)
+    pi0 = np.argsort(np.concatenate([np.arange(0, P, 2),
+                                     np.arange(1, P, 2)]))
+    return g, zero, phi, pi0
+
+
+def placement_patch(out, smoke: bool = False):
+    """Zero-recompile placement search (Algorithm 3 with patchable costs).
+
+    Asserted in BOTH modes (the ``--smoke`` CI gate):
+
+    * the whole greedy search performs exactly ONE plan compile — every
+      candidate swap of every step is evaluated by patching Φ costs into
+      the warm plan (``stats["plan_compiles"] == 1``);
+    * after the first search warmed the XLA program, a re-run adds ZERO
+      compiled programs (the jit cache for the candidate-cost forward
+      stays at one entry);
+    * the final mapping and objective history are bit-identical to the
+      rebuild loop (K fresh CompiledPlans per step).
+
+    Full mode additionally asserts the ≥5× per-step candidate-evaluation
+    speedup over the rebuild loop (wall-clock — not asserted in CI).
+    """
+    import jax  # noqa: F401 — the engine path needs it; fail loud here
+    from repro.core import placement
+    from repro.sweep import ScenarioBatch, SweepEngine, compile_plan
+    from repro.sweep import engine as sweep_engine
+
+    P, iters, topk = (8, 4, 4) if smoke else (32, 12, 16)
+    g, zero, phi, pi0 = _biased_placement_workload(P, iters)
+
+    st_p: dict = {}
+    t_cold, (pi_p, hist_p) = timeit(
+        lambda: placement.place(g, phi, params=zero, pi0=pi0.copy(),
+                                topk=topk, stats=st_p),
+        repeats=1, warmup=0)
+    # the candidate-cost forward cell the loop compiled (vertex-view patch
+    # on the segment backend): its program count must not grow on re-runs
+    fwd = sweep_engine._get_forward("segment", False,
+                                    costs=(0, None, None, None, None))
+    n_prog = fwd._cache_size()
+    t_warm, _ = timeit(
+        lambda: placement.place(g, phi, params=zero, pi0=pi0.copy(),
+                                topk=topk, stats={}),
+        repeats=1, warmup=0)
+    assert fwd._cache_size() == n_prog, \
+        "placement re-run recompiled the candidate-cost forward"
+    assert st_p["plan_compiles"] == 1, st_p
+    assert st_p["scalar_fallbacks"] == 0, st_p
+    assert st_p["steps"] >= 2, f"search converged trivially: {st_p}"
+
+    st_r: dict = {}
+    t_reb, (pi_r, hist_r) = timeit(
+        lambda: placement.place(g, phi, params=zero, pi0=pi0.copy(),
+                                topk=topk, cost_eval="rebuild", stats=st_r),
+        repeats=1, warmup=1)
+    assert np.array_equal(pi_p, pi_r), "patched ≠ rebuild final mapping"
+    assert hist_p == hist_r, "patched ≠ rebuild objective history"
+    assert st_r["plan_compiles"] == st_r["candidates"], st_r
+
+    # per-step candidate evaluation, warm (the cost the tentpole removed:
+    # K plan rebuilds + MultiPlan pack + restage vs one patched dispatch)
+    base = compile_plan(g)
+    eng = SweepEngine(compiled=base, cache=None)
+    scen = ScenarioBatch(L=np.asarray([zero.L]),
+                         gscale=np.ones((1, g.nclass)))
+    rng = np.random.default_rng(0)
+    extras = [placement.mapping_edge_cost(g, phi, rng.permutation(P))
+              for _ in range(topk)]
+    EX = np.stack(extras)
+    t_patch_step, res = timeit(
+        lambda: eng.run(scen, costs=EX, compute_lam=False),
+        repeats=5, warmup=2)
+    t_reb_step, ref = timeit(
+        lambda: placement._candidate_objectives(g, scen, extras, "segment"),
+        repeats=5, warmup=2)
+    assert np.array_equal(res.T.mean(axis=1), ref), \
+        "patched candidate objectives diverged from rebuild"
+    speedup = t_reb_step / t_patch_step
+    if not smoke:
+        assert speedup >= 5.0, \
+            f"per-step patch speedup {speedup:.1f}x < 5x target"
+
+    out(csv_line("sweep.placement_patch.search", t_warm * 1e6,
+                 f"P={P};topk={topk};steps={st_p['steps']};"
+                 f"plan_compiles={st_p['plan_compiles']};"
+                 f"xla_programs={n_prog};"
+                 f"same_mapping_as_rebuild=1"))
+    out(csv_line("sweep.placement_patch.step", t_patch_step * 1e6,
+                 f"candidates={topk};"
+                 f"rebuild_us={t_reb_step * 1e6:.0f};"
+                 f"per_step_speedup={speedup:.1f}x"))
+    out(csv_line("sweep.placement_patch.cold", t_cold * 1e6,
+                 f"rebuild_cold_us={t_reb * 1e6:.0f}"))
+
+
 SHARD_SMOKE_PROG = """
 import numpy as np
 from repro.core import synth
@@ -274,24 +389,48 @@ def run(out, smoke: bool = False):
         pallas_backend(out, n_scenarios=16)
         lam_compile(out, n_scenarios=32)
         sharded(out, n_scenarios=16)
+        placement_patch(out, smoke=True)
         return
     single_graph(out)
     variant_study(out)
     pallas_backend(out)
     lam_compile(out)
     sharded(out, n_scenarios=64)
+    placement_patch(out)
 
 
 def main(argv=None):
     import argparse
     ap = argparse.ArgumentParser(
         description="sweep-engine benchmarks (single-graph grid + packed "
-                    "variant study)")
+                    "variant study + zero-recompile placement search)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny grids, correctness asserts only (CI)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the records as JSON (uploaded as a "
+                         "CI workflow artifact)")
     args = ap.parse_args(argv)
+    records: list = []
+
+    def out(line):
+        print(line)
+        records.append(line)
+
     print("name,us_per_call,derived")
-    run(print, smoke=args.smoke)
+    run(out, smoke=args.smoke)
+    if args.json:
+        import json
+        import platform
+        parsed = []
+        for line in records:
+            name, us, derived = line.split(",", 2)
+            parsed.append({"name": name, "us_per_call": float(us),
+                           "derived": derived})
+        with open(args.json, "w") as f:
+            json.dump({"bench": "sweep", "smoke": bool(args.smoke),
+                       "python": platform.python_version(),
+                       "records": parsed}, f, indent=2)
+        print(f"[bench_sweep] wrote {len(parsed)} records to {args.json}")
 
 
 if __name__ == "__main__":

@@ -17,9 +17,16 @@ aggregated over a *scenario grid* (robust placement — a mapping that only
 wins at the build-time latency point can lose under the sweep the operator
 actually cares about), all P² candidate swaps are scored at once from the
 vectorized gain matrix (:func:`swap_gain_matrix`), and the top-k candidate
-mappings are evaluated exactly in ONE packed
-:class:`~repro.sweep.compile.MultiPlan` run per greedy step instead of
-scalar re-solves.  With the default single-point grid and ``topk=1`` it
+mappings are evaluated exactly in ONE compiled engine call per greedy
+step instead of scalar re-solves.  Candidate evaluation is
+**zero-recompile** by default (``cost_eval="patch"``): the graph compiles
+ONCE and each candidate mapping's Φ link costs patch into the warm plan's
+cost block as a runtime input
+(:meth:`~repro.sweep.compile.CompiledPlan.patch_costs` +
+``SweepEngine.run(costs=...)``) — bit-identical objectives, and therefore
+the same final mapping, as ``cost_eval="rebuild"`` (K fresh CompiledPlans
+packed into a MultiPlan per step, the previous formulation, kept as the
+reference).  With the default single-point grid and ``topk=1`` it
 reproduces the reference loop's final mapping exactly (asserted in tests).
 """
 
@@ -190,9 +197,12 @@ def _place_scalar(g, phi, params, pi0, max_iters, verbose):
 
 
 def _candidate_objectives(g, scen_batch, extras, backend):
-    """Exact makespans of K candidate mappings × S scenarios in ONE compiled
-    call: each candidate's Φ costs bake into a CompiledPlan and the K plans
-    pack into a MultiPlan (identical structure ⇒ identical shape bucket)."""
+    """Rebuild-loop candidate evaluation (the pre-patching formulation,
+    kept as the equivalence reference and bench baseline): each candidate's
+    Φ costs bake into a fresh CompiledPlan and the K plans pack into a
+    MultiPlan (identical structure ⇒ identical shape bucket, so the XLA
+    program is reused — the per-step cost is the K numpy recompiles, the
+    re-pack, and the device restage)."""
     from repro.sweep import MultiSweepEngine, compile_plan, pack_plans
 
     plans = [compile_plan(g, extra_edge_cost=ex) for ex in extras]
@@ -203,10 +213,20 @@ def _candidate_objectives(g, scen_batch, extras, backend):
 
 
 def _place_batched(g, phi, params, pi0, max_iters, verbose, scenario_points,
-                   topk, engine="auto", backend="segment"):
+                   topk, engine="auto", backend="segment",
+                   cost_eval="patch", cache=None, stats=None):
     """Batched Algorithm 3: grid-aggregated D matrices, vectorized gains,
-    one MultiPlan run per greedy step for exact candidate evaluation."""
-    from repro.sweep import ScenarioBatch
+    one engine call per greedy step for exact candidate evaluation.
+
+    ``cost_eval="patch"`` (default) compiles ONE plan up front and
+    evaluates every candidate of every step by patching its Φ costs into
+    the warm plan (``SweepEngine.run(costs=...)``) — zero plan recompiles
+    after the first step, bit-identical objectives (and therefore final
+    mapping) to ``cost_eval="rebuild"``, which recompiles K plans per step
+    (the PR-2 formulation, kept as the reference).  ``stats`` (a dict, if
+    given) is filled with the loop's cost accounting.
+    """
+    from repro.sweep import ScenarioBatch, SweepEngine, compile_plan
 
     P = g.nranks
     pi = np.arange(P) if pi0 is None else pi0.copy()
@@ -216,6 +236,21 @@ def _place_batched(g, phi, params, pi0, max_iters, verbose, scenario_points,
     scen_batch = ScenarioBatch(
         L=np.asarray([pt.L for pt in pts], dtype=np.float64),
         gscale=np.ones((len(pts), nc)))
+    st = stats if stats is not None else {}
+    st.update({"cost_eval": cost_eval, "steps": 0, "plan_compiles": 0,
+               "engine_calls": 0, "candidates": 0, "scalar_fallbacks": 0})
+
+    base_plan, eng = None, None
+    if cost_eval == "patch":
+        try:
+            base_plan = compile_plan(g)
+            st["plan_compiles"] += 1
+            eng = SweepEngine(compiled=base_plan, backend=backend,
+                              cache=cache)
+        except Exception:
+            if engine == "sweep":
+                raise
+            base_plan, eng = None, None    # scalar fallback per step
 
     def forwards(pi_):
         ex = mapping_edge_cost(g, phi, pi_)
@@ -251,8 +286,22 @@ def _place_batched(g, phi, params, pi0, max_iters, verbose, scenario_points,
             pc = pi.copy()
             pc[ci], pc[cj] = pc[cj], pc[ci]
             extras.append(mapping_edge_cost(g, phi, pc))
+        st["candidates"] += len(cand)
         try:
-            fs = _candidate_objectives(g, scen_batch, extras, backend)
+            if eng is not None:
+                # zero-recompile path: K candidate cost blocks through the
+                # once-compiled plan (structure unbatched inside the vmap;
+                # raw extras → the engine patches only its backend's view)
+                res = eng.run(scen_batch, costs=np.stack(extras),
+                              compute_lam=False)
+                fs = res.T.mean(axis=1)
+                st["engine_calls"] += 1
+            elif cost_eval == "rebuild":
+                fs = _candidate_objectives(g, scen_batch, extras, backend)
+                st["plan_compiles"] += len(extras)
+                st["engine_calls"] += 1
+            else:
+                raise ImportError("no warm sweep engine")
         except Exception:
             # same 'auto' contract as core.sensitivity: degrade to the
             # exact scalar evaluation on ANY sweep-path failure (no JAX,
@@ -262,6 +311,7 @@ def _place_batched(g, phi, params, pi0, max_iters, verbose, scenario_points,
                 raise
             fs = np.asarray([np.mean([plan.forward(pt, extra_edge_cost=ex).T
                                       for pt in pts]) for ex in extras])
+            st["scalar_fallbacks"] += 1
         k = int(np.argmin(fs))
         f = float(fs[k])
         if verbose:
@@ -274,6 +324,7 @@ def _place_batched(g, phi, params, pi0, max_iters, verbose, scenario_points,
         scheds = forwards(pi)
         f_star = f
         history.append(f)
+        st["steps"] += 1
     return pi, history
 
 
@@ -281,7 +332,9 @@ def place(g: ExecutionGraph, phi: ArchTopology, params: Optional[LogGPS] = None,
           pi0: Optional[np.ndarray] = None, max_iters: int = 64,
           verbose: bool = False, engine: str = "auto",
           scenarios: Optional[Sequence[LogGPS]] = None,
-          topk: int = 1) -> tuple[np.ndarray, list]:
+          topk: int = 1, backend: str = "segment",
+          cost_eval: str = "patch", cache=None,
+          stats: Optional[dict] = None) -> tuple[np.ndarray, list]:
     """Algorithm 3. Returns (mapping, history of objective values).
 
     The graph should be built with zero link costs (L=(0,), G=(0,)) so that
@@ -289,22 +342,42 @@ def place(g: ExecutionGraph, phi: ArchTopology, params: Optional[LogGPS] = None,
 
     ``engine="auto"`` (default) runs the batched loop: swap gains for all
     P² pairs come from one vectorized gain matrix, candidate mappings are
-    verified in one packed MultiPlan call per greedy step, and ``scenarios``
-    (a sequence of LogGPS points, e.g. ``latency_points(params, deltas)``)
+    verified in one engine call per greedy step, and ``scenarios`` (a
+    sequence of LogGPS points, e.g. ``latency_points(params, deltas)``)
     aggregates the sensitivity matrices over a grid instead of the single
     build-time point.  Defaults (single point, ``topk=1``) reproduce the
     reference loop exactly; ``engine="scalar"`` forces the reference loop.
+
+    ``cost_eval="patch"`` (default) is the zero-recompile path: the graph
+    compiles ONCE and every candidate mapping's Φ costs patch into the
+    warm plan as a runtime input (``SweepEngine.run(costs=...)``);
+    ``cost_eval="rebuild"`` recompiles K plans per step (the equivalence
+    reference — same objectives bit for bit, so the same final mapping).
+    ``backend`` picks the compiled evaluator, ``cache`` (a ``SweepCache``)
+    memoizes candidate evaluations across repeated queries, and ``stats``
+    (a dict) receives the loop's cost accounting — plan_compiles,
+    engine_calls, candidates, steps.
     """
     if engine not in ("auto", "scalar", "sweep"):
         raise ValueError(f"engine must be 'auto', 'scalar' or 'sweep', "
                          f"got {engine!r}")
+    if cost_eval not in ("patch", "rebuild"):
+        raise ValueError(f"cost_eval must be 'patch' or 'rebuild', "
+                         f"got {cost_eval!r}")
+    if backend not in ("segment", "pallas"):
+        # validate eagerly: under engine='auto' a typo would otherwise be
+        # swallowed by the per-step scalar fallback and silently ignore
+        # the caller's explicit backend choice
+        raise ValueError(f"backend must be 'segment' or 'pallas', "
+                         f"got {backend!r}")
     params = params or LogGPS(L=(0.0,), G=(0.0,), o=0.5, S=1e18)
     if engine == "scalar":
         if scenarios is not None or topk != 1:
             raise ValueError("scenario grids / topk need the batched engine")
         return _place_scalar(g, phi, params, pi0, max_iters, verbose)
     return _place_batched(g, phi, params, pi0, max_iters, verbose,
-                          scenarios, topk, engine=engine)
+                          scenarios, topk, engine=engine, backend=backend,
+                          cost_eval=cost_eval, cache=cache, stats=stats)
 
 
 def latency_points(params: LogGPS, deltas: Sequence[float],

@@ -300,10 +300,18 @@ class AnalysisService:
         phi = placement_mod.ArchTopology.two_tier(P, pod, **spec)
         pts = (placement_mod.latency_points(v.params, req.deltas, cls=req.cls)
                if req.deltas is not None else None)
+        # zero-recompile loop: ONE compiled plan, candidates patched in;
+        # the shared service cache memoizes candidate evaluations (patched
+        # costs participate in the content-hash keys), so re-asking the
+        # same placement question costs hash lookups, not forwards
+        stats: dict = {}
         pi, hist = placement_mod.place(v.graph, phi, params=v.params,
-                                       scenarios=pts, topk=req.topk)
+                                       scenarios=pts, topk=req.topk,
+                                       backend=req.backend or self.backend,
+                                       cache=self.cache, stats=stats)
         return {"variant": v.name, "mapping": pi, "history": hist,
-                "improvement": (1.0 - hist[-1] / hist[0]) if hist[0] else 0.0}
+                "improvement": (1.0 - hist[-1] / hist[0]) if hist[0] else 0.0,
+                "stats": stats}
 
     def stats(self, req: AnalysisRequest) -> dict:
         return {"variants": list(self._variants),

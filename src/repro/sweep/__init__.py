@@ -26,6 +26,12 @@ Public surface (re-exported here):
     SweepEngine / SweepResult         — one graph, S scenarios per call
     MultiSweepEngine / MultiSweepResult — G packed graphs × S scenarios per call
     CompiledPlan / compile_plan       — graph → bucketed rectangular tensors
+                                        (immutable structure + patchable
+                                        cost block, see COST_FIELDS)
+    CostBatch / CompiledPlan.patch_costs — K candidate cost blocks for one
+                                        plan structure; run(costs=...) adds
+                                        the candidate axis with zero
+                                        recompiles (CostSweepResult [K, S])
     MultiPlan / pack_plans / group_plans — pad plans to a common envelope and
                                         stack them on a leading graph axis
     ScenarioBatch + grid builders     — latency_grid / bandwidth_grid /
@@ -53,11 +59,12 @@ engines built from these pieces (per-request backend/shard).
 """
 
 from .cache import DEFAULT_CACHE, SweepCache, canonical_bytes  # noqa: F401
-from .compile import (CompiledPlan, MultiPlan, compile_plan,  # noqa: F401
-                      group_plans, pack_plans, repad_plan)
-from .engine import (MultiSweepEngine, MultiSweepResult,  # noqa: F401
-                     SweepEngine, SweepResult, breakpoints_batched,
-                     tolerance_batched)
+from .compile import (COST_FIELDS, CompiledPlan, CostBatch,  # noqa: F401
+                      MultiPlan, compile_plan, group_plans, pack_plans,
+                      repad_plan)
+from .engine import (CostSweepResult, MultiSweepEngine,  # noqa: F401
+                     MultiSweepResult, SweepEngine, SweepResult,
+                     breakpoints_batched, tolerance_batched)
 from .scenarios import (GraphVariant, ScenarioBatch, bandwidth_grid,  # noqa: F401
                         base_batch, cartesian_grid, collective_variants,
                         latency_grid, sweep_variants, topology_variants)

@@ -43,12 +43,17 @@ def _update(sha, arr) -> None:
 
 
 def result_key(plan_hash: str, scenarios, compute_lam: bool,
-               backend: str) -> str:
+               backend: str, cost_hash: Optional[str] = None) -> str:
+    """``cost_hash`` (a ``CostBatch.content_hash``) folds patched costs into
+    the key: a plan evaluated under two different cost blocks must never
+    collide, and the same patched costs minted anywhere hit."""
     sha = hashlib.sha1(b"sweep-result-v2|")
     sha.update(plan_hash.encode())
     _update(sha, scenarios.L)
     _update(sha, scenarios.gscale)
     sha.update(f"|{int(compute_lam)}|{backend}".encode())
+    if cost_hash is not None:
+        sha.update(f"|costs:{cost_hash}".encode())
     return sha.hexdigest()
 
 
@@ -69,6 +74,10 @@ class CacheStats:
     hits: int = 0
     misses: int = 0
     evictions: int = 0
+    #: subset counters for patched-cost lookups (``run(costs=...)`` —
+    #: zero-recompile placement search traffic); included in hits/misses
+    patched_hits: int = 0
+    patched_misses: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -77,24 +86,28 @@ class CacheStats:
 
     def snapshot(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions, "hit_rate": self.hit_rate}
+                "evictions": self.evictions, "hit_rate": self.hit_rate,
+                "patched_hits": self.patched_hits,
+                "patched_misses": self.patched_misses}
 
 
 class SweepCache:
-    """LRU map: result_key → SweepResult (or MultiSweepResult)."""
+    """LRU map: result_key → SweepResult (or Multi/CostSweepResult)."""
 
     def __init__(self, capacity: int = 64):
         self.capacity = capacity
         self._store: OrderedDict = OrderedDict()
         self.stats = CacheStats()
 
-    def get(self, key: str):
+    def get(self, key: str, patched: bool = False):
         hit = self._store.get(key)
         if hit is None:
             self.stats.misses += 1
+            self.stats.patched_misses += patched
             return None
         self._store.move_to_end(key)
         self.stats.hits += 1
+        self.stats.patched_hits += patched
         return hit
 
     def put(self, key: str, value) -> None:

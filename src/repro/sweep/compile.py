@@ -44,6 +44,22 @@ fit a common level/edge envelope re-pad into one :class:`MultiPlan` whose
 tensors carry a leading graph axis — a whole variant study (collectives ×
 topologies × scenario grid) then runs as ONE compiled XLA program instead
 of one call per variant.  See :func:`pack_plans` / :func:`group_plans`.
+
+Structure vs cost: a compiled plan is two disjoint tensor sets.  The
+*structure* (slots, masks, tie-break ordinals — ``vsrc``/``vmaskd``/
+``valid_flat``/``vert_of_slot``/``esrc``/``edstl``/``emask``/``vcost_lv``)
+fixes the XLA program; the *cost block* (``COST_FIELDS``: econst, gap
+shares, latency-class rows) is plain data the program consumes.  Because
+``compile_plan`` records each edge's slot coordinates in original edge
+order (``epos_*``), new per-edge costs patch into a warm plan as a runtime
+input instead of a rebuild: :meth:`CompiledPlan.patch_costs` stacks K
+candidate cost blocks into a :class:`CostBatch` that
+``SweepEngine.run(costs=...)`` vmaps alongside scenarios — the zero-
+recompile path behind the Algorithm-3 placement search (every swap
+candidate of every greedy step reuses ONE compiled program).  Patched
+costs are bit-identical to rebuilding the plan with
+``compile_plan(extra_edge_cost=...)``: both add the extra to the baked
+edge constant in float64 before anything else touches it.
 """
 
 from __future__ import annotations
@@ -62,6 +78,105 @@ def _bucket(n: int, lo: int = 8) -> int:
     """Next power of two ≥ max(n, lo)."""
     n = max(int(n), lo)
     return 1 << (n - 1).bit_length()
+
+
+#: The patchable cost tensors of a compiled plan, in the order the engine
+#: forwards consume them (per-vertex view first, then the pallas per-edge
+#: view).  Everything else on a plan is immutable structure.
+COST_FIELDS = ("vconst", "vgap", "vgclass", "vlat", "vlat_sum",
+               "econst", "egap", "egclass", "elat")
+
+
+@dataclasses.dataclass
+class CostBatch:
+    """K patchable cost blocks sharing one :class:`CompiledPlan` structure.
+
+    Leading axis = candidate index (e.g. the K swap candidates of one
+    greedy placement step).  Tensors that a patch did not touch are
+    broadcast views of the parent plan's — only the patched constants are
+    materialized K times.  ``SweepEngine.run(costs=...)`` vmaps the blocks
+    alongside the scenario axis through the plan's already-compiled
+    forward; the structure tensors ride along unbatched, so no new XLA
+    program is ever built for a new cost block.
+    """
+
+    vconst: np.ndarray     # [K, nlv_p, Vmax, Dmax] float64
+    vgap: np.ndarray       # [K, nlv_p, Vmax, Dmax] float64
+    vgclass: np.ndarray    # [K, nlv_p, Vmax, Dmax] int32
+    vlat: np.ndarray       # [K, nlv_p, Vmax, Dmax, nclass] float64
+    vlat_sum: np.ndarray   # [K, nlv_p, Vmax, Dmax] float64
+    econst: np.ndarray     # [K, nlv_p, Emax] float64
+    egap: np.ndarray       # [K, nlv_p, Emax] float64
+    egclass: np.ndarray    # [K, nlv_p, Emax] int32
+    elat: np.ndarray       # [K, nlv_p, Emax, nclass] float64
+    #: content hash of the plan this batch was patched from — bucketing
+    #: makes DISTINCT graphs share envelopes, so the engine must be able
+    #: to refuse a cost block minted on a different plan of the same
+    #: shape (None on hand-assembled batches: shape check only)
+    plan_hash: Optional[str] = None
+
+    @property
+    def K(self) -> int:
+        return int(self.vconst.shape[0])
+
+    @property
+    def shape_key(self) -> tuple:
+        """Envelope of the parent plan (no K: any K shares its programs)."""
+        return self.vconst.shape[1:] + self.econst.shape[2:] + \
+            (self.vlat.shape[4],)
+
+    def content_hash(self, fields: Optional[Sequence[str]] = None) -> str:
+        """SHA1 over the cost tensors — patched costs participate in sweep
+        result keys exactly like baked ones (see ``cache.result_key``).
+
+        ``fields`` restricts the hash to the tensors one backend actually
+        consumes; the engine keys cached results per backend view, so a
+        raw-extras run (view-limited patch) and an explicit full
+        ``patch_costs`` of the same extras hash identically on the backend
+        that evaluates them.  Broadcast fields (unpatched — K identical
+        blocks, stride 0 on the candidate axis) hash one block plus the
+        count instead of K copies, so keying a placement step costs
+        O(patched tensors), not O(K × cost block).
+        """
+        names = tuple(fields) if fields is not None else COST_FIELDS
+        memo = getattr(self, "_hashes", None)
+        if memo is None:
+            memo = {}
+            object.__setattr__(self, "_hashes", memo)
+        h = memo.get(names)
+        if h is None:
+            from .cache import canonical_bytes
+            sha = hashlib.sha1(b"cost-batch-v1")
+            for name in names:
+                a = getattr(self, name)
+                chunks = ((f"|bcast{a.shape[0]}|".encode(),)
+                          + canonical_bytes(a[0])
+                          if a.strides[0] == 0 else canonical_bytes(a))
+                for chunk in chunks:
+                    sha.update(chunk)
+            h = memo[names] = sha.hexdigest()
+        return h
+
+    def padded(self, Kp: int) -> "CostBatch":
+        """Pad the candidate axis to ``Kp`` by repeating the last block, so
+        varying candidate counts share one bucketed XLA program (results
+        for the pad rows are discarded by the engine).  Broadcast fields
+        stay broadcasts — padding never materializes unpatched tensors."""
+        K = self.K
+        if Kp == K:
+            return self
+        if Kp < K:
+            raise ValueError(f"cannot pad {K} cost blocks down to {Kp}")
+
+        def pad(a):
+            if a.strides[0] == 0:                # unpatched: keep stride-0
+                return np.broadcast_to(a[:1], (Kp,) + a.shape[1:])
+            return np.concatenate(
+                [a, np.broadcast_to(a[-1:], (Kp - K,) + a.shape[1:])])
+
+        return CostBatch(**{name: pad(getattr(self, name))
+                            for name in COST_FIELDS},
+                         plan_hash=self.plan_hash)
 
 
 @dataclasses.dataclass
@@ -96,6 +211,13 @@ class CompiledPlan:
     nv: int
     nclass: int
     nlevels: int
+    # edge → slot coordinates in ORIGINAL edge order (immutable structure;
+    # all level-local, so they survive repadding unchanged).  None only on
+    # hand-assembled plans, which then cannot patch costs.
+    epos_lvl: Optional[np.ndarray] = None   # [ne] int32 destination level
+    epos_dst: Optional[np.ndarray] = None   # [ne] int32 level-local dst slot
+    epos_d: Optional[np.ndarray] = None     # [ne] int32 in-edge ordinal
+    epos_e: Optional[np.ndarray] = None     # [ne] int32 level-local edge slot
 
     @property
     def Vmax(self) -> int:
@@ -150,6 +272,71 @@ class CompiledPlan:
             h = sha.hexdigest()
             object.__setattr__(self, "_hash", h)
         return h
+
+    # -- cost patching (zero-recompile variant evaluation) -------------------
+
+    def patch_costs(self, extra_edge_cost: np.ndarray,
+                    views: Sequence[str] = ("vertex", "edge")) -> CostBatch:
+        """Stack K candidate cost blocks: baked costs + per-edge extras.
+
+        ``extra_edge_cost``: [ne] or [K, ne] µs in *original* edge order —
+        the same array :func:`compile_plan`'s ``extra_edge_cost=`` takes.
+        Row k of the result is bit-identical to the cost block of
+        ``compile_plan(g, extra_edge_cost=extra[k])``: the extra is added
+        to the baked float64 edge constant at its recorded slot, exactly
+        the addition the rebuild performs before scattering.
+
+        ``views`` limits which backend's constants are materialized —
+        ``("vertex",)`` patches only ``vconst`` (segment backend),
+        ``("edge",)`` only ``econst`` (pallas).  The engine uses this
+        internally (``run(costs=<[K, ne] array>)``) so a placement step
+        never pays for the view it won't evaluate; the engine refuses a
+        view-limited batch on the other backend.
+        """
+        if self.epos_lvl is None:
+            raise ValueError(
+                "plan carries no edge-position records (hand-assembled?); "
+                "recompile with compile_plan() to enable cost patching")
+        bad = set(views) - {"vertex", "edge"}
+        if bad or not views:
+            raise ValueError(f"views must name 'vertex' and/or 'edge', "
+                             f"got {tuple(views)}")
+        ex = np.atleast_2d(np.asarray(extra_edge_cost, dtype=np.float64))
+        K, ne = ex.shape
+        if ne != self.epos_lvl.shape[0]:
+            raise ValueError(f"extra_edge_cost has {ne} edges, plan was "
+                             f"compiled from {self.epos_lvl.shape[0]}")
+
+        def rest(a):
+            return np.broadcast_to(a[None], (K,) + a.shape)
+
+        if "vertex" in views:
+            vconst = np.repeat(self.vconst[None], K, axis=0)
+            vconst[:, self.epos_lvl, self.epos_dst, self.epos_d] += ex
+        else:
+            vconst = rest(self.vconst)
+        if "edge" in views:
+            econst = np.repeat(self.econst[None], K, axis=0)
+            econst[:, self.epos_lvl, self.epos_e] += ex
+        else:
+            econst = rest(self.econst)
+
+        return CostBatch(vconst=vconst, vgap=rest(self.vgap),
+                         vgclass=rest(self.vgclass), vlat=rest(self.vlat),
+                         vlat_sum=rest(self.vlat_sum), econst=econst,
+                         egap=rest(self.egap), egclass=rest(self.egclass),
+                         elat=rest(self.elat),
+                         plan_hash=self.content_hash())
+
+    def with_extra_cost(self, extra_edge_cost: np.ndarray) -> "CompiledPlan":
+        """A new plan with ``extra_edge_cost`` patched into the baked edge
+        constants — structure arrays shared, so it lands in the same shape
+        bucket (same XLA program) as its parent.  Bit-identical to
+        ``compile_plan(g, extra_edge_cost=...)`` on the same graph."""
+        cb = self.patch_costs(
+            np.asarray(extra_edge_cost, dtype=np.float64).ravel())
+        return dataclasses.replace(self, vconst=cb.vconst[0],
+                                   econst=cb.econst[0])
 
 
 def compile_plan(g: ExecutionGraph, params: Optional[LogGPS] = None,
@@ -261,6 +448,12 @@ def compile_plan(g: ExecutionGraph, params: Optional[LogGPS] = None,
     egclass_p[elvl_s, eslot] = egclass_s
     elat_p[elvl_s, eslot] = elat_s
 
+    # -- edge slot coordinates back in original order (cost patching) -------
+    def unsort(a):
+        out = np.empty(ne, dtype=np.int32)
+        out[eorder] = a
+        return out
+
     return CompiledPlan(
         vsrc=vsrc, vmaskd=vmaskd, vconst=vconst, vgap=vgap, vgclass=vgclass,
         vlat=vlat, vlat_sum=vlat.sum(axis=3), vcost_lv=vcost_lv,
@@ -268,6 +461,8 @@ def compile_plan(g: ExecutionGraph, params: Optional[LogGPS] = None,
         esrc=esrc_p, edstl=edstl_p, emask=emask, econst=econst_p,
         egap=egap_p, egclass=egclass_p, elat=elat_p,
         nv=nv, nclass=nc, nlevels=nlevels,
+        epos_lvl=unsort(elvl_s), epos_dst=unsort(edstl_s),
+        epos_d=unsort(d_idx), epos_e=unsort(eslot),
     )
 
 
@@ -339,6 +534,10 @@ def repad_plan(c: CompiledPlan, nlv_p: int, Vmax: int, Dmax: int,
         esrc=esrc, edstl=edstl, emask=emask, econst=econst,
         egap=egap, egclass=egclass, elat=elat,
         nv=c.nv, nclass=nc, nlevels=c.nlevels,
+        # level-local coordinates are envelope-independent: patching keeps
+        # working on a repadded plan
+        epos_lvl=c.epos_lvl, epos_dst=c.epos_dst,
+        epos_d=c.epos_d, epos_e=c.epos_e,
     )
 
 

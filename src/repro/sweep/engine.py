@@ -40,6 +40,13 @@ Device sharding: ``run(..., shard=...)`` splits the scenario axis
 per-element arithmetic is unchanged, so sharded results are bit-identical
 to single-device runs.
 
+Candidate costs: ``run(..., costs=CostBatch)`` adds a third batch axis —
+K patched cost blocks (same plan structure, new per-edge constants) vmap
+alongside the scenario axis on either backend, λ/ρ included.  Structure
+tensors stay unbatched inside the vmap, so every cost block of every call
+reuses the ONE compiled program of the plan's shape bucket: the zero-
+recompile path behind ``core.placement``'s greedy search.
+
 Also here: lockstep-batched versions of the bisection loops from
 ``core.dag`` (``tolerance_batched``, ``breakpoints_batched``) — every probe
 round becomes ONE engine call over all active intervals.
@@ -55,8 +62,8 @@ import numpy as np
 from repro.core.loggps import LogGPS
 
 from .cache import DEFAULT_CACHE, SweepCache, multi_result_key, result_key
-from .compile import (CompiledPlan, MultiPlan, _bucket, compile_plan,
-                      pack_plans)
+from .compile import (CompiledPlan, CostBatch, MultiPlan, _bucket,
+                      compile_plan, pack_plans)
 from .scenarios import ScenarioBatch, latency_grid
 
 BIG = 1e30          # matches kernels.maxplus NEG_INF magnitude
@@ -81,6 +88,49 @@ class SweepResult:
         return int(np.argmin(self.T))
 
 
+@dataclasses.dataclass
+class CostSweepResult:
+    """Per-candidate sweep tensors: row k is cost block k of the
+    :class:`~repro.sweep.compile.CostBatch` the run patched in."""
+
+    T: np.ndarray                    # [K, S] µs
+    lam: Optional[np.ndarray]        # [K, S, nclass] or None
+    rho: Optional[np.ndarray]        # [K, S, nclass] or None
+    scenarios: ScenarioBatch
+    backend: str
+    from_cache: bool = False
+
+    @property
+    def K(self) -> int:
+        return int(self.T.shape[0])
+
+    @property
+    def S(self) -> int:
+        return int(self.T.shape[1])
+
+    def __getitem__(self, k: int) -> SweepResult:
+        """Candidate k's slice as a plain :class:`SweepResult`."""
+        k = int(k)
+        return SweepResult(
+            T=self.T[k].copy(),
+            lam=None if self.lam is None else self.lam[k].copy(),
+            rho=None if self.rho is None else self.rho[k].copy(),
+            scenarios=self.scenarios, backend=self.backend,
+            from_cache=self.from_cache)
+
+    def argbest(self, reduce: str = "mean") -> int:
+        """Candidate index minimizing the makespan objective over the grid."""
+        if reduce == "mean":
+            obj = self.T.mean(axis=1)
+        elif reduce == "max":
+            obj = self.T.max(axis=1)
+        elif reduce == "final":
+            obj = self.T[:, -1]
+        else:
+            raise ValueError(f"unknown reduce {reduce!r}")
+        return int(np.argmin(obj))
+
+
 # -- jitted forwards (module level: the jit cache is shared across engines,
 #    and CompiledPlan's bucketed shapes make distinct graphs reuse programs) --
 
@@ -92,11 +142,17 @@ def _jax():
 _WARNED: set = set()
 
 
-def _warn_once(key: tuple, message: str) -> None:
+def _warn_once(key: tuple, message: str, registry: Optional[set] = None) -> None:
     """Emit a RuntimeWarning once per key (backend overrides, engine
-    fallbacks) — loud enough to see, quiet enough for sweep loops."""
-    if key not in _WARNED:
-        _WARNED.add(key)
+    fallbacks) — loud enough to see, quiet enough for sweep loops.
+
+    ``registry`` scopes the once-ness: engines pass their own set so a
+    backend override warns once per engine *instance* (a fresh engine in a
+    new study warns again) rather than once per process.
+    """
+    reg = _WARNED if registry is None else registry
+    if key not in reg:
+        reg.add(key)
         import warnings
         warnings.warn(message, RuntimeWarning, stacklevel=3)
 
@@ -277,6 +333,57 @@ def _segment_core_multi(want_lam: bool, fused: bool = False):
     one = _make_segment_one(want_lam, fused)
     over_s = jax.vmap(one, in_axes=(None,) * 10 + (0, 0))
     return jax.vmap(over_s, in_axes=(0,) * 12)
+
+
+#: cost tensors each backend's forward consumes, in positional order
+#: (subset of ``compile.COST_FIELDS``; the rest of the 10 plan args is
+#: immutable structure).  The dicts map field name → position in the
+#: backend's 10 staged plan args (``_stage_arrays`` order).
+_SEG_COST_FIELDS = ("vconst", "vgap", "vgclass", "vlat", "vlat_sum")
+_PAL_COST_FIELDS = ("econst", "egap", "egclass", "elat")
+_SEG_COST_POS = {n: i for i, n in enumerate(_SEG_COST_FIELDS, start=2)}
+_PAL_COST_POS = {n: i for i, n in enumerate(_PAL_COST_FIELDS, start=3)}
+
+
+def _same_buffer(a: np.ndarray, b: np.ndarray) -> bool:
+    """True iff two arrays are literally the same memory view (start,
+    layout, dtype) — the test that lets a cost-batched run reuse the
+    engine's staged device copy of an unpatched cost tensor.  Strides on
+    size-≤1 axes are ignored: they address no memory, and broadcast views
+    report 0 there where the base array reports its natural stride."""
+    def eff(x):
+        return tuple(s for s, n in zip(x.strides, x.shape) if n > 1)
+
+    return (a.shape == b.shape and a.dtype == b.dtype
+            and eff(a) == eff(b)
+            and a.__array_interface__["data"][0]
+            == b.__array_interface__["data"][0])
+
+
+def _segment_core_costs(want_lam: bool, axes: tuple, fused: bool = False):
+    """Forward over K cost blocks × S scenarios → T [K, S], λ [K, S, nc].
+
+    The candidate axis vmaps ONLY the patched cost tensors (``axes``: one
+    entry per ``_SEG_COST_FIELDS`` member, 0 = batched, None = shared);
+    structure and unpatched costs ride along unbatched.  The per-element
+    arithmetic is the single-(graph, scenario) ``one`` unchanged, so row k
+    is bit-identical to a solo run of a plan rebuilt with cost block k
+    (the placement loop's exactness guarantee)."""
+    jax = _jax()
+    one = _make_segment_one(want_lam, fused)
+    over_s = jax.vmap(one, in_axes=(None,) * 10 + (0, 0))
+    return jax.vmap(over_s,
+                    in_axes=(None, None) + axes + (None,) * 3 + (None, None))
+
+
+def _dense_core_costs(want_lam: bool, axes: tuple):
+    """Pallas forward over K cost blocks × S scenarios: the (max,+) kernel
+    is vmapped on the candidate axis (the 0/−inf indicator is structure and
+    stays unbatched); λ via the argmax kernel exactly as in solo runs.
+    ``axes``: per-``_PAL_COST_FIELDS`` vmap axis (0 or None)."""
+    jax = _jax()
+    return jax.vmap(_dense_core(want_lam),
+                    in_axes=(None,) * 3 + axes + (None,) * 3 + (None, None))
 
 
 def _dense_core(want_lam: bool = False):
@@ -541,7 +648,8 @@ _N_PLAN_ARGS = 10
 
 
 def _get_forward(kind: str, want_lam: bool = False, multi: bool = False,
-                 fused: bool = False, mesh=None):
+                 fused: bool = False, mesh=None,
+                 costs: Optional[tuple] = None):
     """Build (or fetch) the jitted forward for one (backend, λ, multi) cell.
 
     With ``mesh`` the core is wrapped in ``shard_map`` before jit: multi
@@ -550,17 +658,30 @@ def _get_forward(kind: str, want_lam: bool = False, multi: bool = False,
     independent); single-graph forwards replicate the plan tensors and
     shard the scenario axis.  Per-element arithmetic is unchanged either
     way, so sharded results are bit-identical to single-device runs.
+
+    ``costs`` (a per-cost-field vmap-axis tuple, see ``_SEG_COST_FIELDS``
+    / ``_PAL_COST_FIELDS``) selects the candidate-cost-axis cells
+    (``run(costs=)``): patched cost tensors batched, structure and
+    unpatched costs unbatched, scenarios broadcast.
     """
     jax = _jax()
     mesh_key = None if mesh is None else tuple(
         d.id for d in np.asarray(mesh.devices).flat)
     fused = bool(fused and want_lam and kind == "segment")
-    key = (kind, want_lam, multi, fused, mesh_key)
+    if costs is not None and (multi or mesh is not None):
+        raise ValueError("cost-batched runs support neither MultiPlan "
+                         "engines nor shard= yet")
+    key = (kind, want_lam, multi, fused, mesh_key, costs)
     if key in _FWD_CACHE:
         return _FWD_CACHE[key]
     if kind == "segment":
-        core = (_segment_core_multi if multi else _segment_core)(want_lam,
-                                                                 fused)
+        if costs is not None:
+            core = _segment_core_costs(want_lam, costs, fused)
+        else:
+            core = (_segment_core_multi if multi else _segment_core)(want_lam,
+                                                                     fused)
+    elif costs is not None:
+        core = _dense_core_costs(want_lam, costs)
     else:
         core = (_dense_core_multi if multi else _dense_core)(want_lam)
     if mesh is not None:
@@ -604,6 +725,7 @@ class SweepEngine:
         self.cache = cache
         self.calls = 0            # compiled-program dispatches (cache hits excluded)
         self._dev: dict = {}
+        self._warned: set = set()  # per-instance warn-once registry
 
     # -- device-array staging (inside enable_x64 so float64 survives) -------
     def _arrays(self, kind: str):
@@ -614,7 +736,7 @@ class SweepEngine:
 
     def run(self, scenarios: ScenarioBatch, compute_lam: bool = True,
             backend: Optional[str] = None, shard=None,
-            use_cache: bool = True) -> SweepResult:
+            use_cache: bool = True, costs: Optional[CostBatch] = None):
         """Evaluate every scenario; returns numpy-backed :class:`SweepResult`.
 
         ``backend="pallas"`` serves T *and* λ/ρ directly — the argmax-
@@ -622,6 +744,13 @@ class SweepEngine:
         redispatch.  ``shard`` (None/True/"auto"/int) splits the scenario
         axis across local devices via ``shard_map``; results stay
         bit-identical to the single-device run.
+
+        ``costs`` (a :class:`~repro.sweep.compile.CostBatch` from
+        :meth:`CompiledPlan.patch_costs`) adds a candidate-cost axis: all K
+        cost blocks × S scenarios evaluate through the plan's already-
+        compiled forward (structure unbatched — zero recompiles) and the
+        return type becomes :class:`CostSweepResult` with row k bit-
+        identical to a solo run of a plan rebuilt with cost block k.
         """
         backend = backend or self.backend
         if backend not in ("segment", "pallas"):
@@ -629,20 +758,33 @@ class SweepEngine:
         if backend == "pallas" and compute_lam:
             # guard: if the λ-emitting kernel cannot even be built on this
             # install, say so ONCE and fall back — never silently ignore an
-            # explicit backend choice
+            # explicit backend choice (the costs cells consume the same
+            # kernel imports, so this one probe covers both paths)
             try:
                 _get_forward("pallas", True)
             except ImportError as e:
                 _warn_once(("override", "pallas-lam"),
                            "backend='pallas' with compute_lam=True needs the "
                            f"argmax (max,+) kernel, which failed to import "
-                           f"({e}); overriding to backend='segment'")
+                           f"({e}); overriding to backend='segment'",
+                           registry=self._warned)
                 backend = "segment"
         c = self.compiled
         if scenarios.nclass != c.nclass:
             raise ValueError(f"scenario batch has {scenarios.nclass} classes, "
                              f"graph has {c.nclass}")
         cache = self.cache if use_cache else None
+        if costs is not None:
+            if (shard if shard is not None else self.shard):
+                raise ValueError("cost-batched runs don't support shard= yet")
+            if not isinstance(costs, CostBatch):
+                # raw [K, ne] extra edge costs: patch only the view this
+                # backend evaluates (half the host work of a full patch)
+                costs = c.patch_costs(
+                    costs,
+                    views=("vertex",) if backend == "segment" else ("edge",))
+            return self._run_costs(scenarios, costs, compute_lam, backend,
+                                   cache)
         key = None
         if cache is not None:
             key = result_key(c.content_hash(), scenarios, compute_lam, backend)
@@ -706,6 +848,127 @@ class SweepEngine:
         return SweepResult(T=np.array(T),
                            lam=None if lam is None else np.array(lam),
                            rho=rho, scenarios=scenarios, backend=backend)
+
+    def _run_costs(self, scenarios: ScenarioBatch, costs: CostBatch,
+                   compute_lam: bool, backend: str,
+                   cache: Optional[SweepCache]) -> CostSweepResult:
+        """K cost blocks × S scenarios through the warm compiled forward."""
+        c = self.compiled
+        if costs.vconst.shape[1:] != c.vconst.shape:
+            raise ValueError(
+                f"cost block envelope {costs.vconst.shape[1:]} does not "
+                f"match the plan's {c.vconst.shape} — patch_costs() the "
+                "same plan this engine compiled")
+        if costs.plan_hash is not None and costs.plan_hash != c.content_hash():
+            # bucketing makes DISTINCT graphs share envelopes, so the
+            # shape check alone cannot catch a batch minted on another plan
+            raise ValueError(
+                "cost batch was patched from a different plan than this "
+                "engine compiled (same envelope, different content) — "
+                "patch_costs() the engine's own plan")
+        # a view-limited patch (patch_costs(views=...)) carries real costs
+        # only in one backend's constants; evaluating the other backend
+        # would silently read unpatched values
+        v_b, e_b = costs.vconst.strides[0] != 0, costs.econst.strides[0] != 0
+        if (backend == "segment" and e_b and not v_b) or \
+                (backend == "pallas" and v_b and not e_b):
+            raise ValueError(
+                f"cost batch was patched for the "
+                f"{'edge' if e_b else 'vertex'} view only and cannot run "
+                f"on backend={backend!r}")
+        key = None
+        if cache is not None:
+            # hash only the tensors this backend consumes: a raw-extras
+            # run and a full patch_costs() of the same extras share a key
+            key = result_key(c.content_hash(), scenarios, compute_lam,
+                             backend, cost_hash=costs.content_hash(
+                                 fields=_SEG_COST_FIELDS
+                                 if backend == "segment"
+                                 else _PAL_COST_FIELDS))
+            hit = cache.get(key, patched=True)
+            if hit is not None:
+                return dataclasses.replace(
+                    hit, T=hit.T.copy(),
+                    lam=None if hit.lam is None else hit.lam.copy(),
+                    rho=None if hit.rho is None else hit.rho.copy(),
+                    scenarios=scenarios, from_cache=True)
+
+        K, S = costs.K, scenarios.S
+        cb = costs.padded(_bucket(K, lo=1))
+        Sp = _bucket(S, lo=4)
+        Lmat = np.repeat(scenarios.L[-1:], Sp, axis=0)
+        Lmat[:S] = scenarios.L
+        GSmat = np.repeat(scenarios.gscale[-1:], Sp, axis=0)
+        GSmat[:S] = scenarios.gscale
+
+        # only genuinely per-candidate tensors ride the vmapped K axis;
+        # broadcast fields (stride 0 — untouched by the patch) pass one
+        # block unbatched, so a placement step ships K small patched
+        # constants, not K copies of the whole cost block.  Unbatched
+        # blocks that are literally views of this plan's own tensors reuse
+        # the engine's staged device arrays — no re-transfer per step.
+        seg = backend == "segment"
+        names = _SEG_COST_FIELDS if seg else _PAL_COST_FIELDS
+        pos = _SEG_COST_POS if seg else _PAL_COST_POS
+        axes = tuple(0 if getattr(cb, n).strides[0] != 0 else None
+                     for n in names)
+        if all(ax is None for ax in axes):      # vmap needs ≥1 batched input
+            axes = (0,) + axes[1:]
+
+        def cost_arr(name, ax, staged, dtype=None):
+            a = getattr(cb, name)
+            if ax is None:
+                a = a[0]
+                if _same_buffer(a, getattr(self.compiled, name)):
+                    return staged[pos[name]]
+            return _jax().numpy.asarray(
+                np.ascontiguousarray(a) if dtype is None
+                else np.asarray(a, dtype=dtype))
+
+        if seg:
+            from jax.experimental import enable_x64
+            with enable_x64():
+                jnp = _jax().numpy
+                s_arrs = self._arrays("segment")
+                cost_arrs = tuple(cost_arr(n, ax, s_arrs)
+                                  for n, ax in zip(names, axes))
+                fwd = _get_forward("segment", compute_lam, costs=axes)
+                T, lam = fwd(*s_arrs[:2], *cost_arrs, *s_arrs[7:],
+                             jnp.asarray(Lmat), jnp.asarray(GSmat))
+                T = np.asarray(T)[:K, :S]
+                lam = np.asarray(lam)[:K, :S]
+        else:
+            jnp = _jax().numpy
+            p_arrs = self._arrays("pallas")
+            f32 = {"econst": np.float32, "egap": np.float32,
+                   "elat": np.float32, "egclass": None}
+            cost_arrs = tuple(cost_arr(n, ax, p_arrs, dtype=f32[n])
+                              for n, ax in zip(names, axes))
+            fwd = _get_forward("pallas", compute_lam, costs=axes)
+            T, lam = fwd(*p_arrs[:3], *cost_arrs, *p_arrs[7:],
+                         jnp.asarray(Lmat, dtype=jnp.float32),
+                         jnp.asarray(GSmat, dtype=jnp.float32))
+            T = np.asarray(T).astype(np.float64)[:K, :S]
+            lam = np.asarray(lam).astype(np.float64)[:K, :S]
+        self.calls += 1
+
+        if compute_lam:
+            rho = np.where(T[:, :, None] > 0,
+                           scenarios.L[None] * lam
+                           / np.maximum(T[:, :, None], 1e-300),
+                           0.0)
+        else:
+            lam, rho = None, None
+        res = CostSweepResult(T=np.array(T),
+                              lam=None if lam is None else np.array(lam),
+                              rho=rho, scenarios=scenarios, backend=backend)
+        if cache is not None:
+            # store a private copy so caller mutations never poison hits
+            cache.put(key, dataclasses.replace(
+                res, T=res.T.copy(),
+                lam=None if res.lam is None else res.lam.copy(),
+                rho=None if res.rho is None else res.rho.copy()))
+        return res
 
     def latency_curve(self, deltas: Sequence[float], cls: int = 0,
                       params: Optional[LogGPS] = None,
@@ -809,6 +1072,7 @@ class MultiSweepEngine:
         self.cache = cache
         self.calls = 0
         self._dev: dict = {}
+        self._warned: set = set()  # per-instance warn-once registry
 
     @classmethod
     def from_variants(cls, variants, **kw):
@@ -865,7 +1129,8 @@ class MultiSweepEngine:
                 _warn_once(("override", "pallas-lam"),
                            "backend='pallas' with compute_lam=True needs the "
                            f"argmax (max,+) kernel, which failed to import "
-                           f"({e}); overriding to backend='segment'")
+                           f"({e}); overriding to backend='segment'",
+                           registry=self._warned)
                 backend = "segment"
         batches = self._batches(scenarios)
         cache = self.cache if use_cache else None

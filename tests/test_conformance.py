@@ -1,0 +1,337 @@
+"""Cross-backend conformance suite: backend × output × packing, one matrix.
+
+The repo's equivalence guarantees used to live as scattered asserts in
+``test_sweep.py``; this file pins them in one parametrized matrix over
+
+    backend ∈ {scalar, segment, pallas}
+    output  ∈ {T, λ, ρ}
+    packing ∈ {solo, multi (packed MultiPlan), patched (candidate-cost axis)}
+
+on a shared case set (single- and two-class params, a tie-heavy collective
+chain, random-DAG matrix) so a new backend or a new packing mode has one
+place to conform to.
+
+Tolerance contract (no looser than PR 3's):
+
+* segment vs scalar — **bit-exact** for solo and multi (same float64 ops,
+  same ATOL tie-breaks, and MultiPlan padding only adds masked −∞
+  candidates).  Patched cells compare at 1e-12 relative: the scalar engine
+  adds ``extra_edge_cost`` after ``econst + elat @ L`` while the compiled
+  path bakes it into ``econst`` first — same terms, different float
+  association.  The compiled-vs-compiled patched guarantee IS bit-exact
+  (patched ≡ rebuilt plan, asserted below and property-tested in
+  ``test_properties.py``).
+* pallas vs scalar — ≤1e-5 relative on T/λ (float32 kernel accumulators),
+  ρ at 1e-4 (a ratio of the two).
+* scalar itself anchors against *independent* oracles: the explicit HiGHS
+  LP's duals (solo/multi) and a graph rebuilt with the extra costs baked
+  into ``econst`` (patched).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+
+from repro.core import dag, lp, synth
+from repro.core.loggps import LogGPS, cluster_params, tpu_pod_params
+from repro import sweep
+
+BACKENDS = ("scalar", "segment", "pallas")
+OUTPUTS = ("T", "lam", "rho")
+PACKINGS = ("solo", "multi", "patched")
+K = 3                                    # candidate cost blocks per case
+
+
+@dataclasses.dataclass
+class Case:
+    name: str
+    g: object
+    params: LogGPS
+    batch: sweep.ScenarioBatch
+    extras: np.ndarray                   # [K, ne] placement-style Φ costs
+
+
+def _make_cases():
+    p1 = cluster_params(L_us=3.0, o_us=5.0)
+    p2 = tpu_pod_params(pod_size=2)
+    specs = [
+        ("stencil", synth.stencil2d(3, 3, 4, params=p1), p1),
+        ("cg", synth.cg_like(2, 2, 3, params=p1), p1),
+        ("allreduce", synth.allreduce_chain(8, 3, params=p1), p1),  # tie-heavy
+        ("stencil2c", synth.stencil2d(2, 2, 3, params=p2), p2),     # 2-class
+    ]
+    rng = np.random.default_rng(42)
+    cases = []
+    for name, g, p in specs:
+        batch = sweep.latency_grid(p, np.linspace(0.0, 60.0, 5))
+        extras = np.where(g.ebytes[None, :] > 0,
+                          rng.uniform(0.0, 10.0, size=(K, g.num_edges)),
+                          0.0)
+        cases.append(Case(name=name, g=g, params=p, batch=batch,
+                          extras=extras))
+    return cases
+
+
+CASES = _make_cases()
+
+
+def _scalar_run(case, extra=None):
+    """The scalar oracle: one LevelPlan, one forward per scenario row."""
+    plan = dag.LevelPlan(case.g)
+    S, nc = case.batch.S, case.g.nclass
+    T = np.empty(S)
+    lam = np.empty((S, nc))
+    rho = np.empty((S, nc))
+    for i in range(S):
+        s = plan.forward(case.params.replace(L=tuple(case.batch.L[i])),
+                         extra_edge_cost=extra)
+        T[i], lam[i], rho[i] = s.T, s.lam, s.rho()
+    return {"T": T, "lam": lam, "rho": rho}
+
+
+@pytest.fixture(scope="module")
+def scalar_ref():
+    """Oracle outputs per (case, packing): solo ≡ multi for the scalar
+    engine (no packing); patched stacks the K per-extra evaluations."""
+    ref = {}
+    for c in CASES:
+        base = _scalar_run(c)
+        ref[(c.name, "solo")] = base
+        ref[(c.name, "multi")] = base
+        runs = [_scalar_run(c, extra=c.extras[k]) for k in range(K)]
+        ref[(c.name, "patched")] = {
+            out: np.stack([r[out] for r in runs]) for out in OUTPUTS}
+    return ref
+
+
+@pytest.fixture(scope="module")
+def computed():
+    """Engine outputs per (backend, packing, case) — computed once, the
+    parametrized matrix below only compares slices."""
+    out = {}
+    plans = {c.name: sweep.compile_plan(c.g, c.params) for c in CASES}
+    for be in ("segment", "pallas"):
+        for c in CASES:
+            eng = sweep.SweepEngine(compiled=plans[c.name], params=c.params,
+                                    backend=be, cache=None)
+            r = eng.run(c.batch)
+            out[(be, "solo", c.name)] = {"T": r.T, "lam": r.lam, "rho": r.rho}
+            rc = eng.run(c.batch, costs=plans[c.name].patch_costs(c.extras))
+            out[(be, "patched", c.name)] = {"T": rc.T, "lam": rc.lam,
+                                            "rho": rc.rho}
+        plan_list = [plans[c.name] for c in CASES]
+        for idx in sweep.group_plans(plan_list):
+            meng = sweep.MultiSweepEngine(
+                multi=sweep.pack_plans([plan_list[i] for i in idx]),
+                names=[CASES[i].name for i in idx], backend=be, cache=None)
+            res = meng.run([CASES[i].batch for i in idx])
+            for j, i in enumerate(idx):
+                out[(be, "multi", CASES[i].name)] = {
+                    "T": res.T[j], "lam": res.lam[j], "rho": res.rho[j]}
+    return out
+
+
+def _scalar_anchor(case, packing):
+    """Independent oracle for the scalar row of the matrix."""
+    if packing in ("solo", "multi"):
+        # the explicit HiGHS LP: primal T and the reduced costs of ℓ (λ);
+        # two scenario rows keep the LP solves bounded
+        rows = (0, case.batch.S - 1)
+        T = np.empty(len(rows))
+        lam = np.empty((len(rows), case.g.nclass))
+        for n, i in enumerate(rows):
+            p = case.params.replace(L=tuple(case.batch.L[i]))
+            if packing == "solo":
+                sol = lp.solve_highs(lp.build_lp(case.g, p))
+                T[n], lam[n] = sol.T, sol.lam
+            else:
+                # fresh-plan construction path (dag.evaluate) — plan reuse
+                # inside the oracle must not change a single bit
+                s = dag.evaluate(case.g, p)
+                T[n], lam[n] = s.T, s.lam
+        L = case.batch.L[list(rows)]
+        rho = np.where(T[:, None] > 0, L * lam / T[:, None], 0.0)
+        return rows, {"T": T, "lam": lam, "rho": rho}
+    # patched: a graph REBUILT with the extra baked into econst — the
+    # independent construction the patch must be equivalent to
+    runs = []
+    for k in range(K):
+        g2 = dataclasses.replace(case.g,
+                                 econst=case.g.econst + case.extras[k])
+        c2 = Case(name=case.name, g=g2, params=case.params,
+                  batch=case.batch, extras=case.extras)
+        runs.append(_scalar_run(c2))
+    return None, {out: np.stack([r[out] for r in runs]) for out in OUTPUTS}
+
+
+def _tol(backend, packing, output):
+    """Comparison tolerance vs the scalar oracle ("exact" = bit-equal)."""
+    if backend == "segment":
+        if packing == "patched":
+            # compiled path bakes the extra into econst before adding
+            # elat@L; scalar adds it after — same terms, different float
+            # association, so ulp-level (not bit) equality
+            return dict(rtol=1e-12, atol=1e-12)
+        return "exact"
+    return {"T": dict(rtol=1e-5, atol=1e-7),
+            "lam": dict(rtol=1e-5, atol=1e-5),
+            "rho": dict(rtol=1e-4, atol=1e-5)}[output]
+
+
+@pytest.mark.parametrize("packing", PACKINGS)
+@pytest.mark.parametrize("output", OUTPUTS)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_matrix(backend, output, packing, scalar_ref, computed):
+    for c in CASES:
+        ref = scalar_ref[(c.name, packing)][output]
+        if backend == "scalar":
+            rows, anchor = _scalar_anchor(c, packing)
+            got = anchor[output]
+            want = ref[list(rows)] if rows is not None else ref
+            tol = (dict(rtol=1e-6, atol=1e-6) if packing == "solo"
+                   else dict(rtol=1e-12, atol=1e-12))
+            np.testing.assert_allclose(got, want, err_msg=c.name, **tol)
+            continue
+        got = computed[(backend, packing, c.name)][output]
+        tol = _tol(backend, packing, output)
+        if tol == "exact":
+            np.testing.assert_array_equal(got, ref, err_msg=c.name)
+        else:
+            np.testing.assert_allclose(got, ref, err_msg=c.name, **tol)
+
+
+def test_patched_bit_equal_rebuilt():
+    """The compiled-vs-compiled tentpole guarantee: row k of a cost-batched
+    run is bit-identical to a solo run of a plan rebuilt with
+    ``compile_plan(extra_edge_cost=extras[k])`` — per backend, per output.
+    (The scalar comparison above is ulp-level; THIS one is exact, because
+    both compiled paths perform the identical baked addition.)"""
+    for c in CASES:
+        base = sweep.compile_plan(c.g, c.params)
+        for be in ("segment", "pallas"):
+            eng = sweep.SweepEngine(compiled=base, params=c.params,
+                                    backend=be, cache=None)
+            res = eng.run(c.batch, costs=base.patch_costs(c.extras))
+            for k in range(K):
+                reb = sweep.compile_plan(c.g, c.params,
+                                         extra_edge_cost=c.extras[k])
+                assert reb.shape_key == base.shape_key  # same XLA program
+                ref = sweep.SweepEngine(compiled=reb, params=c.params,
+                                        backend=be, cache=None).run(c.batch)
+                np.testing.assert_array_equal(res.T[k], ref.T,
+                                              err_msg=f"{c.name}/{be}")
+                np.testing.assert_array_equal(res.lam[k], ref.lam,
+                                              err_msg=f"{c.name}/{be}")
+                np.testing.assert_array_equal(res.rho[k], ref.rho,
+                                              err_msg=f"{c.name}/{be}")
+
+
+def test_with_extra_cost_shares_structure():
+    """``with_extra_cost`` = a 1-candidate patch that keeps every structure
+    array shared (same shape bucket → same compiled program) while the
+    content hash moves with the cost block."""
+    c = CASES[0]
+    base = sweep.compile_plan(c.g, c.params)
+    patched = base.with_extra_cost(c.extras[0])
+    assert patched.shape_key == base.shape_key
+    assert patched.vsrc is base.vsrc and patched.emask is base.emask
+    assert patched.content_hash() != base.content_hash()
+    a = sweep.SweepEngine(compiled=patched, params=c.params, cache=None) \
+        .run(c.batch)
+    b = sweep.SweepEngine(
+        compiled=sweep.compile_plan(c.g, c.params,
+                                    extra_edge_cost=c.extras[0]),
+        params=c.params, cache=None).run(c.batch)
+    np.testing.assert_array_equal(a.T, b.T)
+    np.testing.assert_array_equal(a.lam, b.lam)
+
+
+def test_random_graph_matrix():
+    """The ≥100 random graph × scenario matrix (PR 1/PR 3 headline tests,
+    absorbed here): segment bit-exact vs scalar, pallas ≤1e-5 vs segment —
+    T, λ and ρ on every combination."""
+    rng = np.random.default_rng(7)
+    combos = 0
+    for i in range(25):
+        p = LogGPS(L=(float(rng.uniform(0.5, 8.0)),),
+                   G=(float(rng.uniform(1e-6, 1e-4)),),
+                   o=float(rng.uniform(0.0, 4.0)), S=1e9)
+        g = synth.random_dag(rng, nranks=int(rng.integers(2, 5)), nops=40,
+                             p_msg=float(rng.uniform(0.2, 0.6)), params=p)
+        eng = sweep.SweepEngine(g, p, cache=None)
+        deltas = np.sort(rng.uniform(0.0, 60.0, size=4))
+        batch = sweep.latency_grid(p, deltas)
+        seg = eng.run(batch)
+        plan = dag.LevelPlan(g)
+        for s_i in range(batch.S):
+            s = plan.forward(p.replace(L=tuple(batch.L[s_i])))
+            assert seg.T[s_i] == s.T, (i, s_i)
+            np.testing.assert_array_equal(seg.lam[s_i], s.lam)
+            np.testing.assert_array_equal(seg.rho[s_i], s.rho())
+        pal = eng.run(batch, backend="pallas")
+        assert pal.backend == "pallas"
+        np.testing.assert_allclose(pal.T, seg.T, rtol=1e-5)
+        np.testing.assert_allclose(pal.lam, seg.lam, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(pal.rho, seg.rho, rtol=1e-4, atol=1e-5)
+        combos += batch.S
+    assert combos >= 100
+
+
+def test_lambda_matches_highs_marginals():
+    """λ from the batched backtrace ≡ reduced costs of ℓ (lower-bound
+    marginals) from the explicit HiGHS LP (absorbed from test_sweep)."""
+    p = cluster_params(L_us=3.0, o_us=5.0)
+    g = synth.stencil2d(3, 3, 3, params=p)
+    eng = sweep.SweepEngine(g, p, cache=None)
+    for dL in (0.0, 10.0):
+        pt = p.with_delta(dL)
+        res = eng.run(sweep.base_batch(pt))
+        sol = lp.solve_highs(lp.build_lp(g, pt))
+        assert res.T[0] == pytest.approx(sol.T, rel=1e-8)
+        assert res.lam[0, 0] == pytest.approx(sol.lam[0], abs=1e-6)
+
+
+def test_rejections():
+    """Conformance of the error surface: unknown backends, mismatched cost
+    envelopes, view-limited batches on the wrong backend, plans without
+    edge-position records."""
+    c = CASES[0]
+    base = sweep.compile_plan(c.g, c.params)
+    eng = sweep.SweepEngine(compiled=base, params=c.params, cache=None)
+    with pytest.raises(ValueError, match="backend"):
+        eng.run(c.batch, backend="cuda")
+    with pytest.raises(ValueError, match="edges"):
+        base.patch_costs(np.zeros((2, c.g.num_edges + 1)))
+    with pytest.raises(ValueError, match="views"):
+        base.patch_costs(c.extras, views=("diagonal",))
+    # view-limited batches refuse the other backend
+    vb = base.patch_costs(c.extras, views=("vertex",))
+    with pytest.raises(ValueError, match="vertex view only"):
+        eng.run(c.batch, costs=vb, backend="pallas")
+    eb = base.patch_costs(c.extras, views=("edge",))
+    with pytest.raises(ValueError, match="edge view only"):
+        eng.run(c.batch, costs=eb, backend="segment")
+    # a cost block minted on ANOTHER plan is refused — by envelope when
+    # shapes differ, by the stamped plan hash when bucketing made two
+    # distinct graphs share an envelope
+    other = sweep.compile_plan(CASES[2].g, CASES[2].params)
+    with pytest.raises(ValueError, match="envelope|different plan"):
+        eng.run(c.batch, costs=other.patch_costs(
+            np.zeros(CASES[2].g.num_edges)))
+    g_twin = synth.stencil2d(3, 3, 4, params=c.params, jitter=0.1, seed=9)
+    twin = sweep.compile_plan(g_twin, c.params)
+    if twin.vconst.shape == base.vconst.shape:       # same shape bucket
+        with pytest.raises(ValueError, match="different plan"):
+            eng.run(c.batch, costs=twin.patch_costs(
+                np.zeros(g_twin.num_edges)))
+    # hand-assembled plans (no epos records) cannot patch
+    stripped = dataclasses.replace(base, epos_lvl=None, epos_dst=None,
+                                   epos_d=None, epos_e=None)
+    with pytest.raises(ValueError, match="edge-position"):
+        stripped.patch_costs(c.extras)
+    # cost-batched runs don't shard
+    with pytest.raises(ValueError, match="shard"):
+        eng.run(c.batch, costs=base.patch_costs(c.extras), shard=True)

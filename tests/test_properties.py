@@ -98,6 +98,66 @@ def test_ipm_duality(gp):
     assert (sol.lam >= -1e-6).all()
 
 
+# -- zero-recompile cost patching: patched ≡ rebuilt, bit for bit -------------
+
+_PATCH_CACHE: dict = {}
+
+
+def _placement_fixture():
+    """One biased placement workload + its compiled base plan and warm
+    engine, built once (the property below replays many swap sequences
+    against it — exactly the greedy loop's access pattern)."""
+    if "fix" not in _PATCH_CACHE:
+        from repro.core import placement
+        from repro.core.graph import GraphBuilder
+        from repro import sweep as sweep_mod
+
+        P = 8
+        zero = LogGPS(L=(0.0,), G=(0.0,), o=0.5, S=1e18)
+        b = GraphBuilder(P, 1)
+        for it in range(4):
+            for idx, r in enumerate(range(0, P, 2)):
+                b.add_calc(r, 1.0)
+                sz = 65536.0 * (1.0 + 0.5 * idx)
+                b.add_message(r, r + 1, sz, zero)
+                b.add_message(r + 1, r, sz, zero)
+        g = b.finalize()
+        phi = placement.ArchTopology.two_tier(P, 4, L_fast=1.0, L_slow=20.0,
+                                              G_fast=1e-5, G_slow=4e-5)
+        base = sweep_mod.compile_plan(g)
+        eng = sweep_mod.SweepEngine(compiled=base, cache=None)
+        batch = sweep_mod.ScenarioBatch(L=np.asarray([[0.0], [5.0], [10.0]]),
+                                        gscale=np.ones((3, 1)))
+        _PATCH_CACHE["fix"] = (g, phi, base, eng, batch)
+    return _PATCH_CACHE["fix"]
+
+
+@given(st.lists(st.tuples(st.integers(0, 7), st.integers(0, 7)),
+                min_size=1, max_size=6))
+@settings(max_examples=12, deadline=None)
+def test_patched_costs_bit_equal_rebuilt_random_swaps(swaps):
+    """Random swap sequences (the greedy placement loop's candidate
+    mappings): T/λ/ρ of the once-compiled patched plan must be bit-equal
+    to freshly rebuilt plans for every prefix mapping of the sequence."""
+    pytest.importorskip("jax")
+    from repro.core import placement
+    from repro import sweep as sweep_mod
+
+    g, phi, base, eng, batch = _placement_fixture()
+    pi = np.arange(g.nranks)
+    extras = []
+    for (i, j) in swaps:
+        pi[i], pi[j] = pi[j], pi[i]
+        extras.append(placement.mapping_edge_cost(g, phi, pi))
+    res = eng.run(batch, costs=base.patch_costs(np.stack(extras)))
+    for k, ex in enumerate(extras):
+        reb = sweep_mod.compile_plan(g, extra_edge_cost=ex)
+        ref = sweep_mod.SweepEngine(compiled=reb, cache=None).run(batch)
+        np.testing.assert_array_equal(res.T[k], ref.T)
+        np.testing.assert_array_equal(res.lam[k], ref.lam)
+        np.testing.assert_array_equal(res.rho[k], ref.rho)
+
+
 @given(st.integers(2, 5), st.integers(1, 4))
 @settings(max_examples=10, deadline=None)
 def test_injection_equivalence(pdim, iters):

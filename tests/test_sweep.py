@@ -1,10 +1,9 @@
-"""Batched scenario-sweep engine (repro.sweep) vs the scalar DAG engine.
+"""Batched scenario-sweep engine (repro.sweep): features and regressions.
 
-The headline invariant: for every scenario point, the jit+vmap engine's
-(T, λ, ρ) must equal ``dag.LevelPlan.forward`` to 1e-6 (they share the
-argmax tie-break rules, so in practice they agree to float64 round-off),
-and λ must match the explicit LP's reduced costs (HiGHS lower-bound
-marginals).
+The backend-equivalence guarantees (scalar vs segment vs pallas × T/λ/ρ ×
+solo/MultiPlan/patched-costs) live in ``tests/test_conformance.py`` as one
+parametrized matrix; this file covers the engine's *feature* surface —
+grids, caching, dispatch, sharding, packing mechanics, guards.
 """
 
 import numpy as np
@@ -12,8 +11,8 @@ import pytest
 
 pytest.importorskip("jax")
 
-from repro.core import dag, lp, sensitivity, synth
-from repro.core.loggps import LogGPS, cluster_params, tpu_pod_params
+from repro.core import dag, sensitivity, synth
+from repro.core.loggps import cluster_params, tpu_pod_params
 from repro import sweep
 from repro.sweep import cache as sweep_cache
 from repro.sweep import engine as sweep_engine
@@ -22,67 +21,6 @@ from repro.sweep import engine as sweep_engine
 @pytest.fixture(scope="module")
 def params():
     return cluster_params(L_us=3.0, o_us=5.0)
-
-
-def _assert_matches_scalar(g, p, batch, res, atol=1e-6):
-    plan = dag.LevelPlan(g)
-    for i in range(batch.S):
-        s = plan.forward(p.replace(L=tuple(batch.L[i])))
-        assert res.T[i] == pytest.approx(s.T, abs=atol, rel=1e-9), i
-        np.testing.assert_allclose(res.lam[i], s.lam, atol=atol)
-        np.testing.assert_allclose(res.rho[i], s.rho(), atol=atol)
-
-
-def test_batched_matches_scalar_100_random_graphs():
-    """≥100 random synth graphs × scenario points, T/λ/ρ within 1e-6."""
-    rng = np.random.default_rng(7)
-    combos = 0
-    for i in range(25):
-        p = LogGPS(L=(float(rng.uniform(0.5, 8.0)),),
-                   G=(float(rng.uniform(1e-6, 1e-4)),),
-                   o=float(rng.uniform(0.0, 4.0)), S=1e9)
-        g = synth.random_dag(rng, nranks=int(rng.integers(2, 5)), nops=40,
-                             p_msg=float(rng.uniform(0.2, 0.6)), params=p)
-        eng = sweep.SweepEngine(g, p)
-        deltas = np.sort(rng.uniform(0.0, 60.0, size=4))
-        res = eng.run(sweep.latency_grid(p, deltas))
-        _assert_matches_scalar(g, p, res.scenarios, res)
-        combos += res.S
-    assert combos >= 100
-
-
-@pytest.mark.parametrize("name,builder", [
-    ("stencil2d", lambda p: synth.stencil2d(3, 3, 4, params=p)),
-    ("cg", lambda p: synth.cg_like(2, 2, 3, params=p)),
-    ("sweep2d", lambda p: synth.sweep2d(3, 3, 2, params=p)),
-    ("allreduce", lambda p: synth.allreduce_chain(8, 3, params=p)),
-])
-def test_batched_matches_scalar_workloads(name, builder, params):
-    g = builder(params)
-    eng = sweep.SweepEngine(g, params)
-    res = eng.run(sweep.latency_grid(params, np.linspace(0.0, 80.0, 9)))
-    _assert_matches_scalar(g, params, res.scenarios, res)
-
-
-def test_two_class_sweep_matches_scalar():
-    p = tpu_pod_params(pod_size=2)
-    g = synth.stencil2d(2, 2, 3, params=p)
-    eng = sweep.SweepEngine(g, p)
-    res = eng.run(sweep.latency_grid(p, np.linspace(0.0, 30.0, 6), cls=1))
-    _assert_matches_scalar(g, p, res.scenarios, res)
-
-
-def test_lambda_matches_highs_marginals(params):
-    """λ from the batched backtrace ≡ reduced costs of ℓ (lower-bound
-    marginals) from the explicit HiGHS LP."""
-    g = synth.stencil2d(3, 3, 3, params=params)
-    eng = sweep.SweepEngine(g, params)
-    for dL in (0.0, 10.0):
-        p = params.with_delta(dL)
-        res = eng.run(sweep.base_batch(p))
-        sol = lp.solve_highs(lp.build_lp(g, p))
-        assert res.T[0] == pytest.approx(sol.T, rel=1e-8)
-        assert res.lam[0, 0] == pytest.approx(sol.lam[0], abs=1e-6)
 
 
 def test_bandwidth_scenarios_match_rebuilt_graph(params):
@@ -95,25 +33,6 @@ def test_bandwidth_scenarios_match_rebuilt_graph(params):
         g2 = synth.cg_like(2, 2, 3, params=p2)
         ref = dag.evaluate(g2, p2.replace(L=params.L)).T
         assert res.T[i] == pytest.approx(ref, rel=1e-12), gs
-
-
-def test_pallas_backend_matches_segment(params):
-    g = synth.cg_like(2, 2, 3, params=params)
-    eng = sweep.SweepEngine(g, params)
-    batch = sweep.latency_grid(params, np.linspace(0.0, 40.0, 5))
-    seg = eng.run(batch)
-    pal = eng.run(batch, backend="pallas", compute_lam=False)
-    # float32 accumulators (TPU VPU layout) → relative tolerance
-    np.testing.assert_allclose(pal.T, seg.T, rtol=1e-5)
-    # λ/ρ come straight from the argmax-emitting kernel — NO segment
-    # redirect (the pre-PR-3 silent fallback)
-    lam_req = eng.run(batch, backend="pallas", compute_lam=True)
-    assert lam_req.backend == "pallas"
-    np.testing.assert_allclose(lam_req.T, seg.T, rtol=1e-5)
-    np.testing.assert_allclose(lam_req.lam, seg.lam, rtol=1e-5, atol=1e-5)
-    np.testing.assert_allclose(lam_req.rho, seg.rho, rtol=1e-4, atol=1e-5)
-    with pytest.raises(ValueError, match="backend"):
-        eng.run(batch, backend="cuda")
 
 
 def test_cartesian_grid_shapes(params):
@@ -247,27 +166,13 @@ def _collective_topology_variants():
     return out
 
 
-def test_multiplan_matches_solo_bit_for_bit():
-    """MultiPlan results ≡ per-variant SweepEngine.run across 3 collective
-    algorithms × 2 topologies × 50 scenarios — exact equality (λ tie-breaks
-    included), not approx: padding only adds masked −∞ candidates and max
-    is exact, so packing must never perturb a single bit."""
-    variants = _collective_topology_variants()
-    deltas = np.linspace(0.0, 80.0, 50)
-
-    solo = {}
-    for v in variants:
-        eng = sweep.SweepEngine(v.graph, v.params, cache=None)
-        solo[v.name] = eng.run(sweep.latency_grid(v.params, deltas))
-
+def test_multiplan_getitem_by_index_and_name():
+    """__getitem__ by index and by name give the same slice (the packed ≡
+    solo value equivalence itself lives in the conformance matrix)."""
+    variants = _collective_topology_variants()[:2]
     meng = sweep.MultiSweepEngine.from_variants(variants, cache=None)
-    res = meng.run([sweep.latency_grid(v.params, deltas) for v in variants])
-    assert res.T.shape == (len(variants), 50)
+    res = meng.run(sweep.latency_grid(variants[0].params, [0.0, 10.0]))
     for i, v in enumerate(variants):
-        np.testing.assert_array_equal(res.T[i], solo[v.name].T)
-        np.testing.assert_array_equal(res.lam[i], solo[v.name].lam)
-        np.testing.assert_array_equal(res.rho[i], solo[v.name].rho)
-        # __getitem__ by index and by name give the same slice
         np.testing.assert_array_equal(res[i].T, res[v.name].T)
 
 
@@ -525,47 +430,7 @@ def test_cache_eviction_and_stats(params):
     assert len(cache) == 0 and cache.stats.misses == 0
 
 
-# -- PR 3: pallas λ backtrace, two-pass segment λ, sharding, guards ----------
-
-def test_pallas_lambda_matches_segment_100_random_graphs():
-    """backend='pallas' with compute_lam=True answers from the argmax
-    (max,+) kernel — over the same ≥100 random graph × point matrix as the
-    scalar-equivalence test, λ must match segment λ to ≤1e-5 relative
-    (float32 kernel accumulators)."""
-    rng = np.random.default_rng(7)
-    combos = 0
-    for i in range(25):
-        p = LogGPS(L=(float(rng.uniform(0.5, 8.0)),),
-                   G=(float(rng.uniform(1e-6, 1e-4)),),
-                   o=float(rng.uniform(0.0, 4.0)), S=1e9)
-        g = synth.random_dag(rng, nranks=int(rng.integers(2, 5)), nops=40,
-                             p_msg=float(rng.uniform(0.2, 0.6)), params=p)
-        eng = sweep.SweepEngine(g, p, cache=None)
-        deltas = np.sort(rng.uniform(0.0, 60.0, size=4))
-        batch = sweep.latency_grid(p, deltas)
-        seg = eng.run(batch)
-        pal = eng.run(batch, backend="pallas")
-        assert pal.backend == "pallas"
-        np.testing.assert_allclose(pal.T, seg.T, rtol=1e-5)
-        np.testing.assert_allclose(pal.lam, seg.lam, rtol=1e-5, atol=1e-5)
-        np.testing.assert_allclose(pal.rho, seg.rho, rtol=1e-4, atol=1e-5)
-        combos += batch.S
-    assert combos >= 100
-
-
-def test_multiplan_pallas_lambda_matches_segment():
-    """The batched argmax kernel serves λ for a whole packed MultiPlan
-    (graphs on the kernel's outer grid axis)."""
-    variants = _collective_topology_variants()
-    meng = sweep.MultiSweepEngine.from_variants(variants, cache=None)
-    deltas = np.linspace(0.0, 80.0, 10)
-    batches = [sweep.latency_grid(v.params, deltas) for v in variants]
-    seg = meng.run(batches)
-    pal = meng.run(batches, backend="pallas")
-    assert pal.backend == "pallas"
-    np.testing.assert_allclose(pal.T, seg.T, rtol=1e-5)
-    np.testing.assert_allclose(pal.lam, seg.lam, rtol=1e-5, atol=1e-5)
-
+# -- PR 3/4: λ layouts, sharding, guards, patched-cost caching ---------------
 
 def test_two_pass_lambda_bit_identical_to_fused(params):
     """The default two-pass segment λ (next-pointer records + reverse
@@ -772,3 +637,152 @@ def test_sensitivity_memoizes_engine(params):
     eng = next(iter(memo.values()))
     sensitivity.latency_curve(g, params, deltas)
     assert next(iter(memo.values())) is eng
+
+
+def test_multisweep_override_warns_once_per_engine_instance(params,
+                                                            monkeypatch):
+    """Regression: the MultiSweepEngine backend-override warning must fire
+    exactly once per engine INSTANCE — not once per run() call, and not
+    once per process (a fresh engine in a new study must warn again)."""
+    import warnings as warnings_mod
+    variants = sweep.collective_variants(
+        lambda a: synth.allreduce_chain(8, 1, params=params, algo=a),
+        ["ring", "tree"], params)
+    grid = sweep.latency_grid(params, [0.0, 5.0])
+
+    real = sweep_engine._get_forward
+
+    def fake(kind, want_lam=False, multi=False, fused=False, mesh=None,
+             costs=None):
+        if kind == "pallas" and want_lam:
+            raise ImportError("no argmax kernel in this build")
+        return real(kind, want_lam, multi, fused, mesh, costs)
+
+    monkeypatch.setattr(sweep_engine, "_get_forward", fake)
+    meng = sweep.MultiSweepEngine.from_variants(variants, cache=None)
+    with pytest.warns(RuntimeWarning, match="overriding to backend='segment'"):
+        r1 = meng.run(grid, backend="pallas", compute_lam=True)
+    assert r1.backend == "segment"
+    # second run on the SAME engine: quiet
+    with warnings_mod.catch_warnings():
+        warnings_mod.simplefilter("error", RuntimeWarning)
+        r2 = meng.run(grid, backend="pallas", compute_lam=True,
+                      use_cache=False)
+    assert r2.backend == "segment"
+    # a FRESH engine instance warns again (per-instance, not per-process)
+    meng2 = sweep.MultiSweepEngine.from_variants(variants, cache=None)
+    with pytest.warns(RuntimeWarning, match="overriding to backend='segment'"):
+        meng2.run(grid, backend="pallas", compute_lam=True, use_cache=False)
+    # same contract on the single-graph engine
+    g = synth.stencil2d(2, 2, 2, params=params)
+    eng = sweep.SweepEngine(g, params, cache=None)
+    with pytest.warns(RuntimeWarning, match="overriding"):
+        eng.run(grid, backend="pallas", compute_lam=True)
+    with warnings_mod.catch_warnings():
+        warnings_mod.simplefilter("error", RuntimeWarning)
+        eng.run(grid, backend="pallas", compute_lam=True, use_cache=False)
+    eng2 = sweep.SweepEngine(g, params, cache=None)
+    with pytest.warns(RuntimeWarning, match="overriding"):
+        eng2.run(grid, backend="pallas", compute_lam=True)
+
+
+def test_cache_patched_cost_stats_and_eviction(params):
+    """Patched-cost lookups are counted in the dedicated stats subset, and
+    entries that differ ONLY in the cost block are distinct cache citizens
+    (their keys carry the CostBatch hash) with normal LRU eviction."""
+    g = synth.stencil2d(2, 2, 2, params=params)
+    base = sweep.compile_plan(g, params)
+    cache = sweep_cache.SweepCache(capacity=2)
+    eng = sweep.SweepEngine(compiled=base, params=params, cache=cache)
+    batch = sweep.latency_grid(params, [0.0, 5.0])
+    rng = np.random.default_rng(3)
+    exs = [np.where(g.ebytes > 0, rng.uniform(0.0, 5.0, g.num_edges), 0.0)
+           for _ in range(3)]
+
+    r1 = eng.run(batch, costs=base.patch_costs(exs[0]))
+    assert not r1.from_cache
+    r2 = eng.run(batch, costs=base.patch_costs(exs[0]))
+    assert r2.from_cache
+    np.testing.assert_array_equal(r1.T, r2.T)
+    st = cache.stats
+    assert (st.patched_hits, st.patched_misses) == (1, 1)
+    assert st.snapshot()["patched_hits"] == 1
+    # keys are per backend VIEW: a raw-extras run (engine patches only the
+    # vertex view) hits the entry a full patch_costs() run stored
+    r_raw = eng.run(batch, costs=exs[0])
+    assert r_raw.from_cache
+    np.testing.assert_array_equal(r_raw.T, r1.T)
+    assert cache.stats.patched_hits == 2
+    # a different cost block over the SAME plan and scenarios is a miss
+    assert not eng.run(batch, costs=base.patch_costs(exs[1])).from_cache
+    assert cache.stats.patched_misses == 2
+    # capacity 2: a third cost block evicts the first (LRU)
+    assert not eng.run(batch, costs=base.patch_costs(exs[2])).from_cache
+    assert cache.stats.evictions == 1
+    assert not eng.run(batch, costs=base.patch_costs(exs[0])).from_cache
+    assert cache.stats.patched_misses == 4
+    # un-patched lookups don't touch the patched counters
+    eng.run(batch)
+    eng.run(batch)
+    assert cache.stats.patched_misses == 4 and cache.stats.patched_hits == 2
+    assert cache.stats.hits == 3 and cache.stats.misses == 5
+    # caller mutation of a patched result must not poison later hits
+    ra = eng.run(batch, costs=base.patch_costs(exs[0]), use_cache=False)
+    rb = eng.run(batch, costs=base.patch_costs(exs[0]))
+    ref = rb.T.copy()
+    rb.T[:] = -1.0
+    np.testing.assert_array_equal(
+        eng.run(batch, costs=base.patch_costs(exs[0])).T, ref)
+    np.testing.assert_array_equal(ra.T, ref)
+
+
+def test_placement_patch_stats_and_cache(params):
+    """The zero-recompile greedy loop: one plan compile for the whole
+    search, candidate evaluations served through cost patching (and, when
+    a cache is supplied, memoized under patched-cost keys)."""
+    from repro.core import placement
+    from repro.core.graph import GraphBuilder
+    from repro.core.loggps import LogGPS
+
+    P = 8
+    zero = LogGPS(L=(0.0,), G=(0.0,), o=0.5, S=1e18)
+    b = GraphBuilder(P, 1)
+    for it in range(4):
+        for idx, r in enumerate(range(0, P, 2)):
+            b.add_calc(r, 1.0)
+            sz = 65536.0 * (1.0 + 0.5 * idx)
+            b.add_message(r, r + 1, sz, zero)
+            b.add_message(r + 1, r, sz, zero)
+    g = b.finalize()
+    phi = placement.ArchTopology.two_tier(P, 4, L_fast=1.0, L_slow=20.0,
+                                          G_fast=1e-5, G_slow=4e-5)
+    pi0 = np.argsort(np.concatenate([np.arange(0, P, 2),
+                                     np.arange(1, P, 2)]))
+
+    st_patch, st_reb = {}, {}
+    pi_p, h_p = placement.place(g, phi, params=zero, pi0=pi0.copy(),
+                                stats=st_patch)
+    pi_r, h_r = placement.place(g, phi, params=zero, pi0=pi0.copy(),
+                                cost_eval="rebuild", stats=st_reb)
+    np.testing.assert_array_equal(pi_p, pi_r)     # bit-identical mapping
+    assert h_p == h_r
+    assert st_patch["steps"] >= 2                 # a real search happened
+    assert st_patch["plan_compiles"] == 1         # compile once, patch ever
+    # one engine dispatch per attempted step (the last attempt may fail
+    # the improvement test and not count as a step)
+    assert st_patch["steps"] <= st_patch["engine_calls"] \
+        <= st_patch["steps"] + 1
+    assert st_reb["plan_compiles"] == st_reb["candidates"]  # K per step
+    assert st_patch["scalar_fallbacks"] == 0
+    with pytest.raises(ValueError, match="cost_eval"):
+        placement.place(g, phi, params=zero, cost_eval="magic")
+    # a backend typo must fail loudly, not silently degrade every step
+    # to the scalar fallback
+    with pytest.raises(ValueError, match="backend"):
+        placement.place(g, phi, params=zero, backend="pallsa")
+    # repeated identical searches through a shared cache hit patched keys
+    cache = sweep_cache.SweepCache(capacity=32)
+    placement.place(g, phi, params=zero, pi0=pi0.copy(), cache=cache)
+    assert cache.stats.patched_misses > 0
+    placement.place(g, phi, params=zero, pi0=pi0.copy(), cache=cache)
+    assert cache.stats.patched_hits >= cache.stats.patched_misses
