@@ -52,7 +52,7 @@ def single_graph(out, n_scenarios=N_SCENARIOS):
     deltas = np.linspace(0.0, 100.0, n_scenarios)
     grid = sweep.latency_grid(p, deltas)
 
-    eng = sweep.SweepEngine(g, p, cache=None)
+    eng = sweep.Engine(g, params=p, policy=sweep.ExecPolicy(cache=None))
     t_batch, res = timeit(lambda: eng.run(grid), repeats=2, warmup=1)
     t_vals, _ = timeit(lambda: eng.run(grid, compute_lam=False),
                        repeats=2, warmup=1)
@@ -75,7 +75,8 @@ def single_graph(out, n_scenarios=N_SCENARIOS):
                  f"events={ev};us_per_scenario={t_loop * 1e6 / n_scenarios:.2f}"))
 
     # cached re-run: content-hash hit, no forward pass
-    eng_c = sweep.SweepEngine(g, p, cache=sweep.SweepCache())
+    eng_c = sweep.Engine(g, params=p,
+                         policy=sweep.ExecPolicy(cache=sweep.SweepCache()))
     eng_c.run(grid)
     t_hit, res_hit = timeit(lambda: eng_c.run(grid), repeats=3, warmup=0)
     assert res_hit.from_cache
@@ -138,7 +139,7 @@ def pallas_backend(out, n_scenarios=64):
     # mode off-TPU emulates the kernel, so keep this a smoke-scale number)
     p = cluster_params(L_us=3.0, o_us=5.0)
     g_small = synth.cg_like(2, 2, 3, params=p)
-    eng_p = sweep.SweepEngine(g_small, p, cache=None)
+    eng_p = sweep.Engine(g_small, params=p, policy=sweep.ExecPolicy(cache=None))
     grid_small = sweep.latency_grid(p, np.linspace(0.0, 50.0, n_scenarios))
     seg = eng_p.run(grid_small)
     t_pal, pal = timeit(lambda: eng_p.run(grid_small, backend="pallas",
@@ -183,7 +184,7 @@ def lam_compile(out, n_scenarios=256):
 
     p = cluster_params(L_us=3.0, o_us=5.0)
     g = synth.stencil2d(4, 4, 20, params=p)
-    eng = sweep.SweepEngine(g, p, cache=None)
+    eng = sweep.Engine(g, params=p, policy=sweep.ExecPolicy(cache=None))
     grid = sweep.latency_grid(p, np.linspace(0.0, 100.0, n_scenarios))
     S = grid.S
     Sp = sweep_engine._bucket(S, lo=4)
@@ -259,7 +260,8 @@ def placement_patch(out, smoke: bool = False):
     """
     import jax  # noqa: F401 — the engine path needs it; fail loud here
     from repro.core import placement
-    from repro.sweep import ScenarioBatch, SweepEngine, compile_plan
+    from repro.sweep import ScenarioBatch, compile_plan
+    from repro.sweep.api import Engine, ExecPolicy
     from repro.sweep import engine as sweep_engine
 
     P, iters, topk = (8, 4, 4) if smoke else (32, 12, 16)
@@ -297,7 +299,7 @@ def placement_patch(out, smoke: bool = False):
     # per-step candidate evaluation, warm (the cost the tentpole removed:
     # K plan rebuilds + MultiPlan pack + restage vs one patched dispatch)
     base = compile_plan(g)
-    eng = SweepEngine(compiled=base, cache=None)
+    eng = Engine(base, policy=ExecPolicy(cache=None))
     scen = ScenarioBatch(L=np.asarray([zero.L]),
                          gscale=np.ones((1, g.nclass)))
     rng = np.random.default_rng(0)
@@ -328,6 +330,82 @@ def placement_patch(out, smoke: bool = False):
                  f"per_step_speedup={speedup:.1f}x"))
     out(csv_line("sweep.placement_patch.cold", t_cold * 1e6,
                  f"rebuild_cold_us={t_reb * 1e6:.0f}"))
+
+
+def unified_axes(out, smoke: bool = False):
+    """One engine, three axes (the PR-5 API): a G×K×S query through the
+    unified ``repro.sweep.api.Engine``.
+
+    Asserted in BOTH modes (the ``--smoke`` CI gate):
+
+    * re-running a warm query with different K and S sizes *inside the
+      padded envelope* adds ZERO new XLA programs (K and S are bucketed,
+      G/K/S compose in one jit cell — the combinatorial growth the old
+      two-engine split would have paid is gone);
+    * the G×K×S segment result is bit-identical to the equivalent legacy
+      solo/rebuild runs (spot-checked on one (g, k) slice here; the full
+      matrix lives in tests/test_conformance.py);
+    * relaxed λ (``ExecPolicy(lam="fd")``) never compiles a λ-bearing
+      program — sensitivities at values-program compile cost (ratio ~1.0
+      vs the measured ~2.5-3× for bit-exact λ, see ``lam_compile``).
+    """
+    from repro.sweep import engine as sweep_engine
+    from repro.sweep.api import Engine, ExecPolicy, Query
+
+    p = cluster_params(L_us=3.0, o_us=5.0)
+    n_sc = 6 if smoke else 200
+    gs = [synth.stencil2d(3, 3, 4, params=p, jitter=0.1, seed=s)
+          for s in (1, 2)]
+    plans = [sweep.compile_plan(g, p) for g in gs]
+    rng = np.random.default_rng(0)
+    extras = [np.where(g.ebytes[None] > 0,
+                       rng.uniform(0.0, 5.0, (3, g.num_edges)), 0.0)
+              for g in gs]
+    eng = Engine(plans, policy=ExecPolicy(cache=None))
+    grid = sweep.latency_grid(p, np.linspace(0.0, 50.0, n_sc))
+
+    t_cold, res = timeit(lambda: eng.run(Query(scenarios=grid,
+                                               costs=extras)),
+                         repeats=1, warmup=0)
+    assert res.axes == ("G", "K", "S") and res.T.shape == (2, 3, n_sc)
+
+    # the cell the query compiled: G present, vconst patched on K
+    fwd = sweep_engine._get_forward("segment", True, multi=True,
+                                    costs=(0, None, None, None, None))
+    n_prog = fwd._cache_size()
+    # different K (3→4 pads to the same K bucket) and different S (within
+    # the same scenario bucket): ZERO new programs
+    extras4 = [np.concatenate([ex, ex[:1]]) for ex in extras]
+    grid_small = sweep.latency_grid(p, np.linspace(0.0, 50.0,
+                                                   max(n_sc - 1, 5)))
+    t_warm, res2 = timeit(lambda: eng.run(Query(scenarios=grid_small,
+                                                costs=extras4)),
+                          repeats=2, warmup=0)
+    assert fwd._cache_size() == n_prog, \
+        "warm G×K×S re-run within the padded envelope recompiled"
+
+    # legacy-equivalence spot check (bit-exact): graph 1, cost block 2
+    reb = sweep.compile_plan(gs[1], p, extra_edge_cost=extras[1][2])
+    ref = Engine(reb, params=p, policy=ExecPolicy(cache=None)).run(grid)
+    assert np.array_equal(res.T[1, 2], ref.T)
+    assert np.array_equal(res.lam[1, 2], ref.lam)
+
+    # relaxed λ: fd mode reuses the values program — no λ cell ever built
+    lam_fwd = sweep_engine._get_forward("segment", True)
+    n_lam = lam_fwd._cache_size()
+    fd_eng = Engine(plans[0], params=p,
+                    policy=ExecPolicy(lam="fd", cache=None))
+    t_fd, fd_res = timeit(lambda: fd_eng.run(grid), repeats=1, warmup=0)
+    assert fd_res.lam is not None
+    assert lam_fwd._cache_size() == n_lam, "fd λ built a λ program"
+
+    out(csv_line("sweep.unified_axes.gks_cold", t_cold * 1e6,
+                 f"G=2;K=3;S={n_sc};zero_recompile_rerun=1;"
+                 f"bit_equal_rebuild=1"))
+    out(csv_line("sweep.unified_axes.gks_warm", t_warm * 1e6,
+                 f"K=4;S={grid_small.S};new_xla_programs=0"))
+    out(csv_line("sweep.unified_axes.fd_lam", t_fd * 1e6,
+                 f"S={n_sc};lam_programs_compiled=0"))
 
 
 SHARD_SMOKE_PROG = """
@@ -390,6 +468,7 @@ def run(out, smoke: bool = False):
         lam_compile(out, n_scenarios=32)
         sharded(out, n_scenarios=16)
         placement_patch(out, smoke=True)
+        unified_axes(out, smoke=True)
         return
     single_graph(out)
     variant_study(out)
@@ -397,6 +476,7 @@ def run(out, smoke: bool = False):
     lam_compile(out)
     sharded(out, n_scenarios=64)
     placement_patch(out)
+    unified_axes(out)
 
 
 def main(argv=None):

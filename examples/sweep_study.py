@@ -22,7 +22,7 @@ def main():
     g = synth.cg_like(4, 4, 6, params=p)
     print(f"workload: {g.summary()}\n")
 
-    eng = sweep.SweepEngine(g, p)
+    eng = sweep.Engine(g, params=p)      # one engine; G/K/S batch axes
 
     # 1) 2,000-point cartesian grid: DCN latency delta × DCN bandwidth scale
     grid = sweep.cartesian_grid(

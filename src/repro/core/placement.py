@@ -199,34 +199,36 @@ def _place_scalar(g, phi, params, pi0, max_iters, verbose):
 def _candidate_objectives(g, scen_batch, extras, backend):
     """Rebuild-loop candidate evaluation (the pre-patching formulation,
     kept as the equivalence reference and bench baseline): each candidate's
-    Φ costs bake into a fresh CompiledPlan and the K plans pack into a
-    MultiPlan (identical structure ⇒ identical shape bucket, so the XLA
-    program is reused — the per-step cost is the K numpy recompiles, the
-    re-pack, and the device restage)."""
-    from repro.sweep import MultiSweepEngine, compile_plan, pack_plans
+    Φ costs bake into a fresh CompiledPlan and the K plans pack onto the
+    unified engine's graph axis (identical structure ⇒ identical shape
+    bucket, so the XLA program is reused — the per-step cost is the K
+    numpy recompiles, the re-pack, and the device restage)."""
+    from repro.sweep import compile_plan
+    from repro.sweep.api import Engine, ExecPolicy
 
     plans = [compile_plan(g, extra_edge_cost=ex) for ex in extras]
-    eng = MultiSweepEngine(multi=pack_plans(plans), backend=backend,
-                           cache=None)
+    eng = Engine(plans, policy=ExecPolicy(backend=backend, cache=None))
     res = eng.run(scen_batch, compute_lam=False)
     return res.T.mean(axis=1)                  # [K] mean over the grid
 
 
 def _place_batched(g, phi, params, pi0, max_iters, verbose, scenario_points,
                    topk, engine="auto", backend="segment",
-                   cost_eval="patch", cache=None, stats=None):
+                   cost_eval="patch", cache=None, stats=None, policy=None):
     """Batched Algorithm 3: grid-aggregated D matrices, vectorized gains,
     one engine call per greedy step for exact candidate evaluation.
 
-    ``cost_eval="patch"`` (default) compiles ONE plan up front and
-    evaluates every candidate of every step by patching its Φ costs into
-    the warm plan (``SweepEngine.run(costs=...)``) — zero plan recompiles
-    after the first step, bit-identical objectives (and therefore final
-    mapping) to ``cost_eval="rebuild"``, which recompiles K plans per step
-    (the PR-2 formulation, kept as the reference).  ``stats`` (a dict, if
-    given) is filled with the loop's cost accounting.
+    ``cost_eval="patch"`` (default) compiles ONE plan up front and issues a
+    ``Query(costs=swap_candidates)`` against the warm unified engine per
+    greedy step (every candidate's Φ costs patch into the plan's cost
+    block as a runtime input) — zero plan recompiles after the first step,
+    bit-identical objectives (and therefore final mapping) to
+    ``cost_eval="rebuild"``, which recompiles K plans per step (the PR-2
+    formulation, kept as the reference).  ``stats`` (a dict, if given) is
+    filled with the loop's cost accounting.
     """
-    from repro.sweep import ScenarioBatch, SweepEngine, compile_plan
+    from repro.sweep import ScenarioBatch, compile_plan
+    from repro.sweep.api import Engine, ExecPolicy, Query
 
     P = g.nranks
     pi = np.arange(P) if pi0 is None else pi0.copy()
@@ -245,8 +247,9 @@ def _place_batched(g, phi, params, pi0, max_iters, verbose, scenario_points,
         try:
             base_plan = compile_plan(g)
             st["plan_compiles"] += 1
-            eng = SweepEngine(compiled=base_plan, backend=backend,
-                              cache=cache)
+            eng = Engine(base_plan,
+                         policy=(policy if policy is not None else
+                                 ExecPolicy(backend=backend, cache=cache)))
         except Exception:
             if engine == "sweep":
                 raise
@@ -292,8 +295,9 @@ def _place_batched(g, phi, params, pi0, max_iters, verbose, scenario_points,
                 # zero-recompile path: K candidate cost blocks through the
                 # once-compiled plan (structure unbatched inside the vmap;
                 # raw extras → the engine patches only its backend's view)
-                res = eng.run(scen_batch, costs=np.stack(extras),
-                              compute_lam=False)
+                res = eng.run(Query(scenarios=scen_batch,
+                                    costs=np.stack(extras),
+                                    outputs=("T",)))
                 fs = res.T.mean(axis=1)
                 st["engine_calls"] += 1
             elif cost_eval == "rebuild":
@@ -334,7 +338,8 @@ def place(g: ExecutionGraph, phi: ArchTopology, params: Optional[LogGPS] = None,
           scenarios: Optional[Sequence[LogGPS]] = None,
           topk: int = 1, backend: str = "segment",
           cost_eval: str = "patch", cache=None,
-          stats: Optional[dict] = None) -> tuple[np.ndarray, list]:
+          stats: Optional[dict] = None,
+          policy=None) -> tuple[np.ndarray, list]:
     """Algorithm 3. Returns (mapping, history of objective values).
 
     The graph should be built with zero link costs (L=(0,), G=(0,)) so that
@@ -357,6 +362,11 @@ def place(g: ExecutionGraph, phi: ArchTopology, params: Optional[LogGPS] = None,
     memoizes candidate evaluations across repeated queries, and ``stats``
     (a dict) receives the loop's cost accounting — plan_compiles,
     engine_calls, candidates, steps.
+
+    ``policy`` (a :class:`repro.sweep.api.ExecPolicy`) supersedes the
+    loose ``backend``/``cache`` kwargs when given — the greedy loop's
+    candidate queries then execute under it wholesale (backend, device
+    sharding over the candidate axis, cache).
     """
     if engine not in ("auto", "scalar", "sweep"):
         raise ValueError(f"engine must be 'auto', 'scalar' or 'sweep', "
@@ -364,6 +374,9 @@ def place(g: ExecutionGraph, phi: ArchTopology, params: Optional[LogGPS] = None,
     if cost_eval not in ("patch", "rebuild"):
         raise ValueError(f"cost_eval must be 'patch' or 'rebuild', "
                          f"got {cost_eval!r}")
+    if policy is not None:
+        backend = policy.backend
+        cache = policy.cache
     if backend not in ("segment", "pallas"):
         # validate eagerly: under engine='auto' a typo would otherwise be
         # swallowed by the per-step scalar fallback and silently ignore
@@ -377,7 +390,8 @@ def place(g: ExecutionGraph, phi: ArchTopology, params: Optional[LogGPS] = None,
         return _place_scalar(g, phi, params, pi0, max_iters, verbose)
     return _place_batched(g, phi, params, pi0, max_iters, verbose,
                           scenarios, topk, engine=engine, backend=backend,
-                          cost_eval=cost_eval, cache=cache, stats=stats)
+                          cost_eval=cost_eval, cache=cache, stats=stats,
+                          policy=policy)
 
 
 def latency_points(params: LogGPS, deltas: Sequence[float],

@@ -18,6 +18,13 @@ the default ``"auto"`` falls back to scalar if JAX is unavailable
 (silently — that is an expected install state) and warns once before
 falling back on any *other* engine failure, so real sweep bugs never
 vanish into a slow-but-correct scalar loop.
+
+How the batched path executes is one object, not loose kwargs: pass
+``policy=`` (a :class:`repro.sweep.api.ExecPolicy`) to pick the backend,
+device sharding, λ mode (``lam="fd"`` finite-difference sensitivities at
+values-program compile cost) and result cache — the same policy object the
+sweep engine and the analysis service take.  Without a policy the memoized
+default engine is used (one compiled engine per (graph, params) content).
 """
 
 from __future__ import annotations
@@ -95,7 +102,7 @@ def _warn_sweep_fallback(where: str, err: Exception) -> None:
 
 
 def _sweep_engine_or_fallback(g: ExecutionGraph, params: LogGPS,
-                              engine: str, where: str):
+                              engine: str, where: str, policy=None):
     """Resolve the batched engine for one dispatch site.
 
     ImportError (JAX not installed) is an expected state → quiet ``None``.
@@ -104,11 +111,16 @@ def _sweep_engine_or_fallback(g: ExecutionGraph, params: LogGPS,
     ``engine="sweep"``, warn once and fall back under ``"auto"``.
     """
     try:
-        return _sweep_engine(g, params)
+        return _sweep_engine(g, params, policy)
     except ImportError:
+        if policy is not None:
+            # an explicit policy is an explicit ask for the batched path —
+            # honoring it with a silent scalar loop would discard the
+            # backend/λ-mode contract the caller pinned
+            raise
         return None
     except Exception as e:  # noqa: BLE001 — deliberate auto-fallback
-        if engine == "sweep":
+        if engine == "sweep" or policy is not None:
             raise
         _warn_sweep_fallback(where, e)
         return None
@@ -146,12 +158,17 @@ def _params_memo_key(g: ExecutionGraph, params: LogGPS) -> tuple:
             cls_key)
 
 
-def _sweep_engine(g: ExecutionGraph, params: LogGPS):
-    """Build (or reuse) a batched SweepEngine; None if JAX is unavailable.
+def _sweep_engine(g: ExecutionGraph, params: LogGPS, policy=None):
+    """Build (or reuse) a batched engine; None if JAX is unavailable.
 
     Compiled engines are memoized on the graph object per parameter set
-    (content-keyed, see :func:`_params_memo_key`), so repeated sensitivity
-    calls on one graph pay compile_plan once.
+    (content-keyed, see :func:`_params_memo_key`) and per execution
+    policy, so repeated sensitivity calls on one graph pay compile_plan
+    once.  With ``policy=None`` the engine is the legacy ``SweepEngine``
+    shim (its DeprecationWarning suppressed — this module's own surface is
+    the ``engine=``/``policy=`` kwargs, not the shim); an explicit
+    :class:`repro.sweep.api.ExecPolicy` builds the unified
+    :class:`repro.sweep.api.Engine` directly.
     """
     try:
         from repro.sweep import SweepEngine
@@ -161,34 +178,46 @@ def _sweep_engine(g: ExecutionGraph, params: LogGPS):
     if memo is None:
         memo = {}
         object.__setattr__(g, "_sweep_engines", memo)
-    key = _params_memo_key(g, params)
+    key = _params_memo_key(g, params) \
+        + (None if policy is None else policy.key(),)
     eng = memo.get(key)
     if eng is None:
-        eng = memo[key] = SweepEngine(g, params)
+        if policy is None:
+            import warnings
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", DeprecationWarning)
+                eng = SweepEngine(g, params)
+        else:
+            from repro.sweep.api import Engine
+            eng = Engine(g, params=params, policy=policy)
+        memo[key] = eng
     return eng
 
 
 def latency_curve(g: ExecutionGraph, params: LogGPS, deltas: Sequence[float],
                   cls: int = 0, plan: Optional[dag.LevelPlan] = None,
-                  engine: str = "auto") -> LatencyCurve:
+                  engine: str = "auto", policy=None) -> LatencyCurve:
     _check_engine_arg(engine)
     deltas_arr = np.asarray(deltas, dtype=np.float64)
-    want_sweep = (engine == "sweep"
+    want_sweep = (engine == "sweep" or policy is not None
                   or (engine == "auto" and deltas_arr.size >= SWEEP_MIN_POINTS))
     if want_sweep:
         try:
             from repro.sweep import latency_grid
         except ImportError:
+            if policy is not None:
+                raise                  # explicit policy: never silent scalar
             latency_grid = None              # jax unavailable: quiet scalar path
         eng = (None if latency_grid is None else
-               _sweep_engine_or_fallback(g, params, engine, "latency_curve"))
+               _sweep_engine_or_fallback(g, params, engine, "latency_curve",
+                                         policy))
         if eng is not None:
             try:
                 res = eng.run(latency_grid(params, deltas_arr, cls=cls))
                 return LatencyCurve(deltas=deltas_arr, T=res.T,
                                     lam=res.lam[:, cls], rho=res.rho[:, cls])
             except Exception as e:
-                if engine == "sweep":
+                if engine == "sweep" or policy is not None:
                     raise
                 _warn_sweep_fallback("latency_curve", e)
     plan = plan or dag.LevelPlan(g)
@@ -205,7 +234,7 @@ def latency_curve(g: ExecutionGraph, params: LogGPS, deltas: Sequence[float],
 def latency_tolerance(g: ExecutionGraph, params: LogGPS,
                       degradations: Sequence[float] = (0.01, 0.02, 0.05),
                       cls: int = 0, plan: Optional[dag.LevelPlan] = None,
-                      engine: str = "auto") -> dict:
+                      engine: str = "auto", policy=None) -> dict:
     """The Fig 1 colored zones: ΔL tolerable before each p% degradation.
 
     With ≥ :data:`SWEEP_MIN_DEGRADATIONS` levels the bisections run in
@@ -214,20 +243,23 @@ def latency_tolerance(g: ExecutionGraph, params: LogGPS,
     """
     _check_engine_arg(engine)
     degr = list(degradations)
-    want_sweep = (engine == "sweep"
+    want_sweep = (engine == "sweep" or policy is not None
                   or (engine == "auto" and len(degr) >= SWEEP_MIN_DEGRADATIONS))
     if want_sweep:
         try:
             from repro.sweep import tolerance_batched
         except ImportError:
+            if policy is not None:
+                raise                  # explicit policy: never silent scalar
             tolerance_batched = None              # jax unavailable: quiet scalar path
         eng = (None if tolerance_batched is None else
-               _sweep_engine_or_fallback(g, params, engine, "latency_tolerance"))
+               _sweep_engine_or_fallback(g, params, engine,
+                                         "latency_tolerance", policy))
         if eng is not None:
             try:
                 return tolerance_batched(eng, params, degr, cls=cls)
             except Exception as e:
-                if engine == "sweep":
+                if engine == "sweep" or policy is not None:
                     raise
                 _warn_sweep_fallback("latency_tolerance", e)
     plan = plan or dag.LevelPlan(g)
@@ -238,7 +270,7 @@ def latency_tolerance(g: ExecutionGraph, params: LogGPS,
 def bandwidth_curve(g: ExecutionGraph, params: LogGPS,
                     gscales: Sequence[float], cls: int = 0,
                     plan: Optional[dag.LevelPlan] = None,
-                    engine: str = "auto") -> LatencyCurve:
+                    engine: str = "auto", policy=None) -> LatencyCurve:
     """T(γ·G) over bandwidth scales (γ > 1 = slower links on class ``cls``).
 
     Both paths resolve per-edge gap shares through
@@ -252,22 +284,25 @@ def bandwidth_curve(g: ExecutionGraph, params: LogGPS,
     from .graph import edge_gap_shares
     _check_engine_arg(engine)
     gs = np.asarray(gscales, dtype=np.float64)
-    want_sweep = (engine == "sweep"
+    want_sweep = (engine == "sweep" or policy is not None
                   or (engine == "auto" and gs.size >= SWEEP_MIN_POINTS))
     if want_sweep:
         try:
             from repro.sweep import bandwidth_grid
         except ImportError:
+            if policy is not None:
+                raise                  # explicit policy: never silent scalar
             bandwidth_grid = None              # jax unavailable: quiet scalar path
         eng = (None if bandwidth_grid is None else
-               _sweep_engine_or_fallback(g, params, engine, "bandwidth_curve"))
+               _sweep_engine_or_fallback(g, params, engine, "bandwidth_curve",
+                                         policy))
         if eng is not None:
             try:
                 res = eng.run(bandwidth_grid(params, gs, cls=cls))
                 return LatencyCurve(deltas=gs, T=res.T,
                                     lam=res.lam[:, cls], rho=res.rho[:, cls])
             except Exception as e:
-                if engine == "sweep":
+                if engine == "sweep" or policy is not None:
                     raise
                 _warn_sweep_fallback("bandwidth_curve", e)
     plan = plan or dag.LevelPlan(g)
@@ -286,25 +321,28 @@ def bandwidth_curve(g: ExecutionGraph, params: LogGPS,
 def critical_latencies(g: ExecutionGraph, params: LogGPS, L_min: float,
                        L_max: float, cls: int = 0,
                        plan: Optional[dag.LevelPlan] = None,
-                       engine: str = "auto") -> list:
+                       engine: str = "auto", policy=None) -> list:
     """Algorithm 2's kink search; big graphs probe whole interval frontiers
     per batched sweep call instead of one scalar forward per interval."""
     _check_engine_arg(engine)
-    want_sweep = (engine == "sweep"
+    want_sweep = (engine == "sweep" or policy is not None
                   or (engine == "auto"
                       and g.num_edges >= SWEEP_MIN_EDGES_BREAKPOINTS))
     if want_sweep:
         try:
             from repro.sweep import breakpoints_batched
         except ImportError:
+            if policy is not None:
+                raise                  # explicit policy: never silent scalar
             breakpoints_batched = None              # jax unavailable: quiet scalar path
         eng = (None if breakpoints_batched is None else
-               _sweep_engine_or_fallback(g, params, engine, "critical_latencies"))
+               _sweep_engine_or_fallback(g, params, engine,
+                                         "critical_latencies", policy))
         if eng is not None:
             try:
                 return breakpoints_batched(eng, params, L_min, L_max, cls=cls)
             except Exception as e:
-                if engine == "sweep":
+                if engine == "sweep" or policy is not None:
                     raise
                 _warn_sweep_fallback("critical_latencies", e)
     return dag.breakpoints(g, params, L_min, L_max, cls=cls, plan=plan)

@@ -23,14 +23,34 @@ Query kinds: ``curve`` (T/λ/ρ over ΔL), ``bandwidth`` (T over γ·G),
 a shared grid — one compiled call per shape bucket), ``placement``
 (Algorithm-3 rank-mapping suggestion on a two-tier Φ), ``stats``.
 
-CLI (mirrors the serve-loop structure of ``launch.serve``): one-shot
+Execution policy rides each request as one ``policy`` block (parsed into a
+:class:`repro.sweep.api.ExecPolicy` — unknown keys are rejected with the
+offending names, so a ``"bakend"`` typo fails loudly instead of silently
+running under defaults)::
+
+    {"kind": "curve", "policy": {"backend": "pallas", "lam": "fd"}}
+
+The legacy top-level ``backend``/``shard`` fields are still honored (they
+overlay the policy block).
+
+CLI (a JSON-lines request/response protocol): one-shot
 
     PYTHONPATH=src python -m repro.launch.analysis --demo --query rank
 
-or a JSON-lines serve loop — one request object per stdin line, one
-response object per stdout line:
+a stdin/stdout serve loop — one request object per line, one response
+object per line:
 
     PYTHONPATH=src python -m repro.launch.analysis --demo --serve
+
+or the same protocol over real transport — a TCP or UNIX-domain socket
+serving concurrent connections against ONE warm service (all connections
+share the compiled engines and the result cache):
+
+    PYTHONPATH=src python -m repro.launch.analysis --demo \\
+        --serve-socket 127.0.0.1:0        # or a filesystem path (UNIX)
+
+(The model-serving driver in ``launch.serve`` is unrelated — that is the
+prefill/decode loop for traced architectures.)
 """
 
 from __future__ import annotations
@@ -47,9 +67,9 @@ import numpy as np
 from repro.core import placement as placement_mod
 from repro.core.graph import ExecutionGraph
 from repro.core.loggps import LogGPS
-from repro.sweep import (GraphVariant, MultiSweepEngine, SweepCache,
-                         SweepEngine, group_plans, latency_grid,
-                         bandwidth_grid, pack_plans, tolerance_batched)
+from repro.sweep import (Engine, ExecPolicy, GraphVariant,  # noqa: F401
+                         SweepCache, group_plans, latency_grid,
+                         bandwidth_grid, tolerance_batched)
 
 
 @dataclasses.dataclass
@@ -65,8 +85,9 @@ class AnalysisRequest:
     reduce: str = "mean"                        # rank objective: mean|max|final
     topo: Optional[dict] = None                 # placement Φ spec (two_tier kw)
     topk: int = 1                               # placement candidate width
-    backend: Optional[str] = None               # per-query segment|pallas
-    shard: Optional[int] = None                 # device count (None = off)
+    policy: Optional[dict] = None               # ExecPolicy block (wire fields)
+    backend: Optional[str] = None               # legacy: overlays policy
+    shard: Optional[int] = None                 # legacy: overlays policy
 
     @staticmethod
     def from_json(line: str) -> "AnalysisRequest":
@@ -75,7 +96,16 @@ class AnalysisRequest:
         bad = set(d) - known
         if bad:
             raise ValueError(f"unknown request fields: {sorted(bad)}")
-        return AnalysisRequest(**d)
+        req = AnalysisRequest(**d)
+        if req.policy is not None:
+            # validate the nested block at the protocol edge: a typo like
+            # {"policy": {"bakend": ...}} must come back as a bad-request
+            # error naming the field, never execute under defaults
+            if not isinstance(req.policy, dict):
+                raise ValueError("policy must be an object of ExecPolicy "
+                                 f"fields, got {type(req.policy).__name__}")
+            ExecPolicy.from_dict(req.policy)
+        return req
 
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self))
@@ -114,18 +144,36 @@ def _jsonable(x):
 
 
 class AnalysisService:
-    """Registered variants + warm compiled plans behind a query API."""
+    """Registered variants + warm compiled plans behind a query API.
+
+    All engines are unified :class:`repro.sweep.api.Engine` instances
+    executing under one service-level :class:`~repro.sweep.api.ExecPolicy`
+    (shared result cache included); per-request ``policy`` blocks overlay
+    it field-by-field *once*, at parse time — no kwarg threading.
+    """
 
     def __init__(self, backend: str = "segment",
                  cache: Optional[SweepCache] = None,
-                 default_deltas: Sequence[float] = (0.0, 25.0, 50.0, 100.0)):
-        self.backend = backend
+                 default_deltas: Sequence[float] = (0.0, 25.0, 50.0, 100.0),
+                 policy: Optional[ExecPolicy] = None):
+        from repro.sweep import DEFAULT_CACHE
+        if cache is None and policy is not None \
+                and policy.cache is not None \
+                and policy.cache is not DEFAULT_CACHE:
+            # a policy carrying an explicit cache object IS the caller's
+            # cache choice (e.g. sharing one cache across services) —
+            # don't shadow it with a fresh private one
+            cache = policy.cache
         self.cache = cache if cache is not None else SweepCache(capacity=256)
+        self.policy = (policy if policy is not None
+                       else ExecPolicy(backend=backend)).replace(
+                           cache=self.cache)
+        self.backend = self.policy.backend
         self.default_deltas = tuple(default_deltas)
         self._variants: dict = {}               # name → GraphVariant (ordered)
-        self._engines: dict = {}                # name → SweepEngine
+        self._engines: dict = {}                # name → Engine (single graph)
         self._groups: Optional[list] = None     # cached bucket index groups
-        self._multi: dict = {}                  # group key → MultiSweepEngine
+        self._multi: dict = {}                  # group key → Engine (G axis)
 
     # -- registration --------------------------------------------------------
     def register(self, variant: GraphVariant) -> str:
@@ -155,28 +203,41 @@ class AnalysisService:
                              f"(have {list(self._variants)})")
         return self._variants[name]
 
+    def _policy(self, req: AnalysisRequest) -> ExecPolicy:
+        """Resolve one request's effective ExecPolicy: the service policy,
+        overlaid by the request's ``policy`` block (unknown keys rejected),
+        overlaid by the legacy top-level ``backend``/``shard`` fields."""
+        pol = self.policy
+        if req.policy is not None:
+            pol = ExecPolicy.from_dict(req.policy, base=pol)
+        if req.backend is not None:
+            pol = pol.replace(backend=req.backend)
+        if req.shard is not None:
+            pol = pol.replace(shard=req.shard)
+        return pol
+
     # -- warm plans ----------------------------------------------------------
-    def engine(self, name: Optional[str] = None) -> SweepEngine:
+    def engine(self, name: Optional[str] = None) -> Engine:
         """Per-variant warm engine (compiled on first use, then cached)."""
         v = self._variant(name)
         eng = self._engines.get(v.name)
         if eng is None:
-            eng = self._engines[v.name] = SweepEngine(
-                v.graph, v.params, backend=self.backend, cache=self.cache)
+            eng = self._engines[v.name] = Engine(v.graph, params=v.params,
+                                                 policy=self.policy)
         return eng
 
     def _bucket_engines(self) -> list:
-        """[(names, MultiSweepEngine)] — one packed engine per shape bucket."""
+        """[(names, Engine)] — one packed graph-axis engine per shape
+        bucket."""
         if self._groups is None:
             names = list(self._variants)
-            plans = [self.engine(n).compiled for n in names]
+            plans = [self.engine(n).plan for n in names]
             self._groups = group_plans(plans)
             self._multi = {}
             for gi, idx in enumerate(self._groups):
-                self._multi[gi] = MultiSweepEngine(
-                    multi=pack_plans([plans[i] for i in idx]),
-                    names=[names[i] for i in idx], backend=self.backend,
-                    cache=self.cache)
+                self._multi[gi] = Engine(
+                    [plans[i] for i in idx],
+                    names=[names[i] for i in idx], policy=self.policy)
         names = list(self._variants)
         return [([names[i] for i in idx], self._multi[gi])
                 for gi, idx in enumerate(self._groups)]
@@ -208,15 +269,15 @@ class AnalysisService:
 
     # -- queries -------------------------------------------------------------
     def curve(self, req: AnalysisRequest) -> dict:
-        """T/λ/ρ over a ΔL grid.  ``req.backend`` picks the compiled path
-        per query (λ is first-class on both segment and pallas now);
-        ``req.shard`` fans the scenario axis across local devices."""
+        """T/λ/ρ over a ΔL grid.  The request's policy block picks the
+        compiled path per query (backend, λ mode, scenario-axis device
+        fan-out) — λ is first-class on both segment and pallas."""
         v = self._variant(req.variant)
         deltas = np.asarray(req.deltas if req.deltas is not None
                             else self.default_deltas, dtype=np.float64)
         res = self.engine(v.name).run(latency_grid(v.params, deltas,
                                                    cls=req.cls),
-                                      backend=req.backend, shard=req.shard)
+                                      policy=self._policy(req))
         return {"variant": v.name, "cls": req.cls, "deltas": deltas,
                 "backend": res.backend,
                 "T": res.T, "lam": res.lam[:, req.cls],
@@ -230,8 +291,8 @@ class AnalysisService:
         # λ-backtrace program
         res = self.engine(v.name).run(bandwidth_grid(v.params, gs,
                                                      cls=req.cls),
-                                      compute_lam=False,
-                                      backend=req.backend, shard=req.shard)
+                                      outputs=("T",),
+                                      policy=self._policy(req))
         return {"variant": v.name, "cls": req.cls, "gscales": gs,
                 "backend": res.backend,
                 "T": res.T, "from_cache": res.from_cache}
@@ -241,7 +302,8 @@ class AnalysisService:
         degr = tuple(req.degradations if req.degradations is not None
                      else (0.01, 0.02, 0.05))
         tol = tolerance_batched(self.engine(v.name), v.params, degr,
-                                cls=req.cls, backend=req.backend)
+                                cls=req.cls,
+                                backend=self._policy(req).backend)
         return {"variant": v.name, "cls": req.cls, "tolerance": tol}
 
     def rank(self, req: AnalysisRequest) -> dict:
@@ -261,15 +323,15 @@ class AnalysisService:
                 "a ranking must sweep every variant on the same class")
         scored: list = []
         calls = 0
+        pol = self._policy(req)
         for names, meng in self._bucket_engines():
             batches = [latency_grid(self._variants[n].params, deltas,
                                     cls=req.cls)
                        for n in names]
             before = meng.calls
-            # shard rides the packed MultiPlan's graph axis (the natural
+            # shard rides the packed graph axis by default (the natural
             # shard_map mesh axis): big variant studies split across devices
-            res = meng.run(batches, compute_lam=False,
-                           backend=req.backend, shard=req.shard)
+            res = meng.run(batches, outputs=("T",), policy=pol)
             calls += meng.calls - before
             scored.extend(res.rank(reduce=req.reduce))
         scored.sort(key=lambda kv: kv[1])
@@ -307,8 +369,8 @@ class AnalysisService:
         stats: dict = {}
         pi, hist = placement_mod.place(v.graph, phi, params=v.params,
                                        scenarios=pts, topk=req.topk,
-                                       backend=req.backend or self.backend,
-                                       cache=self.cache, stats=stats)
+                                       policy=self._policy(req),
+                                       stats=stats)
         return {"variant": v.name, "mapping": pi, "history": hist,
                 "improvement": (1.0 - hist[-1] / hist[0]) if hist[0] else 0.0,
                 "stats": stats}
@@ -356,6 +418,70 @@ class AnalysisService:
         return self.handle(req).to_json()
 
 
+# -- socket transport ---------------------------------------------------------
+
+def serve_socket(svc: AnalysisService, address: str, poll_s: float = 0.5):
+    """Serve the JSON-lines protocol over a TCP or UNIX-domain socket.
+
+    ``address``: ``"host:port"`` (TCP; port 0 picks a free one) or a
+    filesystem path (UNIX socket).  Connections are handled on threads,
+    but every request executes under one lock against the ONE warm
+    service — all clients share the compiled engines and the result
+    cache, so a curve another client already asked for is a hash lookup.
+    (The engines drive a single jit dispatch per query; serializing them
+    trades no real parallelism for a service that needs no thread-safe
+    engine state.)
+
+    Prints ``[analysis] listening on <bound-address>`` to stderr once the
+    socket is bound (the round-trip test and shell scripts parse it — with
+    port 0 the chosen port is only known here).  Runs until interrupted.
+    """
+    import socketserver
+    import threading
+
+    lock = threading.Lock()
+
+    class Handler(socketserver.StreamRequestHandler):
+        def handle(self):
+            for raw in self.rfile:
+                line = raw.decode("utf-8", "replace").strip()
+                if not line:
+                    continue
+                with lock:
+                    out = svc.handle_json(line)
+                self.wfile.write(out.encode("utf-8") + b"\n")
+                self.wfile.flush()
+
+    if ":" in address and "/" not in address:
+        host, port = address.rsplit(":", 1)
+
+        class Server(socketserver.ThreadingTCPServer):
+            allow_reuse_address = True
+            daemon_threads = True
+
+        srv = Server((host or "127.0.0.1", int(port)), Handler)
+        bound = "%s:%d" % srv.server_address[:2]
+    else:
+        if not hasattr(socketserver, "ThreadingUnixStreamServer"):
+            raise SystemExit("UNIX-domain sockets are not available on "
+                             "this platform; use host:port")
+        import os
+
+        class Server(socketserver.ThreadingUnixStreamServer):  # type: ignore[name-defined]
+            daemon_threads = True
+
+        if os.path.exists(address):
+            os.unlink(address)
+        srv = Server(address, Handler)
+        bound = address
+    print(f"[analysis] listening on {bound}", file=sys.stderr, flush=True)
+    try:
+        srv.serve_forever(poll_interval=poll_s)
+    finally:
+        srv.server_close()
+    return srv
+
+
 # -- CLI ----------------------------------------------------------------------
 
 def _demo_service(backend: str) -> AnalysisService:
@@ -383,6 +509,11 @@ def main(argv=None):
                     choices=("segment", "pallas"))
     ap.add_argument("--serve", action="store_true",
                     help="JSON-lines request/response loop on stdin/stdout")
+    ap.add_argument("--serve-socket", default=None, metavar="ADDR",
+                    help="serve the JSON-lines protocol on a socket: "
+                         "host:port (TCP, port 0 = pick free) or a "
+                         "filesystem path (UNIX); connections share one "
+                         "warm service + result cache")
     ap.add_argument("--query", default=None,
                     help="one-shot query kind (curve/tolerance/rank/...)")
     ap.add_argument("--variant", default=None)
@@ -404,6 +535,10 @@ def main(argv=None):
     print(f"[analysis] warmed {info['variants']} variants into "
           f"{info['buckets']} shape bucket(s) in {time.time() - t0:.2f}s",
           file=sys.stderr)
+
+    if args.serve_socket:
+        serve_socket(svc, args.serve_socket)
+        return svc
 
     if args.serve:
         print("[analysis] serving; one JSON request per line "

@@ -2,36 +2,43 @@
 
 LLAMP's workhorse loop is "re-evaluate execution graphs under many LogGPS
 parameter points" (latency curves, tolerance bisections, the Algorithm-2
-breakpoint search, collective/topology variant studies).  The scalar path
-pays a full Python/numpy level walk per point; this subsystem compiles
-graphs ONCE into padded dense per-level tensors and evaluates whole grids
-in single jit+vmap max-plus forward passes — batching over scenarios, and
-over *(graphs × scenarios)* for variant studies:
+breakpoint search, collective/topology variant studies, placement
+candidate evaluation).  The scalar path pays a full Python/numpy level
+walk per point; this subsystem compiles graphs ONCE into padded dense
+per-level tensors and evaluates whole grids in single jit+vmap max-plus
+forward passes.
+
+**One engine, three axes.**  Every sweep is one :class:`~repro.sweep.api.
+Engine` evaluating a :class:`~repro.sweep.api.Query` whose populated batch
+axes — graphs [G] × candidate cost blocks [K] × scenarios [S] — compose
+freely, under an :class:`~repro.sweep.api.ExecPolicy` (backend, device
+sharding over any populated axis, exact-vs-finite-difference λ, cache):
 
     from repro import sweep
 
     # one graph × many scenarios
-    eng  = sweep.SweepEngine(graph, params)          # compile once
+    eng  = sweep.Engine(graph, params=params)        # compile once
     grid = sweep.latency_grid(params, deltas)        # or cartesian_grid(...)
     res  = eng.run(grid)                             # T/λ/ρ for every scenario
 
-    # many graphs × many scenarios (one compiled program per shape bucket)
-    variants = sweep.collective_variants(factory, algos, params)
-    out = sweep.sweep_variants(variants, lambda v: grid)   # {name: SweepResult}
-
-    meng = sweep.MultiSweepEngine.from_variants(variants)  # explicit control
-    multi = meng.run(grid)                                 # T[G, S]; .rank()
+    # graphs × candidate costs × scenarios, sharded over any axis
+    eng  = sweep.Engine([plan_a, plan_b],
+                        policy=sweep.ExecPolicy(shard=True, shard_axis="K"))
+    res  = eng.run(sweep.Query(scenarios=grid, costs=[extras_a, extras_b]))
+    res.T.shape                                      # [G, K, S]
 
 Public surface (re-exported here):
-    SweepEngine / SweepResult         — one graph, S scenarios per call
-    MultiSweepEngine / MultiSweepResult — G packed graphs × S scenarios per call
+    Engine / Query / ExecPolicy / Result — the unified axis-oriented API
+                                        (repro.sweep.api)
+    SweepEngine / MultiSweepEngine    — DEPRECATED shims over Engine
+                                        (bit-identical; DeprecationWarning)
+    SweepResult / MultiSweepResult / CostSweepResult — legacy result shapes
     CompiledPlan / compile_plan       — graph → bucketed rectangular tensors
                                         (immutable structure + patchable
                                         cost block, see COST_FIELDS)
     CostBatch / CompiledPlan.patch_costs — K candidate cost blocks for one
-                                        plan structure; run(costs=...) adds
-                                        the candidate axis with zero
-                                        recompiles (CostSweepResult [K, S])
+                                        plan structure; the Query costs axis
+                                        (zero recompiles)
     MultiPlan / pack_plans / group_plans — pad plans to a common envelope and
                                         stack them on a leading graph axis
     ScenarioBatch + grid builders     — latency_grid / bandwidth_grid /
@@ -45,19 +52,23 @@ Public surface (re-exported here):
                                         (canonical-bytes keys, process-stable)
 
 Results match ``core.dag`` exactly (same argmax tie-breaks, float64) — a
-graph packed into a MultiPlan returns bit-identical T/λ to its solo run —
-and λ matches the explicit LP's reduced costs; ``core.sensitivity``
-dispatches here automatically for multi-point sweeps.  The Pallas
-``maxplus`` kernel is the inner-scatter backend (``backend="pallas"``;
-graphs ride the kernel's outer grid axis in the batched variant) and
-serves λ/ρ natively via its argmax-emitting variant — no segment
-redispatch.  ``run(shard=...)`` splits the scenario axis (single graph)
-or the MultiPlan graph axis (packed) across local devices with
-``shard_map``, bit-equal to single-device runs.
+graph packed on the G axis returns bit-identical T/λ to its solo run, and
+a cost block patched on the K axis returns bit-identical results to a
+plan rebuilt with those costs — and λ matches the explicit LP's reduced
+costs; ``core.sensitivity`` dispatches here automatically for multi-point
+sweeps (``policy=`` forwards an ExecPolicy).  The Pallas ``maxplus``
+kernel is the inner-scatter backend (``ExecPolicy(backend="pallas")``;
+graphs ride the kernel's outer grid axis) and serves λ/ρ natively via its
+argmax-emitting variant.  ``ExecPolicy(lam="fd")`` trades the bit-exact λ
+backtrace for finite-difference λ over an (nc+1)× expanded values grid —
+the same compiled values program, compile ratio ~1.0.
 ``launch.analysis.AnalysisService`` serves what-if queries over warm
-engines built from these pieces (per-request backend/shard).
+engines built from these pieces (per-request ``policy`` blocks), over
+stdin/stdout JSON lines or a TCP/UNIX socket.
 """
 
+from .api import (Engine, ExecPolicy, Query, Result,  # noqa: F401
+                  run)
 from .cache import DEFAULT_CACHE, SweepCache, canonical_bytes  # noqa: F401
 from .compile import (COST_FIELDS, CompiledPlan, CostBatch,  # noqa: F401
                       MultiPlan, compile_plan, group_plans, pack_plans,

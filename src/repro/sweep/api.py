@@ -1,0 +1,779 @@
+"""Unified axis-oriented sweep API: one :class:`Query`, one
+:class:`ExecPolicy`, one :class:`Engine`.
+
+LLAMP's core operation is "evaluate execution graphs under many LogGPS
+scenarios".  Four PRs of growth split that one idea across two engine
+classes with diverging feature matrices and five spellings of execution
+policy; this module folds them back into three objects:
+
+:class:`Query`
+    *What* to evaluate — the populated batch axes.  ``graphs`` [G] (one
+    plan, a sequence of plans, or a packed ``MultiPlan``), ``costs`` [K]
+    (candidate cost blocks patched into warm plan structure),
+    ``scenarios`` [S] (LogGPS parameter rows), and the requested
+    ``outputs`` ⊆ {"T", "lam", "rho"}.
+
+:class:`ExecPolicy`
+    *How* to evaluate it — backend ("segment"/"pallas"), device sharding
+    (``shard`` count + ``shard_axis`` ∈ {"auto", "G", "K", "S"}), λ mode
+    (``"exact"`` backtrace or ``"fd"`` finite-difference over an expanded
+    values grid), result cache, dtype contract.
+
+:class:`Engine`
+    One evaluator.  The jitted core treats G/K/S as ordinary batch axes:
+    the vmap/shard_map composition is derived from which axes the query
+    populates (``repro.sweep.engine._get_forward``), not from which class
+    was instantiated — so a G×K×S query (per-graph candidate axes on a
+    packed MultiPlan, sharded over any axis) runs through the same code
+    path as a plain scenario sweep, bit-identically (segment) to the
+    equivalent solo/rebuild runs.
+
+    >>> eng = Engine([plan_a, plan_b], policy=ExecPolicy(backend="segment"))
+    >>> res = eng.run(Query(scenarios=grid, costs=[extras_a, extras_b]))
+    >>> res.T.shape                     # [G, K, S]
+
+The legacy ``SweepEngine`` / ``MultiSweepEngine`` classes are thin
+deprecation-warned shims over this engine (bit-identical results, verified
+by ``tests/test_conformance.py``); ``core.sensitivity``,
+``core.placement.place`` and ``launch.analysis`` all build a
+``Query`` + ``ExecPolicy`` instead of threading loose kwargs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+from . import engine as _eng
+from .cache import DEFAULT_CACHE, SweepCache, query_key
+from .compile import (CompiledPlan, CostBatch, MultiPlan, _bucket,
+                      compile_plan, pack_plans)
+from .scenarios import ScenarioBatch
+
+#: ExecPolicy fields that may arrive over the wire (JSON ``policy`` blocks
+#: of ``launch.analysis`` requests).  ``cache`` deliberately excluded — a
+#: result cache is a process-local object, never serialized state.
+POLICY_WIRE_FIELDS = ("backend", "shard", "shard_axis", "lam", "fd_eps",
+                      "dtype")
+
+_OUTPUTS = ("T", "lam", "rho")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecPolicy:
+    """How a query executes — everything that is *not* the workload.
+
+    ``backend``
+        "segment" (pure-jnp float64, the bit-exact reference) or "pallas"
+        (the (max,+) TPU kernel, float32 accumulators, ≤1e-5 relative).
+    ``shard`` / ``shard_axis``
+        Device fan-out: ``shard`` is None/False (off), True/"auto" (all
+        local devices) or an int cap; ``shard_axis`` picks which populated
+        batch axis splits across the mesh — "G" (graphs), "K" (candidate
+        cost blocks), "S" (scenarios), or "auto" (G when populated, else
+        S).  Per-element arithmetic is unchanged, so sharded results are
+        bit-identical to single-device runs.
+    ``lam``
+        "exact" — the argmax critical-path backtrace (bit-compatible with
+        the scalar engine, compiles the λ-bearing program at ~2.5-3× the
+        values-only cost on XLA:CPU).  "fd" — finite-difference λ from an
+        (nc+1)× expanded *values* grid: λ_c = (T(L + h·e_c) − T(L))/h with
+        h = ``fd_eps``.  T is piecewise linear in L and λ is its exact
+        right-derivative, so away from breakpoints fd λ equals exact λ to
+        float round-off (~ulp(T)/h) while only ever compiling the cheap
+        values program (compile ratio ~1.0).  At a breakpoint the two may
+        legitimately differ (exact λ applies the max-slope tie-break over
+        *all* classes; fd probes one class at a time).
+    ``fd_eps``
+        The fd step in µs.  Must stay inside the current linear segment;
+        the default 2⁻¹⁰ ≈ 1e-3 µs is far below any realistic breakpoint
+        spacing.  On the float32 pallas backend, fd λ noise is
+        ~ulp(T)/fd_eps — prefer the segment backend for fd sensitivities.
+    ``cache``
+        A :class:`~repro.sweep.cache.SweepCache` (or None to disable).
+    ``dtype``
+        "auto" (backend-native: segment→float64, pallas→float32).  An
+        explicit dtype is validated against the backend's contract so a
+        query can *pin* the numeric guarantee it relies on.
+    """
+
+    backend: str = "segment"
+    shard: Union[None, bool, int, str] = None
+    shard_axis: str = "auto"
+    lam: str = "exact"
+    fd_eps: float = 2.0 ** -10
+    dtype: str = "auto"
+    cache: Optional[SweepCache] = DEFAULT_CACHE
+
+    def validate(self) -> "ExecPolicy":
+        if self.backend not in ("segment", "pallas"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+        if self.shard_axis not in ("auto", "G", "K", "S"):
+            raise ValueError(f"unknown shard_axis {self.shard_axis!r} "
+                             "(use 'auto', 'G', 'K' or 'S')")
+        if self.lam not in ("exact", "fd"):
+            raise ValueError(f"unknown lam mode {self.lam!r} "
+                             "(use 'exact' or 'fd')")
+        if not float(self.fd_eps) > 0.0:
+            raise ValueError(f"fd_eps must be positive, got {self.fd_eps!r}")
+        if self.shard is not None and self.shard != "auto" \
+                and not isinstance(self.shard, (bool, int, np.integer)):
+            # validated here so a wire-format typo ({"shard": "always"})
+            # fails at the protocol edge, not deep inside _resolve_shard
+            raise ValueError("shard must be None, a bool, an int device "
+                             f"count or 'auto', got {self.shard!r}")
+        if self.dtype not in ("auto", "float64", "float32"):
+            raise ValueError(f"unknown dtype {self.dtype!r} "
+                             "(use 'auto', 'float64' or 'float32')")
+        native = {"segment": "float64", "pallas": "float32"}[self.backend]
+        if self.dtype not in ("auto", native):
+            raise ValueError(
+                f"backend {self.backend!r} computes in {native}; "
+                f"dtype={self.dtype!r} is not available on it")
+        return self
+
+    def replace(self, **kw) -> "ExecPolicy":
+        return dataclasses.replace(self, **kw).validate()
+
+    @classmethod
+    def from_dict(cls, d: dict,
+                  base: Optional["ExecPolicy"] = None) -> "ExecPolicy":
+        """Parse a wire-format policy block, rejecting unknown keys — a
+        typo like ``{"bakend": "pallas"}`` must fail loudly, never execute
+        silently under the default policy."""
+        bad = sorted(set(d) - set(POLICY_WIRE_FIELDS))
+        if bad:
+            raise ValueError(
+                f"unknown ExecPolicy fields: {bad} "
+                f"(known: {sorted(POLICY_WIRE_FIELDS)})")
+        return dataclasses.replace(base if base is not None else cls(),
+                                   **d).validate()
+
+    def key(self) -> tuple:
+        """Hashable identity for engine memoization (content fields plus
+        the cache *object* — two policies sharing every knob but pointing
+        at different caches must not share a memoized engine)."""
+        return (self.backend, self.shard, self.shard_axis, self.lam,
+                float(self.fd_eps), self.dtype,
+                None if self.cache is None else id(self.cache))
+
+
+@dataclasses.dataclass
+class Query:
+    """A declarative sweep: which batch axes are populated, nothing else.
+
+    ``scenarios``
+        One :class:`~repro.sweep.scenarios.ScenarioBatch` (broadcast to
+        every graph) or a per-graph sequence with equal S.
+    ``costs``
+        The candidate axis [K]: a :class:`~repro.sweep.compile.CostBatch`
+        (or raw ``[K, ne]`` extra edge costs) for a single-graph engine; a
+        per-graph sequence of those for a multi-graph engine.  All graphs
+        must share K.
+    ``outputs``
+        Any subset of ("T", "lam", "rho").  Requesting "lam" or "rho"
+        computes both (ρ is a free ratio of λ and T).
+    ``graphs`` / ``params``
+        Optional detached-workload override: when set, :func:`run` (or
+        ``Engine.run``) compiles/packs these instead of the engine's bound
+        graphs — one plan, a sequence of plans / (graph, params) pairs, or
+        a ``MultiPlan``.
+    """
+
+    scenarios: object = None
+    costs: object = None
+    outputs: Sequence[str] = _OUTPUTS
+    graphs: object = None
+    params: object = None
+
+
+@dataclasses.dataclass
+class Result:
+    """Axis-shaped sweep tensors: ``T`` has one dim per populated axis, in
+    canonical [G?, K?, S] order (``axes`` names them); ``lam``/``rho``
+    carry a trailing latency-class dim."""
+
+    T: np.ndarray
+    lam: Optional[np.ndarray]
+    rho: Optional[np.ndarray]
+    axes: tuple                       # subset of ("G", "K", "S"), in order
+    scenarios: object                 # ScenarioBatch, or per-graph list
+    backend: str
+    names: Optional[tuple] = None     # graph names when the G axis is populated
+    from_cache: bool = False
+    lam_mode: str = "exact"
+
+    @property
+    def S(self) -> int:
+        return int(self.T.shape[-1])
+
+    @property
+    def K(self) -> Optional[int]:
+        if "K" not in self.axes:
+            return None
+        return int(self.T.shape[self.axes.index("K")])
+
+    @property
+    def G(self) -> Optional[int]:
+        return int(self.T.shape[0]) if "G" in self.axes else None
+
+    def __getitem__(self, key) -> "Result":
+        """Slice off the leading G axis (by index or graph name)."""
+        if "G" not in self.axes:
+            raise TypeError("result has no graph axis to index")
+        g = self.names.index(key) if isinstance(key, str) else int(key)
+        return Result(
+            T=self.T[g].copy(),
+            lam=None if self.lam is None else self.lam[g].copy(),
+            rho=None if self.rho is None else self.rho[g].copy(),
+            axes=self.axes[1:], scenarios=self.scenarios[g],
+            backend=self.backend, from_cache=self.from_cache,
+            lam_mode=self.lam_mode)
+
+    def split(self) -> dict:
+        """{name: per-graph Result} — the variant-study return shape."""
+        return {name: self[i] for i, name in enumerate(self.names)}
+
+    def _objective(self, reduce: str, axis: int) -> np.ndarray:
+        """Collapse every axis but ``axis`` to a makespan objective."""
+        T = np.moveaxis(self.T, axis, 0).reshape(self.T.shape[axis], -1)
+        if reduce == "mean":
+            return T.mean(axis=1)
+        if reduce == "max":
+            return T.max(axis=1)
+        if reduce == "final":
+            return T[:, -1]
+        raise ValueError(f"unknown reduce {reduce!r}")
+
+    def rank(self, reduce: str = "mean") -> list:
+        """Graphs ordered best-first by makespan objective over the grid."""
+        if "G" not in self.axes:
+            raise TypeError("result has no graph axis to rank")
+        obj = self._objective(reduce, self.axes.index("G"))
+        order = np.argsort(obj, kind="stable")
+        return [(self.names[i], float(obj[i])) for i in order]
+
+    def argbest(self, reduce: str = "mean") -> int:
+        """Candidate index minimizing the objective (K axis), or the
+        scenario index with the smallest makespan (scenario-only result).
+        A graph-axis result without K has no single best index — ``rank()``
+        the graphs or slice one out first."""
+        if "K" in self.axes:
+            return int(np.argmin(self._objective(reduce,
+                                                 self.axes.index("K"))))
+        if "G" in self.axes:
+            raise TypeError("argbest() on a graph-axis result is ambiguous "
+                            "(a flat index would conflate graph and "
+                            "scenario) — use rank(), or index a graph "
+                            "first: res[g].argbest()")
+        return int(np.argmin(self.T))
+
+
+def _copy(res: Result, **replace) -> Result:
+    return dataclasses.replace(
+        res, T=res.T.copy(),
+        lam=None if res.lam is None else res.lam.copy(),
+        rho=None if res.rho is None else res.rho.copy(), **replace)
+
+
+class Engine:
+    """Compile once, evaluate any populated combination of G×K×S axes.
+
+    ``graphs``: an ``ExecutionGraph`` (with ``params``), a
+    :class:`~repro.sweep.compile.CompiledPlan`, a
+    :class:`~repro.sweep.compile.MultiPlan`, or a sequence of plans /
+    graphs / (graph, params) pairs (packed into a MultiPlan, members
+    retained so per-graph cost extras can be patched).
+
+    The engine stages plan tensors per backend once, resolves each run's
+    populated axes, and dispatches through the shared jit cells of
+    ``repro.sweep.engine._get_forward`` — the *same* compiled programs the
+    legacy engines used for their combinations, which is what makes the
+    legacy shims bit-identical by construction.
+    """
+
+    MAX_DENSE_BYTES = 256 << 20
+
+    def __init__(self, graphs=None, params=None,
+                 policy: Optional[ExecPolicy] = None, names=None):
+        self.policy = (policy if policy is not None else ExecPolicy()) \
+            .validate()
+        plan = multi = plans = None
+        if isinstance(graphs, MultiPlan):
+            multi = graphs
+        elif isinstance(graphs, CompiledPlan):
+            plan = graphs
+        elif isinstance(graphs, (list, tuple)):
+            if not graphs:
+                raise ValueError("need at least one graph or plan")
+            plans = []
+            for item in graphs:
+                if isinstance(item, CompiledPlan):
+                    plans.append(item)
+                elif isinstance(item, (list, tuple)) and len(item) == 2:
+                    plans.append(compile_plan(item[0], item[1]))
+                else:
+                    plans.append(compile_plan(item, params))
+            multi = pack_plans(plans)
+        elif graphs is not None:
+            plan = compile_plan(graphs, params)
+        else:
+            raise ValueError("need a graph, plan(s), or a MultiPlan")
+        self.plan = plan
+        self.multi = multi
+        self.plans = plans            # member plans (cost patching); or None
+        self.params = params
+        if multi is not None:
+            self.names = tuple(names) if names else tuple(
+                f"g{i}" for i in range(multi.G))
+            if len(self.names) != multi.G:
+                raise ValueError(
+                    f"{len(self.names)} names for {multi.G} graphs")
+        else:
+            self.names = None
+        self.calls = 0                # compiled dispatches (cache hits excluded)
+        self._dev: dict = {}
+        self._warned: set = set()     # per-instance warn-once registry
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def G(self) -> Optional[int]:
+        return None if self.multi is None else self.multi.G
+
+    @property
+    def nclass(self) -> int:
+        return (self.plan if self.multi is None else self.multi).nclass
+
+    def _arrays(self, kind: str) -> tuple:
+        if kind not in self._dev:
+            self._dev[kind] = _eng._stage_arrays(
+                self.plan if self.multi is None else self.multi, kind,
+                self.MAX_DENSE_BYTES)
+        return self._dev[kind]
+
+    # -- normalization -------------------------------------------------------
+    def _batches(self, scenarios) -> list:
+        """One ScenarioBatch per graph (broadcast a single one)."""
+        if self.multi is None:
+            if not isinstance(scenarios, ScenarioBatch):
+                raise ValueError("a single-graph engine takes one "
+                                 "ScenarioBatch")
+            if scenarios.nclass != self.nclass:
+                raise ValueError(
+                    f"scenario batch has {scenarios.nclass} classes, "
+                    f"graph has {self.nclass}")
+            return [scenarios]
+        if isinstance(scenarios, ScenarioBatch):
+            batches = [scenarios] * self.multi.G
+        else:
+            batches = list(scenarios)
+        if len(batches) != self.multi.G:
+            raise ValueError(f"{len(batches)} scenario batches for "
+                             f"{self.multi.G} graphs")
+        S = batches[0].S
+        for b in batches:
+            if b.nclass != self.nclass:
+                raise ValueError(f"scenario batch has {b.nclass} classes, "
+                                 f"packed graphs have {self.nclass}")
+            if b.S != S:
+                raise ValueError("per-graph scenario batches must share S "
+                                 f"(got {b.S} vs {S})")
+        return batches
+
+    def _check_view(self, cb: CostBatch, backend: str) -> None:
+        """A view-limited patch (``patch_costs(views=...)``) carries real
+        costs only in one backend's constants — refuse the other."""
+        v_b = cb.vconst.strides[0] != 0
+        e_b = cb.econst.strides[0] != 0
+        if (backend == "segment" and e_b and not v_b) or \
+                (backend == "pallas" and v_b and not e_b):
+            raise ValueError(
+                f"cost batch was patched for the "
+                f"{'edge' if e_b else 'vertex'} view only and cannot run "
+                f"on backend={backend!r}")
+
+    def _costs(self, costs, backend: str) -> Optional[list]:
+        """Normalize the K axis to a per-graph list of validated
+        CostBatches (repadded onto the MultiPlan envelope when G is
+        populated); None when the axis is unpopulated."""
+        if costs is None:
+            return None
+        views = ("vertex",) if backend == "segment" else ("edge",)
+        if self.multi is None:
+            cb = costs
+            if not isinstance(cb, CostBatch):
+                # raw [K, ne] extras: patch only the view this backend
+                # evaluates (half the host work of a full patch)
+                cb = self.plan.patch_costs(cb, views=views)
+            if cb.vconst.shape[1:] != self.plan.vconst.shape:
+                raise ValueError(
+                    f"cost block envelope {cb.vconst.shape[1:]} does not "
+                    f"match the plan's {self.plan.vconst.shape} — "
+                    "patch_costs() the same plan this engine compiled")
+            if cb.plan_hash is not None and \
+                    cb.plan_hash != self.plan.content_hash():
+                # bucketing makes DISTINCT graphs share envelopes, so the
+                # shape check alone cannot catch a foreign batch
+                raise ValueError(
+                    "cost batch was patched from a different plan than "
+                    "this engine compiled (same envelope, different "
+                    "content) — patch_costs() the engine's own plan")
+            self._check_view(cb, backend)
+            return [cb]
+        if isinstance(costs, CostBatch):
+            raise ValueError(
+                "a multi-graph engine needs one cost batch (or [K, ne] "
+                "extras array) per graph — got a single CostBatch; pass a "
+                f"length-{self.multi.G} sequence")
+        cbs = list(costs)
+        if len(cbs) != self.multi.G:
+            raise ValueError(f"{len(cbs)} cost batches for "
+                             f"{self.multi.G} graphs")
+        env = self.multi.vsrc.shape[1:]          # (nlv_p, Vmax, Dmax)
+        Emax = self.multi.esrc.shape[2]
+        out = []
+        for i, cb in enumerate(cbs):
+            if not isinstance(cb, CostBatch):
+                if self.plans is None:
+                    raise ValueError(
+                        "raw cost extras need the member plans; construct "
+                        "the Engine from plans/graphs (not a bare "
+                        "MultiPlan), or pass per-graph CostBatches")
+                cb = self.plans[i].patch_costs(cb, views=views)
+            if cb.plan_hash is not None and \
+                    cb.plan_hash != self.multi.plan_hashes[i]:
+                raise ValueError(
+                    f"cost batch {i} was patched from a different plan "
+                    f"than graph {i} of this MultiPlan — patch_costs() "
+                    "the member plan it rides")
+            self._check_view(cb, backend)
+            out.append(cb.repad(*env, Emax))
+        K = out[0].K
+        if any(cb.K != K for cb in out):
+            raise ValueError("per-graph cost batches must share K (got "
+                             f"{[cb.K for cb in out]})")
+        return out
+
+    # -- the run -------------------------------------------------------------
+    def run(self, query=None, *, scenarios=None, costs=None, outputs=None,
+            compute_lam=None, backend=None, shard=None, shard_axis=None,
+            use_cache: bool = True,
+            policy: Optional[ExecPolicy] = None) -> Result:
+        """Evaluate one query; returns a numpy-backed :class:`Result`.
+
+        ``query`` may be a :class:`Query`, a bare ``ScenarioBatch`` (or
+        per-graph sequence), or None with keyword axes.  ``policy``
+        replaces the engine's policy wholesale for this run; the
+        individual ``backend``/``shard``/``shard_axis`` keywords override
+        single fields.  ``compute_lam`` is the legacy spelling of
+        ``outputs`` (True → T/λ/ρ, False → T only).
+        """
+        if isinstance(query, Query):
+            if query.graphs is not None:
+                sub = Engine(query.graphs,
+                             params=(query.params if query.params is not None
+                                     else self.params),
+                             policy=policy if policy is not None
+                             else self.policy)
+                return sub.run(dataclasses.replace(query, graphs=None,
+                                                   params=None),
+                               outputs=outputs, compute_lam=compute_lam,
+                               backend=backend, shard=shard,
+                               shard_axis=shard_axis, use_cache=use_cache)
+            scenarios = query.scenarios if scenarios is None else scenarios
+            costs = query.costs if costs is None else costs
+            outputs = query.outputs if outputs is None else outputs
+        elif query is not None:
+            if scenarios is not None:
+                raise ValueError("pass scenarios positionally or by "
+                                 "keyword, not both")
+            scenarios = query
+        if scenarios is None:
+            raise ValueError("a query needs scenarios")
+
+        pol = (policy if policy is not None else self.policy)
+        over = {k: v for k, v in (("backend", backend), ("shard", shard),
+                                  ("shard_axis", shard_axis))
+                if v is not None}
+        if over:
+            pol = dataclasses.replace(pol, **over)
+        pol.validate()
+
+        if compute_lam is not None:
+            # the legacy flag is an explicit ask — it wins even over a
+            # Query's (defaulted) outputs tuple, so run(q, compute_lam=
+            # False) never silently pays for the λ program
+            outputs = _OUTPUTS if compute_lam else ("T",)
+        elif outputs is None:
+            outputs = _OUTPUTS
+        outputs = tuple(outputs)
+        bad = set(outputs) - set(_OUTPUTS)
+        if bad or not outputs:
+            raise ValueError(f"outputs must name a subset of {_OUTPUTS}, "
+                             f"got {outputs}")
+        want_lam = "lam" in outputs or "rho" in outputs
+        fd = want_lam and pol.lam == "fd"
+        kind = pol.backend
+
+        # pallas λ needs the argmax kernel; if it cannot even be built on
+        # this install, say so ONCE and fall back — never silently ignore
+        # an explicit backend choice (fd λ runs the plain values kernel,
+        # so it needs no probe)
+        if kind == "pallas" and want_lam and not fd:
+            try:
+                _eng._get_forward("pallas", True, self.multi is not None)
+            except ImportError as e:
+                if pol.dtype != "auto":
+                    # the caller PINNED the float32 contract; a segment
+                    # fallback would return float64 results under a policy
+                    # that validate() rejects — surface instead of override
+                    raise ImportError(
+                        "backend='pallas' λ needs the argmax (max,+) "
+                        f"kernel, which failed to import ({e}); cannot "
+                        "fall back to segment because dtype="
+                        f"{pol.dtype!r} pins the pallas float32 contract"
+                        ) from e
+                _eng._warn_once(
+                    ("override", "pallas-lam"),
+                    "backend='pallas' with compute_lam=True needs the "
+                    f"argmax (max,+) kernel, which failed to import "
+                    f"({e}); overriding to backend='segment'",
+                    registry=self._warned)
+                kind = "segment"
+                pol = dataclasses.replace(pol, backend="segment")
+
+        batches = self._batches(scenarios)
+        cbs = self._costs(costs, kind)
+        has_G = self.multi is not None
+        has_K = cbs is not None
+        cache = pol.cache if use_cache else None
+
+        # -- cache lookup ----------------------------------------------------
+        key = None
+        if cache is not None:
+            fields = (_eng._SEG_COST_FIELDS if kind == "segment"
+                      else _eng._PAL_COST_FIELDS)
+            cost_hash = None
+            if has_K:
+                # hash only the tensors this backend consumes: a raw-extras
+                # run and a full patch_costs() of the same extras collide
+                hashes = [cb.content_hash(fields=fields) for cb in cbs]
+                cost_hash = (hashes[0] if len(hashes) == 1
+                             else hashlib.sha1(
+                                 "|".join(hashes).encode()).hexdigest())
+            ph = (self.plan.content_hash() if not has_G
+                  else self.multi.content_hash())
+            key = query_key(ph, batches, want_lam, kind, cost_hash,
+                            lam_mode=pol.lam if want_lam else "exact",
+                            fd_eps=pol.fd_eps)
+            hit = cache.get(key, patched=has_K)
+            if hit is not None:
+                # copy the arrays (callers may mutate results in place) and
+                # restamp scenarios/names: the key is content-addressed, so
+                # the hit may come from an engine naming the plans
+                # differently
+                return _copy(hit,
+                             scenarios=(batches[0] if not has_G
+                                        else batches),
+                             names=self.names, from_cache=True)
+
+        res = self._run_uncached(batches, cbs, want_lam, fd, kind, pol)
+        if cache is not None:
+            # store a private copy: caller mutation of the returned arrays
+            # must never poison later cache hits
+            cache.put(key, _copy(res))
+        return res
+
+    # -- the uncached forward ------------------------------------------------
+    def _run_uncached(self, batches, cbs, want_lam, fd, kind,
+                      pol: ExecPolicy) -> Result:
+        has_G = self.multi is not None
+        has_K = cbs is not None
+        G = self.multi.G if has_G else None
+        K = cbs[0].K if has_K else None
+        Kp = _bucket(K, lo=1) if has_K else None
+        nc = self.nclass
+        S = batches[0].S
+        h = float(pol.fd_eps)
+
+        def expand(L, gs):
+            """(nc+1)× values grid: base rows then one +h·e_c block per
+            class — λ_c recovered as a forward difference."""
+            if not fd:
+                return L, gs
+            blocks = [L] + [L + h * np.eye(nc)[c] for c in range(nc)]
+            return np.concatenate(blocks), np.concatenate([gs] * (nc + 1))
+
+        Sext = S * (nc + 1) if fd else S
+        Sp = _bucket(Sext, lo=4)
+        if not has_G:
+            L0, G0 = expand(batches[0].L, batches[0].gscale)
+            Lmat = np.repeat(L0[-1:], Sp, axis=0)
+            Lmat[:Sext] = L0
+            GSmat = np.repeat(G0[-1:], Sp, axis=0)
+            GSmat[:Sext] = G0
+        else:
+            Lmat = np.empty((G, Sp, nc))
+            GSmat = np.empty((G, Sp, nc))
+            for i, b in enumerate(batches):
+                L0, G0 = expand(b.L, b.gscale)
+                Lmat[i, :Sext] = L0
+                Lmat[i, Sext:] = L0[-1]
+                GSmat[i, :Sext] = G0
+                GSmat[i, Sext:] = G0[-1]
+
+        # -- device sharding: any populated axis -----------------------------
+        axis = pol.shard_axis
+        if axis == "auto":
+            axis = "G" if has_G else "S"
+        mesh = None
+        if pol.shard:
+            if axis == "G" and not has_G:
+                raise ValueError("shard_axis='G' needs a multi-graph "
+                                 "engine (no graph axis is populated)")
+            if axis == "K" and not has_K:
+                raise ValueError("shard_axis='K' needs a cost batch "
+                                 "(no candidate axis is populated)")
+            size = {"G": G, "K": Kp, "S": Sp}[axis]
+            ndev = _eng._resolve_shard(pol.shard, size)
+            mesh = _eng._device_mesh(ndev) if ndev else None
+
+        # -- cost-tensor staging: only genuinely per-candidate tensors ride
+        #    the vmapped K axis; broadcast (unpatched) fields pass one
+        #    block, reusing the engine's staged device arrays -----------------
+        seg = kind == "segment"
+        want_lam_compiled = want_lam and not fd
+        names_f = _eng._SEG_COST_FIELDS if seg else _eng._PAL_COST_FIELDS
+        pos = _eng._SEG_COST_POS if seg else _eng._PAL_COST_POS
+        f32 = {"econst": np.float32, "egap": np.float32,
+               "elat": np.float32, "egclass": None}
+        kaxes = None
+        cost_arrs = ()
+        if has_K:
+            padded = [cb.padded(Kp) for cb in cbs]
+            kaxes = tuple(
+                0 if any(getattr(cb, n).strides[0] != 0 for cb in padded)
+                else None for n in names_f)
+            if all(ax is None for ax in kaxes):   # vmap needs ≥1 batched input
+                kaxes = (0,) + kaxes[1:]
+
+        jnp = _eng._jax().numpy
+
+        def stage_costs(staged):
+            out = []
+            for j, (n, ax) in enumerate(zip(names_f, kaxes)):
+                dtype = None if seg else f32[n]
+                if not has_G:
+                    a = getattr(padded[0], n)
+                    if ax is None:
+                        a = a[0]
+                        if _eng._same_buffer(a, getattr(self.plan, n)):
+                            out.append(staged[pos[n]])
+                            continue
+                    out.append(jnp.asarray(
+                        np.ascontiguousarray(a) if dtype is None
+                        else np.asarray(a, dtype=dtype)))
+                    continue
+                if ax is None:
+                    # unpatched in every graph ⇒ the MultiPlan's own cost
+                    # tensor (member blocks are its repadded rows)
+                    out.append(staged[pos[n]])
+                    continue
+                blocks = [np.broadcast_to(getattr(cb, n)[:1],
+                                          (Kp,) + getattr(cb, n).shape[1:])
+                          if getattr(cb, n).strides[0] == 0
+                          else getattr(cb, n) for cb in padded]
+                # segment composes G outermost ([G, K, ...]); pallas vmaps
+                # K over the graph-batched kernel ([K, G, ...])
+                arr = np.stack(blocks, axis=0 if seg else 1)
+                out.append(jnp.asarray(
+                    arr if dtype is None else arr.astype(dtype)))
+            return tuple(out)
+
+        fwd_kw = {}
+        if kaxes is not None:
+            fwd_kw["costs"] = kaxes
+        if mesh is not None and axis != ("G" if has_G else "S"):
+            fwd_kw["shard_axis"] = axis
+
+        if seg:
+            from jax.experimental import enable_x64
+            with enable_x64():
+                arrs = self._arrays("segment")
+                if has_K:
+                    cost_arrs = stage_costs(arrs)
+                    args = arrs[:2] + cost_arrs + arrs[7:]
+                else:
+                    args = arrs
+                fwd = _eng._get_forward("segment", want_lam_compiled,
+                                        has_G, False, mesh, **fwd_kw)
+                T, lam = fwd(*args, jnp.asarray(Lmat), jnp.asarray(GSmat))
+                T = np.asarray(T)
+                lam = np.asarray(lam)
+        else:
+            arrs = self._arrays("pallas")
+            if has_K:
+                cost_arrs = stage_costs(arrs)
+                args = arrs[:3] + cost_arrs + arrs[7:]
+            else:
+                args = arrs
+            fwd = _eng._get_forward("pallas", want_lam_compiled,
+                                    has_G, False, mesh, **fwd_kw)
+            T, lam = fwd(*args, jnp.asarray(Lmat, dtype=jnp.float32),
+                         jnp.asarray(GSmat, dtype=jnp.float32))
+            T = np.asarray(T).astype(np.float64)
+            lam = np.asarray(lam).astype(np.float64)
+            if has_G and has_K:                   # [K, G, ...] → [G, K, ...]
+                T = T.swapaxes(0, 1)
+                lam = lam.swapaxes(0, 1)
+        self.calls += 1
+
+        # -- slice padding, reduce fd, derive ρ ------------------------------
+        idx = ((slice(None),) if has_G else ()) \
+            + ((slice(0, K),) if has_K else ()) + (slice(0, Sext),)
+        T = T[idx]
+        if want_lam_compiled:
+            lam = lam[idx]
+        if fd:
+            Tr = T.reshape(T.shape[:-1] + (nc + 1, S))
+            T = Tr[..., 0, :]
+            lam = np.moveaxis((Tr[..., 1:, :] - T[..., None, :]) / h, -2, -1)
+        if want_lam:
+            if not has_G:
+                Lb = batches[0].L
+                if has_K:
+                    Lb = Lb[None]
+            else:
+                Lb = np.stack([b.L for b in batches])
+                if has_K:
+                    Lb = Lb[:, None]
+            rho = np.where(T[..., None] > 0,
+                           Lb * lam / np.maximum(T[..., None], 1e-300),
+                           0.0)
+        else:
+            lam, rho = None, None
+        axes = (("G",) if has_G else ()) + (("K",) if has_K else ()) + ("S",)
+        # np.array: np.asarray of a jax buffer is a read-only view; results
+        # must be writable (and consistent with the writable cache-hit copies)
+        return Result(T=np.array(T),
+                      lam=None if lam is None else np.array(lam),
+                      rho=rho, axes=axes,
+                      scenarios=batches[0] if not has_G else batches,
+                      backend=kind, names=self.names,
+                      lam_mode=pol.lam if want_lam else "exact")
+
+
+def run(query: Query, policy: Optional[ExecPolicy] = None,
+        params=None) -> Result:
+    """One-shot declarative evaluation: compile ``query.graphs``, run,
+    return the :class:`Result`.  For repeated queries over one workload,
+    build an :class:`Engine` and keep it warm instead."""
+    if query.graphs is None:
+        raise ValueError("a detached run() needs query.graphs")
+    eng = Engine(query.graphs,
+                 params=query.params if query.params is not None else params,
+                 policy=policy)
+    return eng.run(dataclasses.replace(query, graphs=None, params=None))

@@ -57,6 +57,29 @@ def result_key(plan_hash: str, scenarios, compute_lam: bool,
     return sha.hexdigest()
 
 
+def query_key(plan_hash: str, batches: Sequence, want_lam: bool,
+              backend: str, cost_hash: Optional[str] = None,
+              lam_mode: str = "exact",
+              fd_eps: Optional[float] = None) -> str:
+    """Key for a unified :class:`repro.sweep.api.Engine` query: the plan (or
+    MultiPlan) content hash, the per-graph scenario batches in order, the
+    requested sensitivity flag, the backend, the λ mode (finite-difference
+    λ is a *different numeric contract* than the exact backtrace, so the
+    two must never collide — and fd keys fold the step size in), and the
+    cost-batch hash when a candidate axis is populated."""
+    sha = hashlib.sha1(b"sweep-query-v1|")
+    sha.update(plan_hash.encode())
+    for b in batches:
+        _update(sha, b.L)
+        _update(sha, b.gscale)
+    sha.update(f"|{int(want_lam)}|{backend}|{lam_mode}".encode())
+    if lam_mode == "fd":
+        sha.update(repr(float(fd_eps)).encode())
+    if cost_hash is not None:
+        sha.update(f"|costs:{cost_hash}".encode())
+    return sha.hexdigest()
+
+
 def multi_result_key(multi_hash: str, batches: Sequence, compute_lam: bool,
                      backend: str) -> str:
     """Key for a MultiPlan run: per-graph scenario batches hashed in order."""

@@ -178,6 +178,48 @@ class CostBatch:
                             for name in COST_FIELDS},
                          plan_hash=self.plan_hash)
 
+    def repad(self, nlv_p: int, Vmax: int, Dmax: int,
+              Emax: int) -> "CostBatch":
+        """Zero-fill the structural dims onto a larger envelope — the
+        cost-block analog of :func:`repad_plan`, used when per-graph cost
+        batches ride a packed :class:`MultiPlan`'s common envelope.  Padded
+        slots are masked out of every reduction (exactly as in
+        ``repad_plan``'s zero-fill of the cost tensors), so a repadded
+        block evaluates bit-identically.  Broadcast (unpatched) fields stay
+        stride-0 on the candidate axis."""
+        K = self.K
+        nlv0, V0, D0 = self.vconst.shape[1:]
+        E0 = self.econst.shape[2]
+        if (nlv_p, Vmax, Dmax, Emax) == (nlv0, V0, D0, E0):
+            return self
+        if nlv_p < nlv0 or Vmax < V0 or Dmax < D0 or Emax < E0:
+            raise ValueError(
+                f"target envelope {(nlv_p, Vmax, Dmax, Emax)} smaller than "
+                f"cost batch's {(nlv0, V0, D0, E0)}")
+        nc = self.vlat.shape[4]
+        shapes = {
+            "vconst": (nlv_p, Vmax, Dmax), "vgap": (nlv_p, Vmax, Dmax),
+            "vgclass": (nlv_p, Vmax, Dmax),
+            "vlat": (nlv_p, Vmax, Dmax, nc),
+            "vlat_sum": (nlv_p, Vmax, Dmax),
+            "econst": (nlv_p, Emax), "egap": (nlv_p, Emax),
+            "egclass": (nlv_p, Emax), "elat": (nlv_p, Emax, nc),
+        }
+
+        def grow(a, shape):
+            inner = tuple(slice(0, s) for s in a.shape[1:])
+            if a.strides[0] == 0:                # unpatched: keep stride-0
+                out = np.zeros(shape, dtype=a.dtype)
+                out[inner] = a[0]
+                return np.broadcast_to(out[None], (K,) + shape)
+            out = np.zeros((K,) + shape, dtype=a.dtype)
+            out[(slice(None),) + inner] = a
+            return out
+
+        return CostBatch(**{n: grow(getattr(self, n), shapes[n])
+                            for n in COST_FIELDS},
+                         plan_hash=self.plan_hash)
+
 
 @dataclasses.dataclass
 class CompiledPlan:

@@ -1,5 +1,12 @@
 """Batched max-plus evaluation of LogGPS scenario grids (jit + vmap).
 
+This module owns the jitted cores and the populated-axis forward cache
+(:func:`_get_forward`): graph [G], candidate-cost [K] and scenario [S]
+batch axes compose freely via vmap (and any one of them can shard across
+devices).  The user-facing evaluator is :class:`repro.sweep.api.Engine`;
+the :class:`SweepEngine` / :class:`MultiSweepEngine` classes below are
+deprecation-warned shims over it, kept bit-identical for legacy callers.
+
 One call evaluates a whole :class:`~repro.sweep.scenarios.ScenarioBatch`
 against a :class:`~repro.sweep.compile.CompiledPlan`:
 
@@ -61,9 +68,9 @@ import numpy as np
 
 from repro.core.loggps import LogGPS
 
-from .cache import DEFAULT_CACHE, SweepCache, multi_result_key, result_key
-from .compile import (CompiledPlan, CostBatch, MultiPlan, _bucket,
-                      compile_plan, pack_plans)
+from .cache import DEFAULT_CACHE, SweepCache
+from .compile import (CompiledPlan, CostBatch, MultiPlan,  # noqa: F401
+                      _bucket, compile_plan)
 from .scenarios import ScenarioBatch, latency_grid
 
 BIG = 1e30          # matches kernels.maxplus NEG_INF magnitude
@@ -315,11 +322,34 @@ def _make_segment_one(want_lam: bool, fused: bool = False):
     return one
 
 
-def _segment_core(want_lam: bool, fused: bool = False):
-    """Unjitted forward over one graph × S scenarios → T [S], λ [S, nc]."""
+def _segment_core_axes(want_lam: bool, multi: bool, costs: Optional[tuple],
+                       fused: bool = False):
+    """The generalized segment forward: one vmap per populated batch axis.
+
+    The innermost vmap always rides scenarios [S]; ``costs`` (a
+    per-``_SEG_COST_FIELDS`` vmap-axis tuple, 0 = patched/batched, None =
+    shared) adds the candidate axis [K] over ONLY the patched cost
+    tensors; ``multi`` adds the MultiPlan graph axis [G] over every input
+    (cost tensors then carry [G, K, ...] when both axes are populated).
+    Composition order fixes the canonical output layout [G?, K?, S] — and
+    because each added vmap leaves the per-element arithmetic untouched,
+    every populated-axis combination is bit-identical to the equivalent
+    solo/rebuild runs (the conformance matrix's contract).
+    """
     jax = _jax()
     one = _make_segment_one(want_lam, fused)
-    return jax.vmap(one, in_axes=(None,) * 10 + (0, 0))
+    core = jax.vmap(one, in_axes=(None,) * 10 + (0, 0))          # S
+    if costs is not None:
+        core = jax.vmap(core, in_axes=(None, None) + tuple(costs)
+                        + (None,) * 3 + (None, None))            # K
+    if multi:
+        core = jax.vmap(core, in_axes=(0,) * 12)                 # G
+    return core
+
+
+def _segment_core(want_lam: bool, fused: bool = False):
+    """Unjitted forward over one graph × S scenarios → T [S], λ [S, nc]."""
+    return _segment_core_axes(want_lam, False, None, fused)
 
 
 def _segment_core_multi(want_lam: bool, fused: bool = False):
@@ -329,10 +359,7 @@ def _segment_core_multi(want_lam: bool, fused: bool = False):
     (every plan tensor gains a leading G dim, and scenarios are per-graph
     [G, S, ·] so variant groups with different base points batch together).
     """
-    jax = _jax()
-    one = _make_segment_one(want_lam, fused)
-    over_s = jax.vmap(one, in_axes=(None,) * 10 + (0, 0))
-    return jax.vmap(over_s, in_axes=(0,) * 12)
+    return _segment_core_axes(want_lam, True, None, fused)
 
 
 #: cost tensors each backend's forward consumes, in positional order
@@ -369,11 +396,22 @@ def _segment_core_costs(want_lam: bool, axes: tuple, fused: bool = False):
     arithmetic is the single-(graph, scenario) ``one`` unchanged, so row k
     is bit-identical to a solo run of a plan rebuilt with cost block k
     (the placement loop's exactness guarantee)."""
+    return _segment_core_axes(want_lam, False, axes, fused)
+
+
+def _dense_core_axes(want_lam: bool, multi: bool, costs: Optional[tuple]):
+    """The generalized pallas forward.  The scenario axis rides the
+    kernel's 128-wide lanes and the graph axis (``multi``) rides the
+    batched kernel's outer grid axis, so neither is a vmap; ``costs`` adds
+    the candidate axis by vmapping ONLY the patched cost tensors over the
+    (graph-batched) kernel core — output layout [K?, G?, S], which the
+    engine transposes to the canonical [G?, K?, S]."""
     jax = _jax()
-    one = _make_segment_one(want_lam, fused)
-    over_s = jax.vmap(one, in_axes=(None,) * 10 + (0, 0))
-    return jax.vmap(over_s,
-                    in_axes=(None, None) + axes + (None,) * 3 + (None, None))
+    core = (_dense_core_multi if multi else _dense_core)(want_lam)
+    if costs is not None:
+        core = jax.vmap(core, in_axes=(None,) * 3 + tuple(costs)
+                        + (None,) * 3 + (None, None))
+    return core
 
 
 def _dense_core_costs(want_lam: bool, axes: tuple):
@@ -381,9 +419,7 @@ def _dense_core_costs(want_lam: bool, axes: tuple):
     is vmapped on the candidate axis (the 0/−inf indicator is structure and
     stays unbatched); λ via the argmax kernel exactly as in solo runs.
     ``axes``: per-``_PAL_COST_FIELDS`` vmap axis (0 or None)."""
-    jax = _jax()
-    return jax.vmap(_dense_core(want_lam),
-                    in_axes=(None,) * 3 + axes + (None,) * 3 + (None, None))
+    return _dense_core_axes(want_lam, False, axes)
 
 
 def _dense_core(want_lam: bool = False):
@@ -647,63 +683,126 @@ def _stage_arrays(plan, kind: str, max_dense_bytes: int) -> tuple:
 _N_PLAN_ARGS = 10
 
 
+def _shard_specs(kind: str, multi: bool, costs: Optional[tuple],
+                 shard_axis: str) -> tuple:
+    """Per-argument shard_map partition specs for one populated-axis cell.
+
+    Every forward takes ``_N_PLAN_ARGS`` plan tensors + (L, GS); the dim
+    that carries ``shard_axis`` differs per argument and per backend:
+
+    * "S" — only the scenario tensors split (dim 1 under a graph axis);
+    * "G" — every tensor splits on its graph dim (0 everywhere, except
+      pallas patched cost tensors, which are staged [K, G, ...]);
+    * "K" — only the *patched* cost tensors split on their candidate dim
+      (structure, unpatched costs and scenarios replicate).
+
+    Output layouts: segment [G?, K?, S], pallas [K?, G?, S].
+    """
+    P = _jax().sharding.PartitionSpec
+
+    def spec(d):
+        return P() if d is None else P(*([None] * d + ["x"]))
+
+    K = costs is not None
+    dims: list = [None] * (_N_PLAN_ARGS + 2)
+    cost0 = 2 if kind == "segment" else 3      # first cost-field position
+    if shard_axis == "S":
+        dims[10] = dims[11] = 1 if multi else 0
+    elif shard_axis == "G":
+        dims = [0] * (_N_PLAN_ARGS + 2)
+        if K and kind == "pallas":             # patched costs are [K, G, ...]
+            for j, ax in enumerate(costs):
+                if ax == 0:
+                    dims[cost0 + j] = 1
+    else:                                      # "K"
+        for j, ax in enumerate(costs):
+            if ax == 0:
+                dims[cost0 + j] = (1 if multi else 0) \
+                    if kind == "segment" else 0
+    if kind == "segment":
+        od = {"G": 0, "K": 1 if multi else 0,
+              "S": int(multi) + int(K)}[shard_axis]
+    else:
+        od = {"K": 0, "G": 1 if K else 0,
+              "S": int(multi) + int(K)}[shard_axis]
+    return tuple(spec(d) for d in dims), (spec(od), spec(od))
+
+
 def _get_forward(kind: str, want_lam: bool = False, multi: bool = False,
                  fused: bool = False, mesh=None,
-                 costs: Optional[tuple] = None):
-    """Build (or fetch) the jitted forward for one (backend, λ, multi) cell.
+                 costs: Optional[tuple] = None,
+                 shard_axis: Optional[str] = None):
+    """Build (or fetch) the jitted forward for one populated-axis cell.
 
-    With ``mesh`` the core is wrapped in ``shard_map`` before jit: multi
-    forwards shard the MultiPlan's leading graph axis (every input and both
-    outputs split on it — the natural axis, each graph's program is
-    independent); single-graph forwards replicate the plan tensors and
-    shard the scenario axis.  Per-element arithmetic is unchanged either
+    The cell is keyed on (backend, λ, G axis, K axes, mesh, shard axis):
+    vmap composition over the populated batch axes is derived here
+    (``_segment_core_axes`` / ``_dense_core_axes``) rather than from which
+    engine class a caller instantiated — graph [G], candidate-cost [K] and
+    scenario [S] axes compose freely, including all at once.
+
+    With ``mesh`` the composed core is wrapped in ``shard_map`` before
+    jit; ``shard_axis`` picks which populated axis splits across devices
+    (default: the MultiPlan graph axis when present, else scenarios — the
+    legacy engines' behavior).  Per-element arithmetic is unchanged either
     way, so sharded results are bit-identical to single-device runs.
 
     ``costs`` (a per-cost-field vmap-axis tuple, see ``_SEG_COST_FIELDS``
-    / ``_PAL_COST_FIELDS``) selects the candidate-cost-axis cells
-    (``run(costs=)``): patched cost tensors batched, structure and
-    unpatched costs unbatched, scenarios broadcast.
+    / ``_PAL_COST_FIELDS``) selects the candidate-cost-axis cells:
+    patched cost tensors batched, structure and unpatched costs unbatched,
+    scenarios broadcast.
     """
     jax = _jax()
     mesh_key = None if mesh is None else tuple(
         d.id for d in np.asarray(mesh.devices).flat)
     fused = bool(fused and want_lam and kind == "segment")
-    if costs is not None and (multi or mesh is not None):
-        raise ValueError("cost-batched runs support neither MultiPlan "
-                         "engines nor shard= yet")
-    key = (kind, want_lam, multi, fused, mesh_key, costs)
+    if mesh is None:
+        shard_axis = None
+    elif shard_axis is None:
+        shard_axis = "G" if multi else "S"
+    if shard_axis == "G" and not multi:
+        raise ValueError("shard_axis='G' needs a multi-graph forward "
+                         "(no graph axis is populated)")
+    if shard_axis == "K" and costs is None:
+        raise ValueError("shard_axis='K' needs a cost-batched forward "
+                         "(no candidate axis is populated)")
+    key = (kind, want_lam, multi, fused, mesh_key, costs, shard_axis)
     if key in _FWD_CACHE:
         return _FWD_CACHE[key]
-    if kind == "segment":
-        if costs is not None:
-            core = _segment_core_costs(want_lam, costs, fused)
-        else:
-            core = (_segment_core_multi if multi else _segment_core)(want_lam,
-                                                                     fused)
-    elif costs is not None:
-        core = _dense_core_costs(want_lam, costs)
-    else:
-        core = (_dense_core_multi if multi else _dense_core)(want_lam)
+    core = (_segment_core_axes(want_lam, multi, costs, fused)
+            if kind == "segment" else _dense_core_axes(want_lam, multi,
+                                                       costs))
     if mesh is not None:
         from jax.experimental.shard_map import shard_map
-        P = jax.sharding.PartitionSpec
-        if multi:
-            in_specs = (P("x"),) * (_N_PLAN_ARGS + 2)
-        else:
-            in_specs = (P(),) * _N_PLAN_ARGS + (P("x"), P("x"))
+        in_specs, out_specs = _shard_specs(kind, multi, costs, shard_axis)
         core = shard_map(core, mesh=mesh, in_specs=in_specs,
-                         out_specs=(P("x"), P("x")), check_rep=False)
+                         out_specs=out_specs, check_rep=False)
     fn = jax.jit(core)
     _FWD_CACHE[key] = fn
     return fn
 
 
+def _warn_deprecated_shim(old: str) -> None:
+    import warnings
+    warnings.warn(
+        f"{old} is deprecated; build a repro.sweep.Engine with an "
+        "ExecPolicy and run a Query instead (one engine, G/K/S batch "
+        "axes — see repro.sweep.api).  This shim delegates to the unified "
+        "engine and stays bit-identical.",
+        DeprecationWarning, stacklevel=3)
+
+
 class SweepEngine:
-    """Compile once, evaluate thousands of LogGPS scenarios per call.
+    """DEPRECATED shim over :class:`repro.sweep.api.Engine` (single graph).
+
+    Compile once, evaluate thousands of LogGPS scenarios per call:
 
     >>> eng = SweepEngine(graph, params)
     >>> res = eng.run(latency_grid(params, np.linspace(0, 100, 1000)))
     >>> res.T, res.lam, res.rho     # [1000], [1000, nclass], [1000, nclass]
+
+    The unified engine dispatches the *same* jit cells this class used to
+    own, so results (λ tie-breaks included) are bit-identical; new code
+    should construct ``Engine``/``Query``/``ExecPolicy`` directly.
     """
 
     MAX_DENSE_BYTES = 256 << 20
@@ -712,263 +811,64 @@ class SweepEngine:
                  backend: str = "segment", shard=None,
                  compiled: Optional[CompiledPlan] = None,
                  cache: Optional[SweepCache] = DEFAULT_CACHE):
+        _warn_deprecated_shim("SweepEngine")
+        from .api import Engine, ExecPolicy
         if compiled is None:
             if graph is None:
                 raise ValueError("need a graph or a CompiledPlan")
             compiled = compile_plan(graph, params)
-        if backend not in ("segment", "pallas"):
-            raise ValueError(f"unknown backend {backend!r}")
-        self.compiled = compiled
-        self.params = params
-        self.backend = backend
-        self.shard = shard        # default device sharding (None = off)
-        self.cache = cache
-        self.calls = 0            # compiled-program dispatches (cache hits excluded)
-        self._dev: dict = {}
-        self._warned: set = set()  # per-instance warn-once registry
+        self._eng = Engine(compiled, params=params,
+                           policy=ExecPolicy(backend=backend, shard=shard,
+                                             cache=cache))
+        # honor a subclass/class-level override of the dense-size guard
+        self._eng.MAX_DENSE_BYTES = type(self).MAX_DENSE_BYTES
 
-    # -- device-array staging (inside enable_x64 so float64 survives) -------
+    # -- legacy attribute surface (read-through to the unified engine) -------
+    @property
+    def compiled(self) -> CompiledPlan:
+        return self._eng.plan
+
+    @property
+    def params(self):
+        return self._eng.params
+
+    @property
+    def backend(self) -> str:
+        return self._eng.policy.backend
+
+    @property
+    def shard(self):
+        return self._eng.policy.shard
+
+    @property
+    def cache(self):
+        return self._eng.policy.cache
+
+    @property
+    def calls(self) -> int:
+        return self._eng.calls
+
     def _arrays(self, kind: str):
-        if kind not in self._dev:
-            self._dev[kind] = _stage_arrays(self.compiled, kind,
-                                            self.MAX_DENSE_BYTES)
-        return self._dev[kind]
+        return self._eng._arrays(kind)
 
     def run(self, scenarios: ScenarioBatch, compute_lam: bool = True,
             backend: Optional[str] = None, shard=None,
             use_cache: bool = True, costs: Optional[CostBatch] = None):
-        """Evaluate every scenario; returns numpy-backed :class:`SweepResult`.
-
-        ``backend="pallas"`` serves T *and* λ/ρ directly — the argmax-
-        emitting (max,+) kernel records the λ backtrace, no segment
-        redispatch.  ``shard`` (None/True/"auto"/int) splits the scenario
-        axis across local devices via ``shard_map``; results stay
-        bit-identical to the single-device run.
-
-        ``costs`` (a :class:`~repro.sweep.compile.CostBatch` from
-        :meth:`CompiledPlan.patch_costs`) adds a candidate-cost axis: all K
-        cost blocks × S scenarios evaluate through the plan's already-
-        compiled forward (structure unbatched — zero recompiles) and the
-        return type becomes :class:`CostSweepResult` with row k bit-
-        identical to a solo run of a plan rebuilt with cost block k.
-        """
-        backend = backend or self.backend
-        if backend not in ("segment", "pallas"):
-            raise ValueError(f"unknown backend {backend!r}")
-        if backend == "pallas" and compute_lam:
-            # guard: if the λ-emitting kernel cannot even be built on this
-            # install, say so ONCE and fall back — never silently ignore an
-            # explicit backend choice (the costs cells consume the same
-            # kernel imports, so this one probe covers both paths)
-            try:
-                _get_forward("pallas", True)
-            except ImportError as e:
-                _warn_once(("override", "pallas-lam"),
-                           "backend='pallas' with compute_lam=True needs the "
-                           f"argmax (max,+) kernel, which failed to import "
-                           f"({e}); overriding to backend='segment'",
-                           registry=self._warned)
-                backend = "segment"
-        c = self.compiled
-        if scenarios.nclass != c.nclass:
-            raise ValueError(f"scenario batch has {scenarios.nclass} classes, "
-                             f"graph has {c.nclass}")
-        cache = self.cache if use_cache else None
-        if costs is not None:
-            if (shard if shard is not None else self.shard):
-                raise ValueError("cost-batched runs don't support shard= yet")
-            if not isinstance(costs, CostBatch):
-                # raw [K, ne] extra edge costs: patch only the view this
-                # backend evaluates (half the host work of a full patch)
-                costs = c.patch_costs(
-                    costs,
-                    views=("vertex",) if backend == "segment" else ("edge",))
-            return self._run_costs(scenarios, costs, compute_lam, backend,
-                                   cache)
-        key = None
-        if cache is not None:
-            key = result_key(c.content_hash(), scenarios, compute_lam, backend)
-            hit = cache.get(key)
-            if hit is not None:
-                # copy the arrays: callers may mutate results in place
-                return dataclasses.replace(
-                    hit, T=hit.T.copy(),
-                    lam=None if hit.lam is None else hit.lam.copy(),
-                    rho=None if hit.rho is None else hit.rho.copy(),
-                    scenarios=scenarios, from_cache=True)
-        res = self._run_uncached(scenarios, compute_lam, backend,
-                                 shard if shard is not None else self.shard)
-        if cache is not None:
-            # store a private copy: the caller may mutate the returned
-            # arrays in place, which must never poison later cache hits
-            cache.put(key, dataclasses.replace(
-                res, T=res.T.copy(),
-                lam=None if res.lam is None else res.lam.copy(),
-                rho=None if res.rho is None else res.rho.copy()))
-        return res
-
-    def _run_uncached(self, scenarios: ScenarioBatch, compute_lam: bool,
-                      backend: str, shard=None) -> SweepResult:
-        S = scenarios.S
-        Sp = _bucket(S, lo=4)
-        Lmat = np.repeat(scenarios.L[-1:], Sp, axis=0)
-        Lmat[:S] = scenarios.L
-        GSmat = np.repeat(scenarios.gscale[-1:], Sp, axis=0)
-        GSmat[:S] = scenarios.gscale
-        ndev = _resolve_shard(shard, Sp)
-        mesh = _device_mesh(ndev) if ndev else None
-
-        if backend == "segment":
-            from jax.experimental import enable_x64
-            with enable_x64():
-                jnp = _jax().numpy
-                arrs = self._arrays("segment")
-                fwd = _get_forward("segment", compute_lam, mesh=mesh)
-                T, lam = fwd(*arrs, jnp.asarray(Lmat), jnp.asarray(GSmat))
-                T = np.asarray(T)[:S]
-                lam = np.asarray(lam)[:S]
-        elif backend == "pallas":
-            jnp = _jax().numpy
-            arrs = self._arrays("pallas")
-            fwd = _get_forward("pallas", compute_lam, mesh=mesh)
-            T, lam = fwd(*arrs, jnp.asarray(Lmat, dtype=jnp.float32),
-                         jnp.asarray(GSmat, dtype=jnp.float32))
-            T = np.asarray(T).astype(np.float64)[:S]
-            lam = np.asarray(lam).astype(np.float64)[:S]
-        self.calls += 1
-
-        if compute_lam:
-            rho = np.where(T[:, None] > 0,
-                           scenarios.L * lam / np.maximum(T[:, None], 1e-300),
-                           0.0)
-        else:
-            lam, rho = None, None
-        # np.array: np.asarray of a jax buffer is a read-only view; results
-        # must be writable (and consistent with the writable cache-hit copies)
-        return SweepResult(T=np.array(T),
-                           lam=None if lam is None else np.array(lam),
-                           rho=rho, scenarios=scenarios, backend=backend)
-
-    def _run_costs(self, scenarios: ScenarioBatch, costs: CostBatch,
-                   compute_lam: bool, backend: str,
-                   cache: Optional[SweepCache]) -> CostSweepResult:
-        """K cost blocks × S scenarios through the warm compiled forward."""
-        c = self.compiled
-        if costs.vconst.shape[1:] != c.vconst.shape:
-            raise ValueError(
-                f"cost block envelope {costs.vconst.shape[1:]} does not "
-                f"match the plan's {c.vconst.shape} — patch_costs() the "
-                "same plan this engine compiled")
-        if costs.plan_hash is not None and costs.plan_hash != c.content_hash():
-            # bucketing makes DISTINCT graphs share envelopes, so the
-            # shape check alone cannot catch a batch minted on another plan
-            raise ValueError(
-                "cost batch was patched from a different plan than this "
-                "engine compiled (same envelope, different content) — "
-                "patch_costs() the engine's own plan")
-        # a view-limited patch (patch_costs(views=...)) carries real costs
-        # only in one backend's constants; evaluating the other backend
-        # would silently read unpatched values
-        v_b, e_b = costs.vconst.strides[0] != 0, costs.econst.strides[0] != 0
-        if (backend == "segment" and e_b and not v_b) or \
-                (backend == "pallas" and v_b and not e_b):
-            raise ValueError(
-                f"cost batch was patched for the "
-                f"{'edge' if e_b else 'vertex'} view only and cannot run "
-                f"on backend={backend!r}")
-        key = None
-        if cache is not None:
-            # hash only the tensors this backend consumes: a raw-extras
-            # run and a full patch_costs() of the same extras share a key
-            key = result_key(c.content_hash(), scenarios, compute_lam,
-                             backend, cost_hash=costs.content_hash(
-                                 fields=_SEG_COST_FIELDS
-                                 if backend == "segment"
-                                 else _PAL_COST_FIELDS))
-            hit = cache.get(key, patched=True)
-            if hit is not None:
-                return dataclasses.replace(
-                    hit, T=hit.T.copy(),
-                    lam=None if hit.lam is None else hit.lam.copy(),
-                    rho=None if hit.rho is None else hit.rho.copy(),
-                    scenarios=scenarios, from_cache=True)
-
-        K, S = costs.K, scenarios.S
-        cb = costs.padded(_bucket(K, lo=1))
-        Sp = _bucket(S, lo=4)
-        Lmat = np.repeat(scenarios.L[-1:], Sp, axis=0)
-        Lmat[:S] = scenarios.L
-        GSmat = np.repeat(scenarios.gscale[-1:], Sp, axis=0)
-        GSmat[:S] = scenarios.gscale
-
-        # only genuinely per-candidate tensors ride the vmapped K axis;
-        # broadcast fields (stride 0 — untouched by the patch) pass one
-        # block unbatched, so a placement step ships K small patched
-        # constants, not K copies of the whole cost block.  Unbatched
-        # blocks that are literally views of this plan's own tensors reuse
-        # the engine's staged device arrays — no re-transfer per step.
-        seg = backend == "segment"
-        names = _SEG_COST_FIELDS if seg else _PAL_COST_FIELDS
-        pos = _SEG_COST_POS if seg else _PAL_COST_POS
-        axes = tuple(0 if getattr(cb, n).strides[0] != 0 else None
-                     for n in names)
-        if all(ax is None for ax in axes):      # vmap needs ≥1 batched input
-            axes = (0,) + axes[1:]
-
-        def cost_arr(name, ax, staged, dtype=None):
-            a = getattr(cb, name)
-            if ax is None:
-                a = a[0]
-                if _same_buffer(a, getattr(self.compiled, name)):
-                    return staged[pos[name]]
-            return _jax().numpy.asarray(
-                np.ascontiguousarray(a) if dtype is None
-                else np.asarray(a, dtype=dtype))
-
-        if seg:
-            from jax.experimental import enable_x64
-            with enable_x64():
-                jnp = _jax().numpy
-                s_arrs = self._arrays("segment")
-                cost_arrs = tuple(cost_arr(n, ax, s_arrs)
-                                  for n, ax in zip(names, axes))
-                fwd = _get_forward("segment", compute_lam, costs=axes)
-                T, lam = fwd(*s_arrs[:2], *cost_arrs, *s_arrs[7:],
-                             jnp.asarray(Lmat), jnp.asarray(GSmat))
-                T = np.asarray(T)[:K, :S]
-                lam = np.asarray(lam)[:K, :S]
-        else:
-            jnp = _jax().numpy
-            p_arrs = self._arrays("pallas")
-            f32 = {"econst": np.float32, "egap": np.float32,
-                   "elat": np.float32, "egclass": None}
-            cost_arrs = tuple(cost_arr(n, ax, p_arrs, dtype=f32[n])
-                              for n, ax in zip(names, axes))
-            fwd = _get_forward("pallas", compute_lam, costs=axes)
-            T, lam = fwd(*p_arrs[:3], *cost_arrs, *p_arrs[7:],
-                         jnp.asarray(Lmat, dtype=jnp.float32),
-                         jnp.asarray(GSmat, dtype=jnp.float32))
-            T = np.asarray(T).astype(np.float64)[:K, :S]
-            lam = np.asarray(lam).astype(np.float64)[:K, :S]
-        self.calls += 1
-
-        if compute_lam:
-            rho = np.where(T[:, :, None] > 0,
-                           scenarios.L[None] * lam
-                           / np.maximum(T[:, :, None], 1e-300),
-                           0.0)
-        else:
-            lam, rho = None, None
-        res = CostSweepResult(T=np.array(T),
-                              lam=None if lam is None else np.array(lam),
-                              rho=rho, scenarios=scenarios, backend=backend)
-        if cache is not None:
-            # store a private copy so caller mutations never poison hits
-            cache.put(key, dataclasses.replace(
-                res, T=res.T.copy(),
-                lam=None if res.lam is None else res.lam.copy(),
-                rho=None if res.rho is None else res.rho.copy()))
-        return res
+        """Evaluate every scenario; returns numpy-backed :class:`SweepResult`
+        (or :class:`CostSweepResult` when ``costs`` populates the candidate
+        axis).  ``shard`` now composes with ``costs`` — the unified engine
+        shards whichever axis the policy picks (scenarios by default)."""
+        res = self._eng.run(scenarios=scenarios, compute_lam=compute_lam,
+                            backend=backend, shard=shard,
+                            use_cache=use_cache, costs=costs)
+        if "K" in res.axes:
+            return CostSweepResult(T=res.T, lam=res.lam, rho=res.rho,
+                                   scenarios=res.scenarios,
+                                   backend=res.backend,
+                                   from_cache=res.from_cache)
+        return SweepResult(T=res.T, lam=res.lam, rho=res.rho,
+                           scenarios=res.scenarios, backend=res.backend,
+                           from_cache=res.from_cache)
 
     def latency_curve(self, deltas: Sequence[float], cls: int = 0,
                       params: Optional[LogGPS] = None,
@@ -1035,17 +935,19 @@ class MultiSweepResult:
 
 
 class MultiSweepEngine:
-    """Evaluate G packed graphs × S scenarios in one compiled program.
+    """DEPRECATED shim over :class:`repro.sweep.api.Engine` (graph axis).
 
-    The multi-graph analog of :class:`SweepEngine`: graphs compile once into
-    a :class:`~repro.sweep.compile.MultiPlan` (common padded envelope) and
-    every ``run`` is a single jit dispatch over the (graph, scenario) grid —
-    a whole collective/topology variant study per call.
+    Evaluate G packed graphs × S scenarios in one compiled program:
 
     >>> eng = MultiSweepEngine([(v.graph, v.params) for v in variants],
     ...                        names=[v.name for v in variants])
     >>> res = eng.run(sweep.latency_grid(params, deltas))   # broadcast grid
     >>> res.T.shape, res["algo=ring"].T.shape               # [G, S], [S]
+
+    Bit-identical to the unified engine (same jit cells); new code should
+    build ``Engine([plans...])`` directly — which also unlocks what this
+    class never supported: ``run(costs=)`` per-graph candidate axes and
+    sharding over any populated axis.
     """
 
     MAX_DENSE_BYTES = SweepEngine.MAX_DENSE_BYTES
@@ -1054,25 +956,19 @@ class MultiSweepEngine:
                  backend: str = "segment", shard=None,
                  multi: Optional[MultiPlan] = None,
                  cache: Optional[SweepCache] = DEFAULT_CACHE):
+        _warn_deprecated_shim("MultiSweepEngine")
+        from .api import Engine, ExecPolicy
+        pol = ExecPolicy(backend=backend, shard=shard, cache=cache)
         if multi is None:
             if not graphs_params:
                 raise ValueError("need (graph, params) pairs or a MultiPlan")
-            multi = pack_plans([compile_plan(g, p) for g, p in graphs_params])
-        if backend not in ("segment", "pallas"):
-            raise ValueError(f"unknown backend {backend!r}")
-        self.multi = multi
-        self.shard = shard
-        self.params = ([p for _, p in graphs_params]
-                       if graphs_params else [None] * multi.G)
-        self.names = tuple(names) if names else tuple(
-            f"g{i}" for i in range(multi.G))
-        if len(self.names) != multi.G:
-            raise ValueError(f"{len(self.names)} names for {multi.G} graphs")
-        self.backend = backend
-        self.cache = cache
-        self.calls = 0
-        self._dev: dict = {}
-        self._warned: set = set()  # per-instance warn-once registry
+            self._eng = Engine(list(graphs_params), policy=pol, names=names)
+            self.params = [p for _, p in graphs_params]
+        else:
+            self._eng = Engine(multi, policy=pol, names=names)
+            self.params = [None] * multi.G
+        # honor a subclass/class-level override of the dense-size guard
+        self._eng.MAX_DENSE_BYTES = type(self).MAX_DENSE_BYTES
 
     @classmethod
     def from_variants(cls, variants, **kw):
@@ -1082,34 +978,41 @@ class MultiSweepEngine:
         return cls([(v.graph, v.params) for v in variants],
                    names=[v.name for v in variants], **kw)
 
-    def _arrays(self, kind: str):
-        if kind not in self._dev:
-            self._dev[kind] = _stage_arrays(self.multi, kind,
-                                            self.MAX_DENSE_BYTES)
-        return self._dev[kind]
+    # -- legacy attribute surface --------------------------------------------
+    @property
+    def multi(self) -> MultiPlan:
+        return self._eng.multi
 
-    def _batches(self, scenarios) -> list:
-        """Normalize to one ScenarioBatch per graph (broadcast a single one)."""
-        if isinstance(scenarios, ScenarioBatch):
-            batches = [scenarios] * self.multi.G
-        else:
-            batches = list(scenarios)
-        if len(batches) != self.multi.G:
-            raise ValueError(f"{len(batches)} scenario batches for "
-                             f"{self.multi.G} graphs")
-        S = batches[0].S
-        for b in batches:
-            if b.nclass != self.multi.nclass:
-                raise ValueError(f"scenario batch has {b.nclass} classes, "
-                                 f"packed graphs have {self.multi.nclass}")
-            if b.S != S:
-                raise ValueError("per-graph scenario batches must share S "
-                                 f"(got {b.S} vs {S})")
-        return batches
+    @property
+    def names(self) -> tuple:
+        return self._eng.names
+
+    @names.setter
+    def names(self, value) -> None:
+        self._eng.names = tuple(value)
+
+    @property
+    def backend(self) -> str:
+        return self._eng.policy.backend
+
+    @property
+    def shard(self):
+        return self._eng.policy.shard
+
+    @property
+    def cache(self):
+        return self._eng.policy.cache
+
+    @property
+    def calls(self) -> int:
+        return self._eng.calls
+
+    def _arrays(self, kind: str):
+        return self._eng._arrays(kind)
 
     def run(self, scenarios, compute_lam: bool = True,
             backend: Optional[str] = None, shard=None,
-            use_cache: bool = True) -> MultiSweepResult:
+            use_cache: bool = True, costs=None):
         """One compiled call → :class:`MultiSweepResult` over every graph.
 
         ``scenarios``: one :class:`ScenarioBatch` (broadcast to all graphs)
@@ -1118,92 +1021,21 @@ class MultiSweepEngine:
         (batched argmax kernel).  ``shard`` splits the MultiPlan's leading
         graph axis across local devices via ``shard_map`` — the natural
         mesh axis; results stay bit-identical to the single-device run.
+
+        ``costs`` (one cost batch / raw ``[K, ne]`` extras array per
+        graph) populates the candidate axis alongside the graph axis — a
+        capability the legacy engine never had; the result is then the
+        unified :class:`repro.sweep.api.Result` with ``T[G, K, S]``.
         """
-        backend = backend or self.backend
-        if backend not in ("segment", "pallas"):
-            raise ValueError(f"unknown backend {backend!r}")
-        if backend == "pallas" and compute_lam:
-            try:
-                _get_forward("pallas", True, multi=True)
-            except ImportError as e:
-                _warn_once(("override", "pallas-lam"),
-                           "backend='pallas' with compute_lam=True needs the "
-                           f"argmax (max,+) kernel, which failed to import "
-                           f"({e}); overriding to backend='segment'",
-                           registry=self._warned)
-                backend = "segment"
-        batches = self._batches(scenarios)
-        cache = self.cache if use_cache else None
-        key = None
-        if cache is not None:
-            key = multi_result_key(self.multi.content_hash(), batches,
-                                   compute_lam, backend)
-            hit = cache.get(key)
-            if hit is not None:
-                # copy the arrays (callers may mutate results in place) and
-                # restamp names: the key is content-addressed, so the hit
-                # may come from an engine that named the same plans
-                # differently
-                return dataclasses.replace(
-                    hit, T=hit.T.copy(),
-                    lam=None if hit.lam is None else hit.lam.copy(),
-                    rho=None if hit.rho is None else hit.rho.copy(),
-                    scenarios=batches, names=self.names, from_cache=True)
-
-        G, nc = self.multi.G, self.multi.nclass
-        S = batches[0].S
-        Sp = _bucket(S, lo=4)
-        Lmat = np.empty((G, Sp, nc))
-        GSmat = np.empty((G, Sp, nc))
-        for i, b in enumerate(batches):
-            Lmat[i, :S] = b.L
-            Lmat[i, S:] = b.L[-1]
-            GSmat[i, :S] = b.gscale
-            GSmat[i, S:] = b.gscale[-1]
-
-        ndev = _resolve_shard(shard if shard is not None else self.shard,
-                              G)
-        mesh = _device_mesh(ndev) if ndev else None
-        if backend == "segment":
-            from jax.experimental import enable_x64
-            with enable_x64():
-                jnp = _jax().numpy
-                arrs = self._arrays("segment")
-                fwd = _get_forward("segment", compute_lam, multi=True,
-                                   mesh=mesh)
-                T, lam = fwd(*arrs, jnp.asarray(Lmat), jnp.asarray(GSmat))
-                T = np.asarray(T)[:, :S]
-                lam = np.asarray(lam)[:, :S]
-        elif backend == "pallas":
-            jnp = _jax().numpy
-            arrs = self._arrays("pallas")
-            fwd = _get_forward("pallas", compute_lam, multi=True, mesh=mesh)
-            T, lam = fwd(*arrs, jnp.asarray(Lmat, dtype=jnp.float32),
-                         jnp.asarray(GSmat, dtype=jnp.float32))
-            T = np.asarray(T).astype(np.float64)[:, :S]
-            lam = np.asarray(lam).astype(np.float64)[:, :S]
-        self.calls += 1
-
-        if compute_lam:
-            Lall = np.stack([b.L for b in batches])            # [G, S, nc]
-            rho = np.where(T[:, :, None] > 0,
-                           Lall * lam / np.maximum(T[:, :, None], 1e-300),
-                           0.0)
-        else:
-            lam, rho = None, None
-        # np.array: np.asarray of a jax buffer is a read-only view; results
-        # must be writable (and consistent with the writable cache-hit copies)
-        res = MultiSweepResult(T=np.array(T),
-                               lam=None if lam is None else np.array(lam),
-                               rho=rho, scenarios=batches,
-                               names=self.names, backend=backend)
-        if cache is not None:
-            # store a private copy so caller mutations never poison hits
-            cache.put(key, dataclasses.replace(
-                res, T=res.T.copy(),
-                lam=None if res.lam is None else res.lam.copy(),
-                rho=None if res.rho is None else res.rho.copy()))
-        return res
+        res = self._eng.run(scenarios=scenarios, compute_lam=compute_lam,
+                            backend=backend, shard=shard,
+                            use_cache=use_cache, costs=costs)
+        if "K" in res.axes:
+            return res
+        return MultiSweepResult(T=res.T, lam=res.lam, rho=res.rho,
+                                scenarios=res.scenarios, names=res.names,
+                                backend=res.backend,
+                                from_cache=res.from_cache)
 
 
 # -- lockstep-batched bisections (the dag.py loops, one engine call/round) ----

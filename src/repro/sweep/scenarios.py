@@ -189,7 +189,9 @@ def sweep_variants(variants: Sequence[GraphVariant],
                    backend: str = "segment", compute_lam: bool = True,
                    batched: bool = True, max_inflation: float = 64.0,
                    stats: Optional[dict] = None, cache="default") -> dict:
-    """Run the whole variant study batched → {name: SweepResult}.
+    """Run the whole variant study batched → {name: Result} (one
+    :class:`~repro.sweep.api.Result` per variant, scenario axis only —
+    attribute-compatible with the legacy per-variant ``SweepResult``).
 
     ``batch_of(variant)`` builds the tensor-batchable sub-grid for that
     variant (base points can differ per variant; latency-class counts can
@@ -209,19 +211,19 @@ def sweep_variants(variants: Sequence[GraphVariant],
     disable result memoization (e.g. benchmarks that count compiled
     dispatches), or the default shared cache.
     """
+    from .api import Engine, ExecPolicy  # avoid cycle
     from .cache import DEFAULT_CACHE
-    from .compile import compile_plan, group_plans, pack_plans
-    from .engine import MultiSweepEngine, SweepEngine  # avoid cycle
+    from .compile import compile_plan, group_plans
 
     if cache == "default":
         cache = DEFAULT_CACHE
+    policy = ExecPolicy(backend=backend, cache=cache)
 
     if not batched:
         out = {}
         calls = 0
         for v in variants:
-            eng = SweepEngine(v.graph, v.params, backend=backend,
-                              cache=cache)
+            eng = Engine(v.graph, params=v.params, policy=policy)
             out[v.name] = eng.run(batch_of(v), compute_lam=compute_lam)
             calls += eng.calls
         if stats is not None:
@@ -233,10 +235,8 @@ def sweep_variants(variants: Sequence[GraphVariant],
     results: dict = {}
     calls = 0
     for idx in groups:
-        eng = MultiSweepEngine(
-            multi=pack_plans([plans[i] for i in idx]),
-            names=[variants[i].name for i in idx], backend=backend,
-            cache=cache)
+        eng = Engine([plans[i] for i in idx],
+                     names=[variants[i].name for i in idx], policy=policy)
         res = eng.run([batch_of(variants[i]) for i in idx],
                       compute_lam=compute_lam)
         results.update(res.split())

@@ -46,7 +46,8 @@ def test_curve_matches_direct_engine(svc):
                                       deltas=[0.0, 15.0, 30.0]))
     assert resp.ok, resp.error
     v = svc._variants["algo=ring"]
-    ref = sweep.SweepEngine(v.graph, v.params, cache=None).run(
+    ref = sweep.Engine(v.graph, params=v.params,
+                       policy=sweep.ExecPolicy(cache=None)).run(
         sweep.latency_grid(v.params, [0.0, 15.0, 30.0]))
     np.testing.assert_array_equal(resp.payload["T"], ref.T)
     np.testing.assert_array_equal(resp.payload["lam"], ref.lam[:, 0])
@@ -191,6 +192,114 @@ def test_unbounded_tolerance_serializes_as_strict_json():
     out = json.loads(line)
     assert out["ok"], out["error"]
     assert out["payload"]["tolerance"]["0.01"] == "inf"
+
+
+def test_policy_block_per_request(svc):
+    """One ``policy`` block replaces the copy-pasted per-field overrides:
+    backend, λ mode etc. overlay the service policy for that query only."""
+    pal = svc.handle(AnalysisRequest(kind="curve", variant="algo=ring",
+                                     deltas=[0.0, 10.0],
+                                     policy={"backend": "pallas"}))
+    assert pal.ok, pal.error
+    assert pal.payload["backend"] == "pallas"
+    # relaxed λ mode per query: same T bit-for-bit (it IS the values
+    # program), λ equal to the exact backtrace away from breakpoints
+    fd = svc.handle(AnalysisRequest(kind="curve", variant="algo=ring",
+                                    deltas=[0.31, 9.73],
+                                    policy={"lam": "fd"}))
+    ex = svc.handle(AnalysisRequest(kind="curve", variant="algo=ring",
+                                    deltas=[0.31, 9.73]))
+    assert fd.ok and ex.ok
+    np.testing.assert_array_equal(fd.payload["T"], ex.payload["T"])
+    np.testing.assert_allclose(fd.payload["lam"], ex.payload["lam"],
+                               atol=1e-6)
+
+
+def test_policy_typo_rejected(svc):
+    """Regression: unknown keys anywhere in a request — including inside
+    the nested policy block — are rejected with the offending names (a
+    'bakend' typo must never execute silently under defaults)."""
+    resp = svc.handle(AnalysisRequest(kind="curve", variant="algo=ring",
+                                      policy={"bakend": "pallas"}))
+    assert not resp.ok and "bakend" in resp.error
+    # the protocol edge rejects it too (bad request, loop survives)
+    bad = json.loads(svc.handle_json(
+        '{"kind": "curve", "policy": {"bakend": "pallas"}}'))
+    assert not bad["ok"] and "bakend" in bad["error"]
+    # invalid values are caught by policy validation, not deferred
+    bad2 = json.loads(svc.handle_json(
+        '{"kind": "curve", "policy": {"backend": "cuda"}}'))
+    assert not bad2["ok"] and "backend" in bad2["error"]
+    # non-object policy blocks are a protocol error, not a crash
+    bad3 = json.loads(svc.handle_json('{"kind": "curve", "policy": 7}'))
+    assert not bad3["ok"]
+
+
+def test_service_honors_policy_cache():
+    """A policy carrying an explicit cache object IS the caller's cache
+    choice — the service must use it, not shadow it with a private one."""
+    from repro.core import synth
+    p = cluster_params(L_us=3.0, o_us=5.0)
+    shared = sweep.SweepCache(capacity=16)
+    s = AnalysisService(policy=sweep.ExecPolicy(cache=shared))
+    assert s.cache is shared
+    s.register_graph("g", synth.stencil2d(2, 2, 2, params=p), p)
+    resp = s.handle(AnalysisRequest(kind="curve", deltas=[0.0, 5.0]))
+    assert resp.ok and shared.stats.misses >= 1
+    # the explicit cache= kwarg still wins over the policy's
+    own = sweep.SweepCache(capacity=4)
+    s2 = AnalysisService(cache=own, policy=sweep.ExecPolicy(cache=shared))
+    assert s2.cache is own
+
+
+def test_socket_server_round_trip():
+    """The JSON-lines protocol over real transport: a subprocess serves
+    --demo on a TCP socket; two separate connections share ONE warm
+    service — the second connection's identical query is a cache hit."""
+    import os
+    import pathlib
+    import re
+    import socket
+    import subprocess
+    import sys
+
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    env = {**os.environ,
+           "PYTHONPATH": src + os.pathsep + os.environ.get("PYTHONPATH", "")}
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.analysis", "--demo",
+         "--serve-socket", "127.0.0.1:0"],
+        env=env, stderr=subprocess.PIPE, text=True)
+    try:
+        addr = None
+        for line in proc.stderr:            # warm line(s), then the bind
+            m = re.search(r"listening on ([\d.]+):(\d+)", line)
+            if m:
+                addr = (m.group(1), int(m.group(2)))
+                break
+        assert addr is not None, "server never reported a bound address"
+
+        def ask(payload: dict) -> dict:
+            with socket.create_connection(addr, timeout=120) as s:
+                f = s.makefile("rw", encoding="utf-8")
+                f.write(json.dumps(payload) + "\n")
+                f.flush()
+                return json.loads(f.readline())
+
+        q = {"kind": "curve", "variant": "algo=ring",
+             "deltas": [0.0, 10.0, 20.0]}
+        r1 = ask(q)
+        assert r1["ok"], r1.get("error")
+        assert r1["payload"]["from_cache"] is False
+        r2 = ask(q)                          # NEW connection, same service
+        assert r2["ok"] and r2["payload"]["from_cache"] is True
+        np.testing.assert_array_equal(r1["payload"]["T"],
+                                      r2["payload"]["T"])
+        bad = ask({"kind": "curve", "policy": {"bakend": "x"}})
+        assert not bad["ok"] and "bakend" in bad["error"]
+    finally:
+        proc.terminate()
+        proc.wait(timeout=30)
 
 
 def test_demo_service_cli_rank():

@@ -39,9 +39,16 @@ from repro.core import dag, lp, synth
 from repro.core.loggps import LogGPS, cluster_params, tpu_pod_params
 from repro import sweep
 
+# Shim coverage: this suite deliberately drives the deprecated
+# SweepEngine/MultiSweepEngine surface to pin the shims bit-identical to
+# the unified Engine — CI's -W error::DeprecationWarning is relaxed here.
+pytestmark = pytest.mark.filterwarnings("default::DeprecationWarning")
+
 BACKENDS = ("scalar", "segment", "pallas")
 OUTPUTS = ("T", "lam", "rho")
 PACKINGS = ("solo", "multi", "patched")
+#: populated-axis combinations of the unified Engine (S is always there)
+AXISSETS = ("S", "KS", "GS", "GKS")
 K = 3                                    # candidate cost blocks per case
 
 
@@ -332,6 +339,181 @@ def test_rejections():
                                    epos_d=None, epos_e=None)
     with pytest.raises(ValueError, match="edge-position"):
         stripped.patch_costs(c.extras)
-    # cost-batched runs don't shard
-    with pytest.raises(ValueError, match="shard"):
-        eng.run(c.batch, costs=base.patch_costs(c.extras), shard=True)
+    # the old costs × shard rejection is GONE: the unified engine shards
+    # whichever populated axis the policy picks (scenarios by default;
+    # single-device in-process, so this degrades to an unsharded run)
+    sharded = eng.run(c.batch, costs=base.patch_costs(c.extras), shard=True)
+    plain = eng.run(c.batch, costs=base.patch_costs(c.extras))
+    np.testing.assert_array_equal(sharded.T, plain.T)
+    # sharding an axis the query does not populate is still an error
+    eng2 = sweep.Engine(base, params=c.params,
+                        policy=sweep.ExecPolicy(shard=True, shard_axis="K",
+                                                cache=None))
+    with pytest.raises(ValueError, match="candidate axis"):
+        eng2.run(c.batch)
+    with pytest.raises(ValueError, match="graph axis"):
+        eng2.run(c.batch, costs=base.patch_costs(c.extras),
+                 shard_axis="G")
+
+
+# -- the unified Engine: full G×K×S populated-axis matrix ---------------------
+
+def _bucketable_cases():
+    """The single-class cases share nclass and can ride one graph axis."""
+    cs = [c for c in CASES if c.params.nclass == 1][:2]
+    assert len(cs) == 2
+    return cs
+
+
+@pytest.fixture(scope="module")
+def unified_ref():
+    """Legacy-path references: per (case, k) a SOLO run of a plan REBUILT
+    with cost block k (the equivalent legacy solo/rebuild runs every
+    populated-axis combination must reproduce), per backend."""
+    ref = {}
+    for c in _bucketable_cases():
+        for be in ("segment", "pallas"):
+            solo = sweep.SweepEngine(c.g, c.params, backend=be,
+                                     cache=None).run(c.batch)
+            ref[(c.name, be, None)] = solo
+            for k in range(K):
+                reb = sweep.compile_plan(c.g, c.params,
+                                         extra_edge_cost=c.extras[k])
+                ref[(c.name, be, k)] = sweep.SweepEngine(
+                    compiled=reb, params=c.params, backend=be,
+                    cache=None).run(c.batch)
+    return ref
+
+
+@pytest.mark.parametrize("axisset", AXISSETS)
+@pytest.mark.parametrize("backend", ("segment", "pallas"))
+def test_unified_axis_matrix(backend, axisset, unified_ref):
+    """Every populated-axis combination of the unified Engine against the
+    equivalent legacy-path runs: segment rows bit-equal, pallas ≤1e-5
+    relative — T, λ and ρ alike.  The G×K×S cell is the combination NO
+    legacy engine supported (per-graph candidate axes on a packed graph
+    axis); its reference is the cartesian product of solo rebuild runs."""
+    cases = _bucketable_cases()
+    pol = sweep.ExecPolicy(backend=backend, cache=None)
+    has_G, has_K = "G" in axisset, "K" in axisset
+
+    if has_G:
+        eng = sweep.Engine([sweep.compile_plan(c.g, c.params) for c in cases],
+                           names=[c.name for c in cases], policy=pol)
+        targets = cases
+    else:
+        targets = cases[:1]
+        eng = sweep.Engine(sweep.compile_plan(targets[0].g,
+                                              targets[0].params),
+                           params=targets[0].params, policy=pol)
+
+    q = sweep.Query(
+        scenarios=(targets[0].batch if not has_G
+                   else [c.batch for c in targets]),
+        costs=(None if not has_K
+               else (targets[0].extras if not has_G
+                     else [c.extras for c in targets])))
+    res = eng.run(q)
+    assert res.axes == ((("G",) if has_G else ())
+                        + (("K",) if has_K else ()) + ("S",))
+    assert res.backend == backend
+
+    def check(got_T, got_lam, got_rho, ref, name):
+        if backend == "segment":
+            np.testing.assert_array_equal(got_T, ref.T, err_msg=name)
+            np.testing.assert_array_equal(got_lam, ref.lam, err_msg=name)
+            np.testing.assert_array_equal(got_rho, ref.rho, err_msg=name)
+        else:
+            np.testing.assert_allclose(got_T, ref.T, rtol=1e-5,
+                                       atol=1e-7, err_msg=name)
+            np.testing.assert_allclose(got_lam, ref.lam, rtol=1e-5,
+                                       atol=1e-5, err_msg=name)
+            np.testing.assert_allclose(got_rho, ref.rho, rtol=1e-4,
+                                       atol=1e-5, err_msg=name)
+
+    for gi, c in enumerate(targets):
+        lead = (gi,) if has_G else ()
+        if has_K:
+            for k in range(K):
+                idx = lead + (k,)
+                check(res.T[idx], res.lam[idx], res.rho[idx],
+                      unified_ref[(c.name, backend, k)],
+                      f"{c.name}/k={k}/{axisset}")
+        else:
+            check(res.T[lead] if lead else res.T,
+                  res.lam[lead] if lead else res.lam,
+                  res.rho[lead] if lead else res.rho,
+                  unified_ref[(c.name, backend, None)],
+                  f"{c.name}/{axisset}")
+
+
+def test_unified_engine_shards_any_axis():
+    """Sharded G and K (and S) axes on a forced multi-device CPU mesh are
+    bit-equal to the single-device run, for the full G×K×S query on both
+    backends.  Subprocess: the XLA device-count flag must be set before
+    jax initializes."""
+    import os
+    import pathlib
+    import subprocess
+    import sys
+    prog = (
+        "import numpy as np, jax\n"
+        "assert len(jax.devices()) == 2, jax.devices()\n"
+        "from repro.core import synth\n"
+        "from repro.core.loggps import cluster_params\n"
+        "from repro import sweep\n"
+        "p = cluster_params(L_us=3.0, o_us=5.0)\n"
+        "gs = [synth.stencil2d(3, 3, 4, params=p, jitter=0.1, seed=s)\n"
+        "      for s in (1, 2)]\n"
+        "rng = np.random.default_rng(0)\n"
+        "exs = [np.where(g.ebytes[None] > 0,\n"
+        "                rng.uniform(0, 5, (4, g.num_edges)), 0.0)\n"
+        "       for g in gs]\n"
+        "grid = sweep.latency_grid(p, np.linspace(0.0, 40.0, 8))\n"
+        "eng = sweep.Engine([sweep.compile_plan(g, p) for g in gs],\n"
+        "                   policy=sweep.ExecPolicy(cache=None))\n"
+        "q = sweep.Query(scenarios=grid, costs=exs)\n"
+        "for be in ('segment', 'pallas'):\n"
+        "    base = eng.run(q, backend=be)\n"
+        "    for ax in ('G', 'K', 'S'):\n"
+        "        sh = eng.run(q, backend=be, shard=True, shard_axis=ax)\n"
+        "        assert np.array_equal(base.T, sh.T), (be, ax)\n"
+        "        assert np.array_equal(base.lam, sh.lam), (be, ax)\n"
+        "        assert np.array_equal(base.rho, sh.rho), (be, ax)\n"
+        "print('OK')\n"
+    )
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    env = {**os.environ,
+           "PYTHONPATH": src + os.pathsep + os.environ.get("PYTHONPATH", ""),
+           "XLA_FLAGS": (os.environ.get("XLA_FLAGS", "")
+                         + " --xla_force_host_platform_device_count=2")}
+    res = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert res.returncode == 0 and res.stdout.strip() == "OK", res.stderr
+
+
+def test_shims_bit_identical_to_engine():
+    """The deprecation contract: SweepEngine/MultiSweepEngine delegate to
+    the unified Engine and stay bit-identical — and they DO warn."""
+    c = CASES[0]
+    with pytest.warns(DeprecationWarning, match="SweepEngine is deprecated"):
+        leg = sweep.SweepEngine(c.g, c.params, cache=None)
+    new = sweep.Engine(c.g, params=c.params,
+                       policy=sweep.ExecPolicy(cache=None))
+    a, b = leg.run(c.batch), new.run(c.batch)
+    np.testing.assert_array_equal(a.T, b.T)
+    np.testing.assert_array_equal(a.lam, b.lam)
+    np.testing.assert_array_equal(a.rho, b.rho)
+    cases = _bucketable_cases()
+    with pytest.warns(DeprecationWarning,
+                      match="MultiSweepEngine is deprecated"):
+        mleg = sweep.MultiSweepEngine([(x.g, x.params) for x in cases],
+                                      names=[x.name for x in cases],
+                                      cache=None)
+    mnew = sweep.Engine([(x.g, x.params) for x in cases],
+                        names=[x.name for x in cases],
+                        policy=sweep.ExecPolicy(cache=None))
+    ma = mleg.run([x.batch for x in cases])
+    mb = mnew.run([x.batch for x in cases])
+    np.testing.assert_array_equal(ma.T, mb.T)
+    np.testing.assert_array_equal(ma.lam, mb.lam)

@@ -125,7 +125,7 @@ def _placement_fixture():
         phi = placement.ArchTopology.two_tier(P, 4, L_fast=1.0, L_slow=20.0,
                                               G_fast=1e-5, G_slow=4e-5)
         base = sweep_mod.compile_plan(g)
-        eng = sweep_mod.SweepEngine(compiled=base, cache=None)
+        eng = sweep_mod.Engine(base, policy=sweep_mod.ExecPolicy(cache=None))
         batch = sweep_mod.ScenarioBatch(L=np.asarray([[0.0], [5.0], [10.0]]),
                                         gscale=np.ones((3, 1)))
         _PATCH_CACHE["fix"] = (g, phi, base, eng, batch)
@@ -152,7 +152,8 @@ def test_patched_costs_bit_equal_rebuilt_random_swaps(swaps):
     res = eng.run(batch, costs=base.patch_costs(np.stack(extras)))
     for k, ex in enumerate(extras):
         reb = sweep_mod.compile_plan(g, extra_edge_cost=ex)
-        ref = sweep_mod.SweepEngine(compiled=reb, cache=None).run(batch)
+        ref = sweep_mod.Engine(
+            reb, policy=sweep_mod.ExecPolicy(cache=None)).run(batch)
         np.testing.assert_array_equal(res.T[k], ref.T)
         np.testing.assert_array_equal(res.lam[k], ref.lam)
         np.testing.assert_array_equal(res.rho[k], ref.rho)

@@ -17,6 +17,12 @@ from repro import sweep
 from repro.sweep import cache as sweep_cache
 from repro.sweep import engine as sweep_engine
 
+# Shim coverage: this file deliberately exercises the deprecated
+# SweepEngine/MultiSweepEngine surface (feature regressions must keep
+# passing on the legacy entry points) — CI's -W error::DeprecationWarning
+# is relaxed for it.
+pytestmark = pytest.mark.filterwarnings("default::DeprecationWarning")
+
 
 @pytest.fixture(scope="module")
 def params():
@@ -786,3 +792,17 @@ def test_placement_patch_stats_and_cache(params):
     assert cache.stats.patched_misses > 0
     placement.place(g, phi, params=zero, pi0=pi0.copy(), cache=cache)
     assert cache.stats.patched_hits >= cache.stats.patched_misses
+
+
+def test_shim_forwards_max_dense_bytes(params):
+    """A class-level MAX_DENSE_BYTES override on the legacy shim must
+    reach the unified engine's pallas dense-size guard."""
+    g = synth.stencil2d(2, 2, 2, params=params)
+
+    class TinyEngine(sweep.SweepEngine):
+        MAX_DENSE_BYTES = 1            # nothing fits
+
+    eng = TinyEngine(g, params, cache=None)
+    with pytest.raises(ValueError, match="dense pallas backend"):
+        eng.run(sweep.latency_grid(params, [0.0]), backend="pallas",
+                compute_lam=False)
