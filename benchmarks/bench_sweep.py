@@ -250,8 +250,9 @@ def placement_patch(out, smoke: bool = False):
       candidate swap of every step is evaluated by patching Φ costs into
       the warm plan (``stats["plan_compiles"] == 1``);
     * after the first search warmed the XLA program, a re-run adds ZERO
-      compiled programs (the jit cache for the candidate-cost forward
-      stays at one entry);
+      compiled programs (a :class:`repro.obs.CompileWatcher` scoped to
+      the candidate-cost forward cell — the same recompile definition
+      ``Engine.run`` reports against in production);
     * the final mapping and objective history are bit-identical to the
       rebuild loop (K fresh CompiledPlans per step).
 
@@ -259,10 +260,10 @@ def placement_patch(out, smoke: bool = False):
     speedup over the rebuild loop (wall-clock — not asserted in CI).
     """
     import jax  # noqa: F401 — the engine path needs it; fail loud here
+    from repro import obs
     from repro.core import placement
     from repro.sweep import ScenarioBatch, compile_plan
     from repro.sweep.api import Engine, ExecPolicy
-    from repro.sweep import engine as sweep_engine
 
     P, iters, topk = (8, 4, 4) if smoke else (32, 12, 16)
     g, zero, phi, pi0 = _biased_placement_workload(P, iters)
@@ -274,14 +275,15 @@ def placement_patch(out, smoke: bool = False):
         repeats=1, warmup=0)
     # the candidate-cost forward cell the loop compiled (vertex-view patch
     # on the segment backend): its program count must not grow on re-runs
-    fwd = sweep_engine._get_forward("segment", False,
-                                    costs=(0, None, None, None, None))
-    n_prog = fwd._cache_size()
-    t_warm, _ = timeit(
-        lambda: placement.place(g, phi, params=zero, pi0=pi0.copy(),
-                                topk=topk, stats={}),
-        repeats=1, warmup=0)
-    assert fwd._cache_size() == n_prog, \
+    watcher = obs.CompileWatcher(cells=[obs.forward_cell(
+        "segment", False, costs=(0, None, None, None, None))])
+    n_prog = watcher.programs()
+    with watcher.watch("placement.rerun") as rec:
+        t_warm, _ = timeit(
+            lambda: placement.place(g, phi, params=zero, pi0=pi0.copy(),
+                                    topk=topk, stats={}),
+            repeats=1, warmup=0)
+    assert rec.new_programs == 0, \
         "placement re-run recompiled the candidate-cost forward"
     assert st_p["plan_compiles"] == 1, st_p
     assert st_p["scalar_fallbacks"] == 0, st_p
@@ -339,17 +341,21 @@ def unified_axes(out, smoke: bool = False):
     Asserted in BOTH modes (the ``--smoke`` CI gate):
 
     * re-running a warm query with different K and S sizes *inside the
-      padded envelope* adds ZERO new XLA programs (K and S are bucketed,
-      G/K/S compose in one jit cell — the combinatorial growth the old
-      two-engine split would have paid is gone);
+      padded envelope* adds ZERO new XLA programs, reported by the same
+      :class:`repro.obs.CompileWatcher` production uses (K and S are
+      bucketed, G/K/S compose in one jit cell — the combinatorial growth
+      the old two-engine split would have paid is gone);
     * the G×K×S segment result is bit-identical to the equivalent legacy
       solo/rebuild runs (spot-checked on one (g, k) slice here; the full
       matrix lives in tests/test_conformance.py);
     * relaxed λ (``ExecPolicy(lam="fd")``) never compiles a λ-bearing
       program — sensitivities at values-program compile cost (ratio ~1.0
-      vs the measured ~2.5-3× for bit-exact λ, see ``lam_compile``).
+      vs the measured ~2.5-3× for bit-exact λ, see ``lam_compile``);
+    * tracing on vs off returns bit-identical results (full mode also
+      asserts the ≤2% warm-path overhead budget — wall-clock, so never
+      asserted under ``--smoke``).
     """
-    from repro.sweep import engine as sweep_engine
+    from repro import obs
     from repro.sweep.api import Engine, ExecPolicy, Query
 
     p = cluster_params(L_us=3.0, o_us=5.0)
@@ -370,18 +376,18 @@ def unified_axes(out, smoke: bool = False):
     assert res.axes == ("G", "K", "S") and res.T.shape == (2, 3, n_sc)
 
     # the cell the query compiled: G present, vconst patched on K
-    fwd = sweep_engine._get_forward("segment", True, multi=True,
-                                    costs=(0, None, None, None, None))
-    n_prog = fwd._cache_size()
+    watcher = obs.CompileWatcher(cells=[obs.forward_cell(
+        "segment", True, multi=True, costs=(0, None, None, None, None))])
     # different K (3→4 pads to the same K bucket) and different S (within
     # the same scenario bucket): ZERO new programs
     extras4 = [np.concatenate([ex, ex[:1]]) for ex in extras]
     grid_small = sweep.latency_grid(p, np.linspace(0.0, 50.0,
                                                    max(n_sc - 1, 5)))
-    t_warm, res2 = timeit(lambda: eng.run(Query(scenarios=grid_small,
-                                                costs=extras4)),
-                          repeats=2, warmup=0)
-    assert fwd._cache_size() == n_prog, \
+    with watcher.watch("gks.warm_rerun") as rec:
+        t_warm, res2 = timeit(lambda: eng.run(Query(scenarios=grid_small,
+                                                    costs=extras4)),
+                              repeats=2, warmup=0)
+    assert rec.new_programs == 0, \
         "warm G×K×S re-run within the padded envelope recompiled"
 
     # legacy-equivalence spot check (bit-exact): graph 1, cost block 2
@@ -391,13 +397,37 @@ def unified_axes(out, smoke: bool = False):
     assert np.array_equal(res.lam[1, 2], ref.lam)
 
     # relaxed λ: fd mode reuses the values program — no λ cell ever built
-    lam_fwd = sweep_engine._get_forward("segment", True)
-    n_lam = lam_fwd._cache_size()
+    # (watcher scoped to the λ cell alone: the fresh fd engine legitimately
+    # compiles a *values* program for its expanded grid)
+    lam_watcher = obs.CompileWatcher(
+        cells=[obs.forward_cell("segment", True)])
     fd_eng = Engine(plans[0], params=p,
                     policy=ExecPolicy(lam="fd", cache=None))
-    t_fd, fd_res = timeit(lambda: fd_eng.run(grid), repeats=1, warmup=0)
+    with lam_watcher.watch("fd.lam") as lam_rec:
+        t_fd, fd_res = timeit(lambda: fd_eng.run(grid), repeats=1, warmup=0)
     assert fd_res.lam is not None
-    assert lam_fwd._cache_size() == n_lam, "fd λ built a λ program"
+    assert lam_rec.new_programs == 0, "fd λ built a λ program"
+
+    # observability gates: tracing on vs off must be bit-identical on the
+    # warm G×K×S path, and the span overhead must fit the ≤2% budget
+    # (wall-clock ratio: full mode only, CI machines can't promise it)
+    q = Query(scenarios=grid_small, costs=extras4)
+    was_enabled = obs.enabled()
+    try:
+        obs.disable()
+        t_off, res_off = timeit(lambda: eng.run(q), repeats=3, warmup=1)
+        obs.enable()
+        t_on, res_on = timeit(lambda: eng.run(q), repeats=3, warmup=1)
+    finally:
+        obs.enable() if was_enabled else obs.disable()
+    assert np.array_equal(res_on.T, res_off.T), \
+        "tracing changed the result tensor"
+    assert np.array_equal(res_on.lam, res_off.lam), \
+        "tracing changed the λ tensor"
+    overhead = t_on / t_off
+    if not smoke:
+        assert overhead <= 1.02, \
+            f"tracing overhead {overhead:.3f}x exceeds the 2% budget"
 
     out(csv_line("sweep.unified_axes.gks_cold", t_cold * 1e6,
                  f"G=2;K=3;S={n_sc};zero_recompile_rerun=1;"
@@ -406,6 +436,9 @@ def unified_axes(out, smoke: bool = False):
                  f"K=4;S={grid_small.S};new_xla_programs=0"))
     out(csv_line("sweep.unified_axes.fd_lam", t_fd * 1e6,
                  f"S={n_sc};lam_programs_compiled=0"))
+    out(csv_line("sweep.unified_axes.obs_overhead", t_on * 1e6,
+                 f"ratio_vs_untraced={overhead:.3f}x;"
+                 f"bit_identical=1;budget=1.02x"))
 
 
 SHARD_SMOKE_PROG = """
@@ -489,6 +522,14 @@ def main(argv=None):
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the records as JSON (uploaded as a "
                          "CI workflow artifact)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record repro.obs spans for the whole run and "
+                         "write a Chrome-trace/Perfetto JSON (open at "
+                         "https://ui.perfetto.dev)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the repro.obs metrics registry snapshot "
+                         "(cache hit rates, compile counts, envelope "
+                         "occupancy) as JSON after the run")
     args = ap.parse_args(argv)
     records: list = []
 
@@ -496,8 +537,20 @@ def main(argv=None):
         print(line)
         records.append(line)
 
+    from repro import obs
+    if args.trace:
+        obs.enable()
     print("name,us_per_call,derived")
     run(out, smoke=args.smoke)
+    if args.trace:
+        obs.TRACER.export(args.trace)
+        print(f"[bench_sweep] wrote {len(obs.TRACER.events())} spans "
+              f"to {args.trace}")
+    if args.metrics_json:
+        import json as _json
+        with open(args.metrics_json, "w") as f:
+            _json.dump(obs.metrics.snapshot(), f, indent=2)
+        print(f"[bench_sweep] wrote metrics snapshot to {args.metrics_json}")
     if args.json:
         import json
         import platform

@@ -21,7 +21,17 @@ Request/response API (JSON-friendly dataclasses)::
 Query kinds: ``curve`` (T/λ/ρ over ΔL), ``bandwidth`` (T over γ·G),
 ``tolerance`` (p%-degradation ΔL budgets), ``rank`` (variant ordering over
 a shared grid — one compiled call per shape bucket), ``placement``
-(Algorithm-3 rank-mapping suggestion on a two-tier Φ), ``stats``.
+(Algorithm-3 rank-mapping suggestion on a two-tier Φ), ``stats``,
+``metrics`` (the ``repro.obs`` registry snapshot + cache stats).
+
+Observability (``repro.obs``): every request carries a trace id — the
+client's ``trace`` field when present, a fresh id otherwise — echoed on
+the response, and every successful response carries ``timings``, a
+per-phase span breakdown (``analysis.<kind>`` plus the engine's
+``sweep.*`` spans) captured per-request without enabling tracing
+process-wide.  ``--metrics HOST:PORT`` serves the Prometheus text
+exposition at ``/metrics`` (JSON snapshot at ``/metrics.json``) on a
+daemon thread next to either serve loop.
 
 Execution policy rides each request as one ``policy`` block (parsed into a
 :class:`repro.sweep.api.ExecPolicy` — unknown keys are rejected with the
@@ -67,9 +77,18 @@ import numpy as np
 from repro.core import placement as placement_mod
 from repro.core.graph import ExecutionGraph
 from repro.core.loggps import LogGPS
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
 from repro.sweep import (Engine, ExecPolicy, GraphVariant,  # noqa: F401
                          SweepCache, group_plans, latency_grid,
                          bandwidth_grid, tolerance_batched)
+
+_REQUESTS = _obs_metrics.counter(
+    "analysis_requests_total", "Analysis requests by kind and outcome.",
+    labels=("kind", "ok"))
+_REQUEST_SECONDS = _obs_metrics.histogram(
+    "analysis_request_seconds", "Analysis request latency by kind.",
+    labels=("kind",))
 
 
 @dataclasses.dataclass
@@ -88,6 +107,8 @@ class AnalysisRequest:
     policy: Optional[dict] = None               # ExecPolicy block (wire fields)
     backend: Optional[str] = None               # legacy: overlays policy
     shard: Optional[int] = None                 # legacy: overlays policy
+    trace: Optional[str] = None                 # client trace id (echoed back;
+                                                # auto-stamped when absent)
 
     @staticmethod
     def from_json(line: str) -> "AnalysisRequest":
@@ -118,6 +139,10 @@ class AnalysisResponse:
     payload: dict
     elapsed_ms: float
     error: Optional[str] = None
+    trace: Optional[str] = None                 # request trace id (always set)
+    #: per-phase span breakdown {name: {"ms", "n"}} — ``analysis.<kind>``
+    #: plus the engine's ``sweep.*`` spans; None on pre-dispatch failures
+    timings: Optional[dict] = None
 
     def to_json(self) -> str:
         return json.dumps(_jsonable(dataclasses.asdict(self)),
@@ -382,29 +407,56 @@ class AnalysisService:
                 "cache": self.cache.stats.snapshot(),
                 "cache_entries": len(self.cache)}
 
+    def metrics(self, req: AnalysisRequest) -> dict:
+        """The process-global ``repro.obs`` registry snapshot — every
+        counter/gauge/histogram series (cache hit rates, request latency,
+        compile counts, envelope occupancy) in the same shape the
+        ``/metrics.json`` HTTP endpoint serves."""
+        return {"metrics": _obs_metrics.snapshot(),
+                "cache": self.cache.stats.snapshot(),
+                "trace_enabled": _obs_trace.TRACER.enabled}
+
     _KINDS = {"curve": curve, "bandwidth": bandwidth, "tolerance": tolerance,
-              "rank": rank, "placement": placement, "stats": stats}
+              "rank": rank, "placement": placement, "stats": stats,
+              "metrics": metrics}
 
     def handle(self, req: AnalysisRequest) -> AnalysisResponse:
         """Dispatch one request; errors come back as ``ok=False`` responses
-        (a malformed query must not take the serve loop down)."""
+        (a malformed query must not take the serve loop down).
+
+        Every response carries the request's trace id (``req.trace`` or a
+        fresh one) and — on dispatch — a per-phase ``timings`` breakdown
+        collected from this thread's spans, tracer enabled or not.
+        """
         t0 = time.perf_counter()
+        trace_id = req.trace or _obs_trace.new_trace_id()
         fn = self._KINDS.get(req.kind)
         if fn is None:
+            _REQUESTS.inc(kind="?", ok="false")
             return AnalysisResponse(
                 kind=req.kind, ok=False, payload={},
-                elapsed_ms=0.0,
+                elapsed_ms=0.0, trace=trace_id,
                 error=f"unknown kind {req.kind!r} "
                       f"(have {sorted(self._KINDS)})")
         try:
-            payload = fn(self, req)
+            with _obs_trace.collect() as spans, \
+                    _obs_trace.trace_context(trace_id), \
+                    _obs_trace.span(f"analysis.{req.kind}"):
+                payload = fn(self, req)
+            elapsed = time.perf_counter() - t0
+            _REQUESTS.inc(kind=req.kind, ok="true")
+            _REQUEST_SECONDS.observe(elapsed, kind=req.kind)
             return AnalysisResponse(
                 kind=req.kind, ok=True, payload=payload,
-                elapsed_ms=(time.perf_counter() - t0) * 1e3)
+                elapsed_ms=elapsed * 1e3, trace=trace_id,
+                timings=_obs_trace.summarize(spans))
         except Exception as e:  # noqa: BLE001 — serve loop must survive
+            elapsed = time.perf_counter() - t0
+            _REQUESTS.inc(kind=req.kind, ok="false")
+            _REQUEST_SECONDS.observe(elapsed, kind=req.kind)
             return AnalysisResponse(
                 kind=req.kind, ok=False, payload={},
-                elapsed_ms=(time.perf_counter() - t0) * 1e3,
+                elapsed_ms=elapsed * 1e3, trace=trace_id,
                 error=f"{type(e).__name__}: {e}")
 
     def handle_json(self, line: str) -> str:
@@ -482,6 +534,58 @@ def serve_socket(svc: AnalysisService, address: str, poll_s: float = 0.5):
     return srv
 
 
+# -- metrics transport ---------------------------------------------------------
+
+def serve_metrics(address: str):
+    """Serve the ``repro.obs`` metrics registry over HTTP on a daemon
+    thread: ``GET /metrics`` (and ``/``) returns the Prometheus text
+    exposition, ``GET /metrics.json`` the JSON snapshot.
+
+    ``address`` is ``host:port`` (port 0 picks a free one).  Prints
+    ``[analysis] metrics on http://<bound>/metrics`` to stderr once bound
+    (tests and scrape configs parse it).  Returns the server object (its
+    ``server_address`` carries the chosen port); the thread dies with the
+    process — metrics are a read-only side channel, never worth blocking
+    shutdown for.
+    """
+    import http.server
+    import threading
+
+    class Handler(http.server.BaseHTTPRequestHandler):
+        def do_GET(self):
+            path = self.path.split("?", 1)[0]
+            if path in ("/", "/metrics"):
+                body = _obs_metrics.render().encode("utf-8")
+                ctype = "text/plain; version=0.0.4; charset=utf-8"
+            elif path == "/metrics.json":
+                body = json.dumps(_jsonable(_obs_metrics.snapshot())) \
+                    .encode("utf-8")
+                ctype = "application/json"
+            else:
+                self.send_error(404)
+                return
+            self.send_response(200)
+            self.send_header("Content-Type", ctype)
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *a):            # scrapes are not log events
+            pass
+
+    host, port = address.rsplit(":", 1)
+    srv = http.server.ThreadingHTTPServer(
+        (host or "127.0.0.1", int(port)), Handler)
+    srv.daemon_threads = True
+    bound = "%s:%d" % srv.server_address[:2]
+    t = threading.Thread(target=srv.serve_forever, daemon=True,
+                         name="analysis-metrics")
+    t.start()
+    print(f"[analysis] metrics on http://{bound}/metrics",
+          file=sys.stderr, flush=True)
+    return srv
+
+
 # -- CLI ----------------------------------------------------------------------
 
 def _demo_service(backend: str) -> AnalysisService:
@@ -514,6 +618,11 @@ def main(argv=None):
                          "host:port (TCP, port 0 = pick free) or a "
                          "filesystem path (UNIX); connections share one "
                          "warm service + result cache")
+    ap.add_argument("--metrics", default=None, metavar="HOST:PORT",
+                    help="serve the repro.obs metrics registry over HTTP "
+                         "(Prometheus text at /metrics, JSON at "
+                         "/metrics.json) on a daemon thread next to "
+                         "either serve loop; port 0 picks a free one")
     ap.add_argument("--query", default=None,
                     help="one-shot query kind (curve/tolerance/rank/...)")
     ap.add_argument("--variant", default=None)
@@ -530,11 +639,15 @@ def main(argv=None):
         raise SystemExit("no workload source: pass --demo (or embed "
                          "AnalysisService in your own driver)")
     svc = _demo_service(args.backend)
-    t0 = time.time()
+    t0 = time.perf_counter()
     info = svc.warm()
     print(f"[analysis] warmed {info['variants']} variants into "
-          f"{info['buckets']} shape bucket(s) in {time.time() - t0:.2f}s",
+          f"{info['buckets']} shape bucket(s) in "
+          f"{time.perf_counter() - t0:.2f}s",
           file=sys.stderr)
+
+    if args.metrics:
+        serve_metrics(args.metrics)
 
     if args.serve_socket:
         serve_socket(svc, args.serve_socket)

@@ -1,0 +1,38 @@
+"""repro.obs — observability for the sweep engine and analysis service.
+
+Three pieces, designed to sit permanently on the hot path:
+
+* :mod:`repro.obs.trace` — span tracer (monotonic clocks, thread-local
+  nesting, per-request ``collect()`` sinks) with Chrome-trace/Perfetto
+  JSON export.  Disabled by default; disabled spans are a shared no-op
+  object, so instrumented code pays ~nothing until someone turns it on.
+* :mod:`repro.obs.metrics` — process-global registry of counters /
+  gauges / histograms with a Prometheus text renderer and a JSON
+  snapshot.  Always on (per-query increments only).
+* :mod:`repro.obs.compile` — :class:`CompileWatcher`, the supported
+  XLA-recompile accounting shared by ``bench_sweep`` and ``Engine.run``.
+
+Typical use::
+
+    from repro import obs
+
+    obs.enable()                       # global span buffer on
+    eng.run(query)                     # sweep.* spans recorded
+    obs.TRACER.export("trace.json")    # open in https://ui.perfetto.dev
+
+    with obs.collect() as spans:       # per-request capture, tracer off
+        eng.run(query)
+    obs.trace.summarize(spans)         # {name: {"ms": ..., "n": ...}}
+
+    print(obs.metrics.render())        # Prometheus text exposition
+
+``launch.analysis`` wires all three into the service: every JSON-lines
+request gets a trace id, every response a per-phase ``timings``
+breakdown, and ``--metrics HOST:PORT`` serves ``/metrics`` over HTTP.
+"""
+
+from . import metrics, trace  # noqa: F401
+from .compile import WATCHER, CompileEvent, CompileWatcher, forward_cell  # noqa: F401
+from .metrics import REGISTRY  # noqa: F401
+from .trace import (TRACER, SpanEvent, collect, disable, enable,  # noqa: F401
+                    enabled, new_trace_id, span, trace_context)

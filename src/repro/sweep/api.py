@@ -43,9 +43,14 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import time
 from typing import Optional, Sequence, Union
 
 import numpy as np
+
+from repro.obs import metrics as _obs_metrics
+from repro.obs.compile import WATCHER as _WATCHER
+from repro.obs.trace import span as _span
 
 from . import engine as _eng
 from .cache import DEFAULT_CACHE, SweepCache, query_key
@@ -60,6 +65,15 @@ POLICY_WIRE_FIELDS = ("backend", "shard", "shard_axis", "lam", "fd_eps",
                       "dtype")
 
 _OUTPUTS = ("T", "lam", "rho")
+
+_QUERIES = _obs_metrics.counter(
+    "sweep_queries_total", "Engine.run calls by backend/axes/cache outcome.",
+    labels=("backend", "axes", "cache"))
+_OCCUPANCY = _obs_metrics.gauge(
+    "sweep_envelope_occupancy",
+    "Fraction of the padded envelope carrying real work (1 - padding "
+    "waste), per batch axis, as of the last uncached dispatch.",
+    labels=("axis",))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -337,6 +351,7 @@ class Engine:
         self.calls = 0                # compiled dispatches (cache hits excluded)
         self._dev: dict = {}
         self._warned: set = set()     # per-instance warn-once registry
+        self._occupancy: Optional[float] = None   # slot-occupancy memo
 
     # -- introspection -------------------------------------------------------
     @property
@@ -545,32 +560,41 @@ class Engine:
                 kind = "segment"
                 pol = dataclasses.replace(pol, backend="segment")
 
-        batches = self._batches(scenarios)
-        cbs = self._costs(costs, kind)
+        with _span("sweep.canonicalize"):
+            batches = self._batches(scenarios)
+        if costs is not None:
+            with _span("sweep.cost_patch", backend=kind):
+                cbs = self._costs(costs, kind)
+        else:
+            cbs = None
         has_G = self.multi is not None
         has_K = cbs is not None
         cache = pol.cache if use_cache else None
+        axes_s = ("G" if has_G else "") + ("K" if has_K else "") + "S"
 
         # -- cache lookup ----------------------------------------------------
         key = None
         if cache is not None:
-            fields = (_eng._SEG_COST_FIELDS if kind == "segment"
-                      else _eng._PAL_COST_FIELDS)
-            cost_hash = None
-            if has_K:
-                # hash only the tensors this backend consumes: a raw-extras
-                # run and a full patch_costs() of the same extras collide
-                hashes = [cb.content_hash(fields=fields) for cb in cbs]
-                cost_hash = (hashes[0] if len(hashes) == 1
-                             else hashlib.sha1(
-                                 "|".join(hashes).encode()).hexdigest())
-            ph = (self.plan.content_hash() if not has_G
-                  else self.multi.content_hash())
-            key = query_key(ph, batches, want_lam, kind, cost_hash,
-                            lam_mode=pol.lam if want_lam else "exact",
-                            fd_eps=pol.fd_eps)
-            hit = cache.get(key, patched=has_K)
+            with _span("sweep.cache_lookup", axes=axes_s):
+                fields = (_eng._SEG_COST_FIELDS if kind == "segment"
+                          else _eng._PAL_COST_FIELDS)
+                cost_hash = None
+                if has_K:
+                    # hash only the tensors this backend consumes: a
+                    # raw-extras run and a full patch_costs() of the same
+                    # extras collide
+                    hashes = [cb.content_hash(fields=fields) for cb in cbs]
+                    cost_hash = (hashes[0] if len(hashes) == 1
+                                 else hashlib.sha1(
+                                     "|".join(hashes).encode()).hexdigest())
+                ph = (self.plan.content_hash() if not has_G
+                      else self.multi.content_hash())
+                key = query_key(ph, batches, want_lam, kind, cost_hash,
+                                lam_mode=pol.lam if want_lam else "exact",
+                                fd_eps=pol.fd_eps)
+                hit = cache.get(key, patched=has_K)
             if hit is not None:
+                _QUERIES.inc(backend=kind, axes=axes_s, cache="hit")
                 # copy the arrays (callers may mutate results in place) and
                 # restamp scenarios/names: the key is content-addressed, so
                 # the hit may come from an engine naming the plans
@@ -580,6 +604,8 @@ class Engine:
                                         else batches),
                              names=self.names, from_cache=True)
 
+        _QUERIES.inc(backend=kind, axes=axes_s,
+                     cache="miss" if cache is not None else "off")
         res = self._run_uncached(batches, cbs, want_lam, fd, kind, pol)
         if cache is not None:
             # store a private copy: caller mutation of the returned arrays
@@ -609,21 +635,32 @@ class Engine:
 
         Sext = S * (nc + 1) if fd else S
         Sp = _bucket(Sext, lo=4)
-        if not has_G:
-            L0, G0 = expand(batches[0].L, batches[0].gscale)
-            Lmat = np.repeat(L0[-1:], Sp, axis=0)
-            Lmat[:Sext] = L0
-            GSmat = np.repeat(G0[-1:], Sp, axis=0)
-            GSmat[:Sext] = G0
-        else:
-            Lmat = np.empty((G, Sp, nc))
-            GSmat = np.empty((G, Sp, nc))
-            for i, b in enumerate(batches):
-                L0, G0 = expand(b.L, b.gscale)
-                Lmat[i, :Sext] = L0
-                Lmat[i, Sext:] = L0[-1]
-                GSmat[i, :Sext] = G0
-                GSmat[i, Sext:] = G0[-1]
+        with _span("sweep.stage", backend=kind):
+            if not has_G:
+                L0, G0 = expand(batches[0].L, batches[0].gscale)
+                Lmat = np.repeat(L0[-1:], Sp, axis=0)
+                Lmat[:Sext] = L0
+                GSmat = np.repeat(G0[-1:], Sp, axis=0)
+                GSmat[:Sext] = G0
+            else:
+                Lmat = np.empty((G, Sp, nc))
+                GSmat = np.empty((G, Sp, nc))
+                for i, b in enumerate(batches):
+                    L0, G0 = expand(b.L, b.gscale)
+                    Lmat[i, :Sext] = L0
+                    Lmat[i, Sext:] = L0[-1]
+                    GSmat[i, :Sext] = G0
+                    GSmat[i, Sext:] = G0[-1]
+
+        # -- envelope occupancy: padding-waste gauges ------------------------
+        plan0 = self.plan if not has_G else self.multi
+        if self._occupancy is None:
+            vf = plan0.valid_flat
+            self._occupancy = float(np.count_nonzero(vf) / vf.size)
+        _OCCUPANCY.set(self._occupancy, axis="slots")
+        _OCCUPANCY.set(Sext / Sp, axis="S")
+        if has_K:
+            _OCCUPANCY.set(K / Kp, axis="K")
 
         # -- device sharding: any populated axis -----------------------------
         axis = pol.shard_axis
@@ -699,36 +736,54 @@ class Engine:
         if mesh is not None and axis != ("G" if has_G else "S"):
             fwd_kw["shard_axis"] = axis
 
-        if seg:
-            from jax.experimental import enable_x64
-            with enable_x64():
-                arrs = self._arrays("segment")
+        # watcher bracketing: any growth in the XLA program count across
+        # this dispatch is attributed to this query's signature (the
+        # np.asarray transfers inside the span block on jax's async
+        # dispatch, so the window covers compile + execute)
+        axes_s = ("G" if has_G else "") + ("K" if has_K else "") + "S"
+        nlv_p, Vmax, Dmax = plan0.vsrc.shape[-3:]
+        n_prog0 = _WATCHER.programs()
+        t0_ns = time.perf_counter_ns()
+        t0 = time.perf_counter()
+        with _span("sweep.execute", backend=kind, axes=axes_s):
+            if seg:
+                from jax.experimental import enable_x64
+                with enable_x64():
+                    arrs = self._arrays("segment")
+                    if has_K:
+                        cost_arrs = stage_costs(arrs)
+                        args = arrs[:2] + cost_arrs + arrs[7:]
+                    else:
+                        args = arrs
+                    fwd = _eng._get_forward("segment", want_lam_compiled,
+                                            has_G, False, mesh, **fwd_kw)
+                    T, lam = fwd(*args, jnp.asarray(Lmat),
+                                 jnp.asarray(GSmat))
+                    T = np.asarray(T)
+                    lam = np.asarray(lam)
+            else:
+                arrs = self._arrays("pallas")
                 if has_K:
                     cost_arrs = stage_costs(arrs)
-                    args = arrs[:2] + cost_arrs + arrs[7:]
+                    args = arrs[:3] + cost_arrs + arrs[7:]
                 else:
                     args = arrs
-                fwd = _eng._get_forward("segment", want_lam_compiled,
+                fwd = _eng._get_forward("pallas", want_lam_compiled,
                                         has_G, False, mesh, **fwd_kw)
-                T, lam = fwd(*args, jnp.asarray(Lmat), jnp.asarray(GSmat))
-                T = np.asarray(T)
-                lam = np.asarray(lam)
-        else:
-            arrs = self._arrays("pallas")
-            if has_K:
-                cost_arrs = stage_costs(arrs)
-                args = arrs[:3] + cost_arrs + arrs[7:]
-            else:
-                args = arrs
-            fwd = _eng._get_forward("pallas", want_lam_compiled,
-                                    has_G, False, mesh, **fwd_kw)
-            T, lam = fwd(*args, jnp.asarray(Lmat, dtype=jnp.float32),
-                         jnp.asarray(GSmat, dtype=jnp.float32))
-            T = np.asarray(T).astype(np.float64)
-            lam = np.asarray(lam).astype(np.float64)
-            if has_G and has_K:                   # [K, G, ...] → [G, K, ...]
-                T = T.swapaxes(0, 1)
-                lam = lam.swapaxes(0, 1)
+                T, lam = fwd(*args, jnp.asarray(Lmat, dtype=jnp.float32),
+                             jnp.asarray(GSmat, dtype=jnp.float32))
+                T = np.asarray(T).astype(np.float64)
+                lam = np.asarray(lam).astype(np.float64)
+                if has_G and has_K:               # [K, G, ...] → [G, K, ...]
+                    T = T.swapaxes(0, 1)
+                    lam = lam.swapaxes(0, 1)
+        _WATCHER.attribute(
+            n_prog0, time.perf_counter() - t0, t0_ns=t0_ns,
+            backend=kind, axes=axes_s,
+            lam=("exact" if want_lam_compiled else
+                 "fd" if fd else "none"),
+            envelope=f"{nlv_p}x{Vmax}x{Dmax}", S=Sp,
+            **({"K": Kp} if has_K else {}), **({"G": G} if has_G else {}))
         self.calls += 1
 
         # -- slice padding, reduce fd, derive ρ ------------------------------
@@ -737,22 +792,25 @@ class Engine:
         T = T[idx]
         if want_lam_compiled:
             lam = lam[idx]
-        if fd:
-            Tr = T.reshape(T.shape[:-1] + (nc + 1, S))
-            T = Tr[..., 0, :]
-            lam = np.moveaxis((Tr[..., 1:, :] - T[..., None, :]) / h, -2, -1)
         if want_lam:
-            if not has_G:
-                Lb = batches[0].L
-                if has_K:
-                    Lb = Lb[None]
-            else:
-                Lb = np.stack([b.L for b in batches])
-                if has_K:
-                    Lb = Lb[:, None]
-            rho = np.where(T[..., None] > 0,
-                           Lb * lam / np.maximum(T[..., None], 1e-300),
-                           0.0)
+            # fd implies want_lam, so the reduction nests under the span
+            with _span("sweep.lam_backtrace", mode=pol.lam):
+                if fd:
+                    Tr = T.reshape(T.shape[:-1] + (nc + 1, S))
+                    T = Tr[..., 0, :]
+                    lam = np.moveaxis(
+                        (Tr[..., 1:, :] - T[..., None, :]) / h, -2, -1)
+                if not has_G:
+                    Lb = batches[0].L
+                    if has_K:
+                        Lb = Lb[None]
+                else:
+                    Lb = np.stack([b.L for b in batches])
+                    if has_K:
+                        Lb = Lb[:, None]
+                rho = np.where(T[..., None] > 0,
+                               Lb * lam / np.maximum(T[..., None], 1e-300),
+                               0.0)
         else:
             lam, rho = None, None
         axes = (("G",) if has_G else ()) + (("K",) if has_K else ()) + ("S",)

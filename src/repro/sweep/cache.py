@@ -17,10 +17,22 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 from collections import OrderedDict
 from typing import Optional, Sequence
 
 import numpy as np
+
+from repro.obs import metrics as _obs_metrics
+
+_HITS = _obs_metrics.counter(
+    "sweep_cache_hits_total", "Sweep result-cache hits.",
+    labels=("patched",))
+_MISSES = _obs_metrics.counter(
+    "sweep_cache_misses_total", "Sweep result-cache misses.",
+    labels=("patched",))
+_EVICTIONS = _obs_metrics.counter(
+    "sweep_cache_evictions_total", "Sweep result-cache LRU evictions.")
 
 
 def canonical_bytes(arr) -> tuple:
@@ -115,37 +127,56 @@ class CacheStats:
 
 
 class SweepCache:
-    """LRU map: result_key → SweepResult (or Multi/CostSweepResult)."""
+    """LRU map: result_key → SweepResult (or Multi/CostSweepResult).
+
+    Thread-safe: the analysis service's threaded socket server shares one
+    instance across connections, so every read-modify-write on the LRU
+    ``OrderedDict`` and the stats counters happens under one lock.
+    """
 
     def __init__(self, capacity: int = 64):
         self.capacity = capacity
         self._store: OrderedDict = OrderedDict()
         self.stats = CacheStats()
+        self._lock = threading.Lock()
 
     def get(self, key: str, patched: bool = False):
-        hit = self._store.get(key)
+        with self._lock:
+            hit = self._store.get(key)
+            if hit is None:
+                self.stats.misses += 1
+                self.stats.patched_misses += patched
+            else:
+                self._store.move_to_end(key)
+                self.stats.hits += 1
+                self.stats.patched_hits += patched
+        patched_s = "true" if patched else "false"
         if hit is None:
-            self.stats.misses += 1
-            self.stats.patched_misses += patched
+            _MISSES.inc(patched=patched_s)
             return None
-        self._store.move_to_end(key)
-        self.stats.hits += 1
-        self.stats.patched_hits += patched
+        _HITS.inc(patched=patched_s)
         return hit
 
     def put(self, key: str, value) -> None:
-        self._store[key] = value
-        self._store.move_to_end(key)
-        while len(self._store) > self.capacity:
-            self._store.popitem(last=False)
-            self.stats.evictions += 1
+        evicted = 0
+        with self._lock:
+            self._store[key] = value
+            self._store.move_to_end(key)
+            while len(self._store) > self.capacity:
+                self._store.popitem(last=False)
+                self.stats.evictions += 1
+                evicted += 1
+        if evicted:
+            _EVICTIONS.inc(evicted)
 
     def clear(self) -> None:
-        self._store.clear()
-        self.stats = CacheStats()
+        with self._lock:
+            self._store.clear()
+            self.stats = CacheStats()
 
     def __len__(self) -> int:
-        return len(self._store)
+        with self._lock:
+            return len(self._store)
 
 
 #: Shared default instance (engines opt out with ``cache=None`` or

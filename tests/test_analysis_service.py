@@ -309,3 +309,109 @@ def test_demo_service_cli_rank():
     resp = svc.handle(AnalysisRequest(kind="rank", deltas=[0.0, 40.0]))
     assert resp.ok, resp.error
     assert resp.payload["compiled_calls"] < 4   # packed, not per-variant
+
+
+def test_trace_id_and_timings_on_responses(svc):
+    """Every response carries a trace id (the client's, echoed, or a fresh
+    one) and successful dispatches carry the per-phase timings breakdown
+    — ``analysis.<kind>`` plus the engine's ``sweep.*`` spans."""
+    # a cache-missing query (unique deltas): the sweep spans must show up
+    resp = svc.handle(AnalysisRequest(kind="curve", variant="algo=ring",
+                                      deltas=[0.17, 7.39], trace="req-42"))
+    assert resp.ok, resp.error
+    assert resp.trace == "req-42"
+    assert "analysis.curve" in resp.timings
+    assert any(k.startswith("sweep.") for k in resp.timings), resp.timings
+    assert resp.timings["analysis.curve"]["n"] == 1
+    # auto-stamped when the client sends none; errors carry it too
+    resp2 = svc.handle(AnalysisRequest(kind="stats"))
+    assert resp2.trace and len(resp2.trace) == 16
+    bad = svc.handle(AnalysisRequest(kind="curve", variant="nope",
+                                     trace="req-43"))
+    assert not bad.ok and bad.trace == "req-43"
+    # the id and timings survive JSON serialization
+    out = json.loads(svc.handle_json(json.dumps(
+        {"kind": "curve", "variant": "algo=ring",
+         "deltas": [0.0, 10.0], "trace": "req-44"})))
+    assert out["trace"] == "req-44" and "analysis.curve" in out["timings"]
+
+
+def test_metrics_query_kind(svc):
+    """The ``metrics`` kind returns the process-global obs registry
+    snapshot — cache hit/miss series and request latency histograms."""
+    svc.handle(AnalysisRequest(kind="curve", variant="algo=ring"))
+    resp = svc.handle(AnalysisRequest(kind="metrics"))
+    assert resp.ok, resp.error
+    snap = resp.payload["metrics"]
+    assert "sweep_cache_hits_total" in snap
+    assert "analysis_requests_total" in snap
+    assert snap["analysis_request_seconds"]["type"] == "histogram"
+    curve_ok = [s for s in snap["analysis_requests_total"]["series"]
+                if s["labels"] == {"kind": "curve", "ok": "true"}]
+    assert curve_ok and curve_ok[0]["value"] >= 1
+    assert "hit_rate" in resp.payload["cache"]
+    assert resp.payload["trace_enabled"] in (True, False)
+    json.loads(resp.to_json())            # strictly serializable
+
+
+def test_metrics_endpoint_http_scrape():
+    """The Prometheus endpoint over a real subprocess round-trip: --demo
+    serves the socket protocol AND --metrics HTTP side by side; queries
+    through the socket move the series the scrape then reports."""
+    import os
+    import pathlib
+    import re
+    import socket
+    import subprocess
+    import sys
+    import urllib.request
+
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    env = {**os.environ,
+           "PYTHONPATH": src + os.pathsep + os.environ.get("PYTHONPATH", "")}
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.analysis", "--demo",
+         "--serve-socket", "127.0.0.1:0", "--metrics", "127.0.0.1:0"],
+        env=env, stderr=subprocess.PIPE, text=True)
+    try:
+        metrics_url = addr = None
+        for line in proc.stderr:        # warm → metrics bind → socket bind
+            m = re.search(r"metrics on (http://[\d.]+:\d+)/metrics", line)
+            if m:
+                metrics_url = m.group(1)
+            m = re.search(r"listening on ([\d.]+):(\d+)", line)
+            if m:
+                addr = (m.group(1), int(m.group(2)))
+                break
+        assert metrics_url and addr, "server never reported its addresses"
+
+        def ask(payload: dict) -> dict:
+            with socket.create_connection(addr, timeout=120) as s:
+                f = s.makefile("rw", encoding="utf-8")
+                f.write(json.dumps(payload) + "\n")
+                f.flush()
+                return json.loads(f.readline())
+
+        q = {"kind": "curve", "variant": "algo=ring",
+             "deltas": [0.0, 10.0], "trace": "scrape-1"}
+        r1 = ask(q)
+        assert r1["ok"] and r1["trace"] == "scrape-1"
+        r2 = ask(dict(q, trace="scrape-2"))   # same query → cache hit
+        assert r2["ok"] and r2["trace"] == "scrape-2"
+        assert r2["payload"]["from_cache"] is True
+
+        text = urllib.request.urlopen(metrics_url + "/metrics",
+                                      timeout=60).read().decode()
+        assert "# TYPE sweep_cache_hits_total counter" in text
+        assert re.search(r'sweep_cache_hits_total\{patched="false"\} [1-9]',
+                         text), text
+        assert 'analysis_requests_total{kind="curve",ok="true"} 2' in text
+        assert re.search(r'analysis_request_seconds_bucket\{kind="curve",'
+                         r'le="\+Inf"\} 2', text), text
+
+        js = json.loads(urllib.request.urlopen(
+            metrics_url + "/metrics.json", timeout=60).read().decode())
+        assert "analysis_request_seconds" in js
+    finally:
+        proc.terminate()
+        proc.wait(timeout=30)
