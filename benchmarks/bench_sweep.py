@@ -103,18 +103,27 @@ def variant_study(out, n_scenarios=STUDY_SCENARIOS):
     deltas = np.linspace(0.0, 100.0, n_scenarios)
     batch_of = lambda v: sweep.latency_grid(p, deltas)  # noqa: E731
 
+    import warnings
+
     for tag, lam in (("values", False), ("lam", True)):
         # cache=None: timings and call-count asserts must measure compiled
-        # dispatches, not content-hash hits from an earlier run
+        # dispatches, not content-hash hits from an earlier run.  This
+        # section deliberately times the deprecated sweep_variants shim
+        # (now a thin wrapper over Query(structure=)), so silence its
+        # DeprecationWarning — structure_patch times the new API directly.
         stats_pv, stats_b = {}, {}
-        t0 = time.perf_counter()
-        pv = sweep.sweep_variants(variants, batch_of, batched=False,
-                                  compute_lam=lam, stats=stats_pv, cache=None)
-        t_pv = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        bat = sweep.sweep_variants(variants, batch_of, batched=True,
-                                   compute_lam=lam, stats=stats_b, cache=None)
-        t_b = time.perf_counter() - t0
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            t0 = time.perf_counter()
+            pv = sweep.sweep_variants(variants, batch_of, batched=False,
+                                      compute_lam=lam, stats=stats_pv,
+                                      cache=None)
+            t_pv = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            bat = sweep.sweep_variants(variants, batch_of, batched=True,
+                                       compute_lam=lam, stats=stats_b,
+                                       cache=None)
+            t_b = time.perf_counter() - t0
 
         # one compiled call per shape bucket, not one per variant
         assert stats_pv["calls"] == len(variants)
@@ -441,6 +450,154 @@ def unified_axes(out, smoke: bool = False):
                  f"bit_identical=1;budget=1.02x"))
 
 
+def structure_patch(out, smoke: bool = False):
+    """Zero-recompile topology study (the structural half of the PR-7
+    tentpole): a 4-variant collective study as ONE ``Query(structure=)``
+    dispatch on a :class:`repro.sweep.StructureBatch` envelope.
+
+    Asserted in BOTH modes (the ``--smoke`` CI gate):
+
+    * the whole 4-variant study compiles exactly ONE new XLA program — the
+      structure-batched forward cell — reported by the same
+      :class:`repro.obs.CompileWatcher` production uses;
+    * a DIFFERENT study on the same envelope (the variants reordered)
+      compiles ZERO more programs and returns the same rows, permuted,
+      bit for bit;
+    * every variant's T/λ/ρ row is bit-identical to a freshly rebuilt
+      per-variant plan run solo (the loop the batch replaced — it also
+      clocks the per-variant cost: one XLA compile per shape).
+    """
+    from repro import obs
+
+    p = cluster_params(L_us=3.0, o_us=5.0)
+    n_sc = 16 if smoke else STUDY_SCENARIOS
+    variants = sweep.collective_variants(
+        lambda a: synth.allreduce_chain(8, 2, params=p, algo=a),
+        list(STUDY_ALGOS), p)
+    grid = sweep.latency_grid(p, np.linspace(0.0, 60.0, n_sc))
+
+    plans = [sweep.compile_plan(v.graph, v.params) for v in variants]
+    sb = sweep.StructureBatch.from_plans(
+        plans, names=[v.name for v in variants])
+    eng = sweep.Engine(sb, policy=sweep.ExecPolicy(cache=None))
+    w = obs.CompileWatcher()
+    with w.watch("structure.cold") as cold:
+        t_cold, res = timeit(lambda: eng.run(grid), repeats=1, warmup=0)
+    assert cold.new_programs == 1, \
+        f"4-variant study built {cold.new_programs} XLA programs, want 1"
+    assert res.axes == ("B", "S") and res.T.shape == (len(variants), n_sc)
+
+    # a different study in the same envelope: reversed variant order →
+    # zero new programs, same rows permuted (bit-exact per member)
+    sb_rev = sweep.StructureBatch.from_plans(
+        plans[::-1], names=[v.name for v in variants[::-1]])
+    eng_rev = sweep.Engine(sb_rev, policy=sweep.ExecPolicy(cache=None))
+    with w.watch("structure.warm") as warm:
+        t_warm, res_rev = timeit(lambda: eng_rev.run(grid),
+                                 repeats=1, warmup=0)
+    assert warm.new_programs == 0, \
+        "second study on the warmed envelope recompiled"
+    assert np.array_equal(res_rev.T, res.T[::-1])
+
+    # the loop the batch replaced: per-variant rebuilds, bit-equal rows
+    t0 = time.perf_counter()
+    for i, (v, plan) in enumerate(zip(variants, plans)):
+        ref = sweep.Engine(plan, params=v.params,
+                           policy=sweep.ExecPolicy(cache=None)).run(grid)
+        assert np.array_equal(res.T[i], ref.T), v.name
+        assert np.array_equal(res.lam[i], ref.lam), v.name
+        assert np.array_equal(res.rho[i], ref.rho), v.name
+    t_pv = time.perf_counter() - t0
+
+    out(csv_line("sweep.structure_patch.study", t_cold * 1e6,
+                 f"variants={len(variants)};scenarios={n_sc};"
+                 f"xla_programs=1;bit_equal_rebuild=1"))
+    out(csv_line("sweep.structure_patch.warm", t_warm * 1e6,
+                 f"variants={len(variants)};new_xla_programs=0"))
+    out(csv_line("sweep.structure_patch.pervariant", t_pv * 1e6,
+                 f"compiles_per_shape=1;"
+                 f"cold_speedup={t_pv / t_cold:.1f}x"))
+
+
+def sparse_scale(out, smoke: bool = False):
+    """Slot-list sparse backend: largest graph at fixed memory (the sparse
+    half of the PR-7 tentpole).
+
+    Asserted in BOTH modes (the ``--smoke`` CI gate):
+
+    * the study graph's padded dense envelope is ≥4× its sparse slot-list
+      footprint — at the memory where the dense layout hits
+      ``Engine.MAX_DENSE_BYTES``, the sparse backend still holds a ≥4×
+      larger graph;
+    * sparse T/λ agree with the segment backend within 1e-5 relative
+      (measured bit-exact — tests/test_conformance.py pins equality);
+    * with the ceiling lowered under this graph's dense estimate, building
+      a dense engine warns (RuntimeWarning) and auto-switches to sparse —
+      the dense envelope is never allocated — and the switched engine's
+      results match the explicit sparse run bit for bit.
+    """
+    import warnings
+
+    p = cluster_params(L_us=3.0, o_us=5.0)
+    g = (synth.random_dag(np.random.default_rng(7), nranks=16, nops=1200,
+                          p_msg=0.6, params=p) if smoke
+         else synth.stencil2d(8, 8, 30, params=p))
+    est = sweep.estimate_dense_bytes(g)
+    sp = sweep.compile_sparse(g, p)
+    ratio = est / sp.sparse_bytes()
+    assert ratio >= 4.0, \
+        f"dense/sparse footprint ratio {ratio:.1f}x < 4x target"
+
+    n_sc = 8 if smoke else 64
+    grid = sweep.latency_grid(p, np.linspace(0.0, 40.0, n_sc))
+    eng_sp = sweep.Engine(sp, params=p, policy=sweep.ExecPolicy(
+        backend="sparse", cache=None))
+    t_sp, res_sp = timeit(lambda: eng_sp.run(grid),
+                          repeats=1 if smoke else 2, warmup=1)
+
+    # segment reference — feasible dense at bench scale, so correctness
+    # is checked on the SAME graph the sparse path evaluates
+    eng_seg = sweep.Engine(g, params=p, policy=sweep.ExecPolicy(cache=None))
+    t_seg, res_seg = timeit(lambda: eng_seg.run(grid),
+                            repeats=1 if smoke else 2, warmup=1)
+    rel = float(np.max(np.abs(res_sp.T - res_seg.T) /
+                       np.maximum(np.abs(res_seg.T), 1.0)))
+    assert rel <= 1e-5, f"sparse diverged from segment: {rel}"
+    bit = int(np.array_equal(res_sp.T, res_seg.T) and
+              np.array_equal(res_sp.lam, res_seg.lam))
+
+    # auto-switch: lower the ceiling under this graph's dense estimate —
+    # the engine must warn, switch to sparse, and never lay out dense
+    orig = sweep.Engine.MAX_DENSE_BYTES
+    try:
+        sweep.Engine.MAX_DENSE_BYTES = max(est // 4, 1)
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            t0 = time.perf_counter()
+            eng_auto = sweep.Engine(g, params=p,
+                                    policy=sweep.ExecPolicy(cache=None))
+            t_auto = time.perf_counter() - t0
+        assert any(issubclass(r.category, RuntimeWarning)
+                   and "sparse" in str(r.message) for r in rec), \
+            "auto-switch to sparse did not warn"
+        assert eng_auto.policy.backend == "sparse" and eng_auto.plan is None
+        res_auto = eng_auto.run(grid)
+        assert np.array_equal(res_auto.T, res_sp.T)
+    finally:
+        sweep.Engine.MAX_DENSE_BYTES = orig
+
+    out(csv_line(f"sweep.sparse_scale.{n_sc}", t_sp * 1e6,
+                 f"nv={g.num_vertices};ne={g.num_edges};"
+                 f"dense_bytes={est};sparse_bytes={sp.sparse_bytes()};"
+                 f"graph_per_memory={ratio:.1f}x;"
+                 f"rel_vs_segment={rel:.1e};bit_exact={bit}"))
+    out(csv_line(f"sweep.sparse_scale.segment_ref.{n_sc}", t_seg * 1e6,
+                 f"dense_bytes={est}"))
+    out(csv_line("sweep.sparse_scale.auto_switch", t_auto * 1e6,
+                 f"ceiling={max(est // 4, 1)};backend=sparse;"
+                 f"bit_equal_sparse=1"))
+
+
 SHARD_SMOKE_PROG = """
 import numpy as np
 from repro.core import synth
@@ -502,6 +659,8 @@ def run(out, smoke: bool = False):
         sharded(out, n_scenarios=16)
         placement_patch(out, smoke=True)
         unified_axes(out, smoke=True)
+        structure_patch(out, smoke=True)
+        sparse_scale(out, smoke=True)
         return
     single_graph(out)
     variant_study(out)
@@ -510,6 +669,8 @@ def run(out, smoke: bool = False):
     sharded(out, n_scenarios=64)
     placement_patch(out)
     unified_axes(out)
+    structure_patch(out)
+    sparse_scale(out)
 
 
 def main(argv=None):

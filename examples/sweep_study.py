@@ -46,13 +46,17 @@ def main():
     print(f"re-run from cache: {res2.from_cache}\n")
 
     # 4) collective-algorithm axis (Fig 10): the graph itself changes, so
-    #    each algorithm is a stamped variant with its own compiled plan
+    #    each algorithm is a compiled plan lifted onto a shared structure
+    #    envelope — the whole study is ONE XLA program (B × S axes)
     deltas = np.linspace(0.0, 100.0, 50)
     variants = sweep.collective_variants(
         lambda a: synth.allreduce_chain(16, 4, params=p, algo=a),
         ["ring", "recursive_doubling", "recursive_halving"], p)
-    out = sweep.sweep_variants(
-        variants, lambda v: sweep.latency_grid(p, deltas))
+    sb = sweep.StructureBatch.from_plans(
+        [sweep.compile_plan(v.graph, v.params) for v in variants],
+        names=[v.name for v in variants])
+    out = sweep.Engine(sb).run(
+        sweep.Query(scenarios=sweep.latency_grid(p, deltas))).split()
     print("allreduce algorithm under rising ICI latency (T µs):")
     print(f"  {'ΔL':>6} " + " ".join(f"{v.name:>24}" for v in variants))
     for k in (0, 24, 49):

@@ -219,6 +219,98 @@ def maxplus_matvec_argmax_batched_kernel(A, t, c, *, bm: int = 128,
     )(A, t, c)
 
 
+def _maxplus_slotlist_argmax_kernel(d_ref, t_ref, c_ref, o_ref, i_ref,
+                                    accv_ref, acck_ref, acci_ref,
+                                    *, n_e: int, bm: int, be: int):
+    im, je = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(je == 0)
+    def _init():
+        accv_ref[...] = jnp.full_like(accv_ref, NEG_INF)
+        acck_ref[...] = jnp.full_like(acck_ref, NEG_INF)
+        acci_ref[...] = jnp.full_like(acci_ref, -1)
+
+    d = d_ref[...]                       # [be, 1] int32 destination rows
+    cand = t_ref[...]                    # [be, K]
+    c = c_ref[...]                       # [be, K] tie key per slot
+    K = accv_ref.shape[1]
+    # which of this block's slots land in this row block
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bm, be), 0) + im * bm
+    hit = d[:, 0][None, :] == rows                   # [bm, be]
+    vals = jnp.where(hit[:, :, None], cand[None, :, :], NEG_INF)
+    # global slot ordinal (position in the full E axis)
+    eidx = jax.lax.broadcasted_iota(jnp.int32, (bm, be, K), 1) + je * be
+    # block-local lexicographic argmax of (value, key, ordinal), hits only —
+    # exact comparisons keep the cross-block merge associative
+    bv = jnp.max(vals, axis=1)                       # [bm, K]
+    tie = (vals >= bv[:, None, :]) & hit[:, :, None]
+    bk = jnp.max(jnp.where(tie, c[None, :, :], NEG_INF), axis=1)
+    tie &= c[None, :, :] >= bk[:, None, :]
+    bi = jnp.max(jnp.where(tie, eidx, -1), axis=1)   # [bm, K]
+    av, ak, ai = accv_ref[...], acck_ref[...], acci_ref[...]
+    better = (bv > av) | ((bv == av) & ((bk > ak) | ((bk == ak) & (bi > ai))))
+    accv_ref[...] = jnp.where(better, bv, av)
+    acck_ref[...] = jnp.where(better, bk, ak)
+    acci_ref[...] = jnp.where(better, bi, ai)
+
+    @pl.when(je == n_e - 1)
+    def _finish():
+        o_ref[...] = accv_ref[...].astype(o_ref.dtype)
+        i_ref[...] = acci_ref[...]
+
+
+def maxplus_slotlist_argmax_kernel(dst, cand, c, *, M: int, bm: int = 128,
+                                   be: int = 128, interpret: bool = False):
+    """Slot-list (CSR-style) (max,+) segment reduction with argmax.
+
+    The dense kernels above pad every level to a rectangular [M, N]
+    adjacency; this one consumes the compact edge list directly — the
+    sparse backend's layout, where a level is E (slot → destination-row)
+    pairs and nothing is materialized per absent edge.
+
+    dst: [E, 1] int32 destination row per slot (point pad slots at a row
+    ≥ M — they can never hit); cand: [E, K] candidate values (already
+    source-value + edge-cost); c: [E, K] tie keys → (out [M, K],
+    idx [M, K] int32) where ``out[m, k] = max over {e : dst[e] = m}`` of
+    ``cand[e, k]`` (−∞ when the row has no slot) and ``idx[m, k]`` is the
+    lexicographic argmax over those e of ``(cand[e,k], c[e,k], e)`` — the
+    λ backtrace's "max cumulative slope, then max ordinal" rule among
+    exact value ties (−1 when the row has no slot).
+
+    Grid: (M/bm, E/be) with slots innermost; compute is [bm × be]
+    rectangular per block but *memory* is the O(E) slot list — the whole
+    point at million-edge scale.
+    """
+    E, K = cand.shape
+    bm = min(bm, M)
+    be = min(be, E)
+    assert M % bm == 0 and E % be == 0
+    grid = (M // bm, E // be)
+    kernel = functools.partial(_maxplus_slotlist_argmax_kernel,
+                               n_e=E // be, bm=bm, be=be)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((be, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((be, K), lambda i, j: (j, 0)),
+            pl.BlockSpec((be, K), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, K), cand.dtype),
+            jax.ShapeDtypeStruct((M, K), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, K), jnp.float32),
+                        pltpu.VMEM((bm, K), jnp.float32),
+                        pltpu.VMEM((bm, K), jnp.int32)],
+        interpret=interpret,
+    )(dst, cand, c)
+
+
 def _maxplus_batched_kernel(A_ref, t_ref, o_ref, acc_ref, *, n_n: int):
     jn = pl.program_id(2)
 

@@ -8,7 +8,8 @@ import jax
 
 from .kernel import (maxplus_matvec_argmax_batched_kernel,
                      maxplus_matvec_argmax_kernel,
-                     maxplus_matvec_batched_kernel, maxplus_matvec_kernel)
+                     maxplus_matvec_batched_kernel, maxplus_matvec_kernel,
+                     maxplus_slotlist_argmax_kernel)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
@@ -28,6 +29,18 @@ def maxplus_matvec_argmax(A, t, c, *, bm: int = 128, bn: int = 128,
         interpret = jax.default_backend() != "tpu"
     return maxplus_matvec_argmax_kernel(A, t, c, bm=bm, bn=bn,
                                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("M", "bm", "be", "interpret"))
+def maxplus_slotlist_argmax(dst, cand, c, *, M: int, bm: int = 128,
+                            be: int = 128, interpret: bool = None):
+    """Slot-list segment (max,+) with lexicographic argmax — the compact
+    per-level edge-list reduction behind ``ExecPolicy(backend="sparse")``:
+    dst [E, 1] int32, cand/c [E, K] → (out [M, K], idx [M, K] int32)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return maxplus_slotlist_argmax_kernel(dst, cand, c, M=M, bm=bm, be=be,
+                                          interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))

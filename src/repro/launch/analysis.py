@@ -168,6 +168,18 @@ def _jsonable(x):
     return x
 
 
+def _reduce_T(T: np.ndarray, reduce: str) -> float:
+    """Scalar makespan objective over a scenario-only T — same reduce
+    vocabulary as :meth:`repro.sweep.api.Result.rank`."""
+    if reduce == "mean":
+        return float(T.mean())
+    if reduce == "max":
+        return float(T.max())
+    if reduce == "final":
+        return float(T.ravel()[-1])
+    raise ValueError(f"unknown reduce {reduce!r}")
+
+
 class AnalysisService:
     """Registered variants + warm compiled plans behind a query API.
 
@@ -254,6 +266,10 @@ class AnalysisService:
     def _bucket_engines(self) -> list:
         """[(names, Engine)] — one packed graph-axis engine per shape
         bucket."""
+        if self.policy.backend == "sparse":
+            # sparse plans are one-graph-per-program (no dense packing
+            # envelope to share) — rank traffic loops per-variant engines
+            return []
         if self._groups is None:
             names = list(self._variants)
             plans = [self.engine(n).plan for n in names]
@@ -349,6 +365,20 @@ class AnalysisService:
         scored: list = []
         calls = 0
         pol = self._policy(req)
+        if pol.backend == "sparse" or self.policy.backend == "sparse":
+            # no packed graph axis sparse-side: one compact-slot-list call
+            # per variant, same ranking contract
+            for name, v in self._variants.items():
+                eng = self.engine(name)
+                before = eng.calls
+                res = eng.run(latency_grid(v.params, deltas, cls=req.cls),
+                              outputs=("T",), policy=pol)
+                calls += eng.calls - before
+                scored.append((name, _reduce_T(res.T, req.reduce)))
+            scored.sort(key=lambda kv: kv[1])
+            return {"cls": req.cls, "deltas": deltas, "reduce": req.reduce,
+                    "ranking": scored, "best": scored[0][0],
+                    "compiled_calls": calls}
         for names, meng in self._bucket_engines():
             batches = [latency_grid(self._variants[n].params, deltas,
                                     cls=req.cls)
@@ -610,7 +640,7 @@ def main(argv=None):
     ap.add_argument("--demo", action="store_true",
                     help="register the built-in 4-variant collective study")
     ap.add_argument("--backend", default="segment",
-                    choices=("segment", "pallas"))
+                    choices=("segment", "pallas", "sparse"))
     ap.add_argument("--serve", action="store_true",
                     help="JSON-lines request/response loop on stdin/stdout")
     ap.add_argument("--serve-socket", default=None, metavar="ADDR",

@@ -62,13 +62,22 @@ def _forward_cells() -> dict:
 
 def forward_cell(kind: str, want_lam: bool = False, multi: bool = False,
                  fused: bool = False, mesh=None, costs=None,
-                 shard_axis: Optional[str] = None):
+                 shard_axis: Optional[str] = None, structure=None,
+                 sparse_dims=None):
     """The jitted forward for one engine cell (building it if needed) —
     for watchers scoped to a single program family, e.g. "did fd λ build
-    a λ-backtrace program?"."""
+    a λ-backtrace program?".  ``structure`` (per-staged-arg vmap axes) and
+    ``sparse_dims`` ((Emax_lv, Vmax_lv) window sizes) select the
+    structure-batched and sparse cells."""
     from repro.sweep import engine as _eng
+    kw = {}
+    if structure is not None:
+        kw["structure"] = tuple(structure)
+    if sparse_dims is not None:
+        kw["sparse_dims"] = tuple(sparse_dims)
     return _eng._get_forward(kind, want_lam, multi=multi, fused=fused,
-                             mesh=mesh, costs=costs, shard_axis=shard_axis)
+                             mesh=mesh, costs=costs, shard_axis=shard_axis,
+                             **kw)
 
 
 def _cache_size(fn) -> int:

@@ -8,10 +8,11 @@ walk per point; this subsystem compiles graphs ONCE into padded dense
 per-level tensors and evaluates whole grids in single jit+vmap max-plus
 forward passes.
 
-**One engine, three axes.**  Every sweep is one :class:`~repro.sweep.api.
+**One engine, four axes.**  Every sweep is one :class:`~repro.sweep.api.
 Engine` evaluating a :class:`~repro.sweep.api.Query` whose populated batch
-axes — graphs [G] × candidate cost blocks [K] × scenarios [S] — compose
-freely, under an :class:`~repro.sweep.api.ExecPolicy` (backend, device
+axes — graphs [G] × structural variants [B] × candidate cost blocks [K] ×
+scenarios [S] — compose freely (G and B are mutually exclusive leading
+axes), under an :class:`~repro.sweep.api.ExecPolicy` (backend, device
 sharding over any populated axis, exact-vs-finite-difference λ, cache):
 
     from repro import sweep
@@ -39,6 +40,16 @@ Public surface (re-exported here):
     CostBatch / CompiledPlan.patch_costs — K candidate cost blocks for one
                                         plan structure; the Query costs axis
                                         (zero recompiles)
+    StructureBatch / CompiledPlan.patch_structure — B structural variants
+                                        (edge rewirings, or separately
+                                        compiled plans via ``from_plans``)
+                                        inside one super-envelope; the Query
+                                        structure axis (zero recompiles)
+    SparsePlan / compile_sparse / estimate_dense_bytes — compact per-level
+                                        slot lists for graphs whose dense
+                                        envelope exceeds MAX_DENSE_BYTES
+                                        (``ExecPolicy(backend="sparse")``;
+                                        auto-selected off degree statistics)
     MultiPlan / pack_plans / group_plans — pad plans to a common envelope and
                                         stack them on a leading graph axis
     ScenarioBatch + grid builders     — latency_grid / bandwidth_grid /
@@ -70,9 +81,10 @@ stdin/stdout JSON lines or a TCP/UNIX socket.
 from .api import (Engine, ExecPolicy, Query, Result,  # noqa: F401
                   run)
 from .cache import DEFAULT_CACHE, SweepCache, canonical_bytes  # noqa: F401
-from .compile import (COST_FIELDS, CompiledPlan, CostBatch,  # noqa: F401
-                      MultiPlan, compile_plan, group_plans, pack_plans,
-                      repad_plan)
+from .compile import (COST_FIELDS, STRUCT_FIELDS, CompiledPlan,  # noqa: F401
+                      CostBatch, MultiPlan, SparsePlan, StructureBatch,
+                      compile_plan, compile_sparse, estimate_dense_bytes,
+                      group_plans, pack_plans, repad_plan)
 from .engine import (CostSweepResult, MultiSweepEngine,  # noqa: F401
                      MultiSweepResult, SweepEngine, SweepResult,
                      breakpoints_batched, tolerance_batched)

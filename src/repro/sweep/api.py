@@ -10,11 +10,14 @@ policy; this module folds them back into three objects:
     *What* to evaluate — the populated batch axes.  ``graphs`` [G] (one
     plan, a sequence of plans, or a packed ``MultiPlan``), ``costs`` [K]
     (candidate cost blocks patched into warm plan structure),
+    ``structure`` [B] (edge-rewired structural variant blocks inside one
+    super-envelope — a whole topology study through ONE XLA program),
     ``scenarios`` [S] (LogGPS parameter rows), and the requested
     ``outputs`` ⊆ {"T", "lam", "rho"}.
 
 :class:`ExecPolicy`
-    *How* to evaluate it — backend ("segment"/"pallas"), device sharding
+    *How* to evaluate it — backend ("segment"/"pallas"/"sparse"), device
+    sharding
     (``shard`` count + ``shard_axis`` ∈ {"auto", "G", "K", "S"}), λ mode
     (``"exact"`` backtrace or ``"fd"`` finite-difference over an expanded
     values grid), result cache, dtype contract.
@@ -54,8 +57,9 @@ from repro.obs.trace import span as _span
 
 from . import engine as _eng
 from .cache import DEFAULT_CACHE, SweepCache, query_key
-from .compile import (CompiledPlan, CostBatch, MultiPlan, _bucket,
-                      compile_plan, pack_plans)
+from .compile import (CompiledPlan, CostBatch, MultiPlan, SparsePlan,
+                      StructureBatch, _bucket, compile_plan, compile_sparse,
+                      estimate_dense_bytes, pack_plans)
 from .scenarios import ScenarioBatch
 
 #: ExecPolicy fields that may arrive over the wire (JSON ``policy`` blocks
@@ -74,6 +78,13 @@ _OCCUPANCY = _obs_metrics.gauge(
     "Fraction of the padded envelope carrying real work (1 - padding "
     "waste), per batch axis, as of the last uncached dispatch.",
     labels=("axis",))
+_DENSE_BYTES = _obs_metrics.gauge(
+    "sweep_dense_bytes",
+    "Bytes of plan tensors staged per backend view (dense views report "
+    "the full padded footprint, λ tie-break arrays included — the number "
+    "the dense→sparse auto-switch compares to MAX_DENSE_BYTES; the "
+    "sparse view reports its compact slot-list bytes).",
+    labels=("view",))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,8 +92,17 @@ class ExecPolicy:
     """How a query executes — everything that is *not* the workload.
 
     ``backend``
-        "segment" (pure-jnp float64, the bit-exact reference) or "pallas"
-        (the (max,+) TPU kernel, float32 accumulators, ≤1e-5 relative).
+        "segment" (pure-jnp float64, the bit-exact reference), "pallas"
+        (the (max,+) TPU kernel, float32 accumulators, ≤1e-5 relative),
+        or "sparse" (compact CSR-style slot lists at O(nv + ne) memory
+        instead of the padded dense envelope; the Engine auto-selects it
+        when a graph's estimated dense footprint exceeds
+        ``MAX_DENSE_BYTES``).  Sparse computes float64 by default — T and
+        λ bit-identical to segment — while ``dtype="float32"`` selects
+        the slot-list (max,+) Pallas kernel for the level reductions
+        (scenarios on the 128-wide lane axis, in-kernel lexicographic
+        argmax for λ — the sparse twin of the dense pallas backend,
+        ≤1e-5 relative).
     ``shard`` / ``shard_axis``
         Device fan-out: ``shard`` is None/False (off), True/"auto" (all
         local devices) or an int cap; ``shard_axis`` picks which populated
@@ -109,9 +129,11 @@ class ExecPolicy:
     ``cache``
         A :class:`~repro.sweep.cache.SweepCache` (or None to disable).
     ``dtype``
-        "auto" (backend-native: segment→float64, pallas→float32).  An
-        explicit dtype is validated against the backend's contract so a
-        query can *pin* the numeric guarantee it relies on.
+        "auto" (backend-native: segment→float64, pallas→float32,
+        sparse→float64).  An explicit dtype is validated against the
+        backend's contract so a query can *pin* the numeric guarantee it
+        relies on; on the sparse backend ``dtype="float32"`` additionally
+        *selects* the Pallas slot-list kernel flavor (see ``backend``).
     """
 
     backend: str = "segment"
@@ -123,7 +145,7 @@ class ExecPolicy:
     cache: Optional[SweepCache] = DEFAULT_CACHE
 
     def validate(self) -> "ExecPolicy":
-        if self.backend not in ("segment", "pallas"):
+        if self.backend not in ("segment", "pallas", "sparse"):
             raise ValueError(f"unknown backend {self.backend!r}")
         if self.shard_axis not in ("auto", "G", "K", "S"):
             raise ValueError(f"unknown shard_axis {self.shard_axis!r} "
@@ -142,7 +164,12 @@ class ExecPolicy:
         if self.dtype not in ("auto", "float64", "float32"):
             raise ValueError(f"unknown dtype {self.dtype!r} "
                              "(use 'auto', 'float64' or 'float32')")
-        native = {"segment": "float64", "pallas": "float32"}[self.backend]
+        native = {"segment": "float64", "pallas": "float32",
+                  "sparse": "float64"}[self.backend]
+        if self.backend == "sparse":
+            # float64 (native) = the bit-exact jnp slot-list forward;
+            # float32 pins the Pallas slot-list kernel flavor instead
+            return self
         if self.dtype not in ("auto", native):
             raise ValueError(
                 f"backend {self.backend!r} computes in {native}; "
@@ -187,6 +214,14 @@ class Query:
         (or raw ``[K, ne]`` extra edge costs) for a single-graph engine; a
         per-graph sequence of those for a multi-graph engine.  All graphs
         must share K.
+    ``structure``
+        The variant axis [B]: a
+        :class:`~repro.sweep.compile.StructureBatch`
+        (``CompiledPlan.patch_structure()`` for edge rewirings of the
+        engine's plan, ``StructureBatch.from_plans()`` for
+        separately-compiled plans on their union envelope) — B structural
+        variants vmapped through ONE compiled program, zero recompiles.
+        Mutually exclusive with a multi-graph engine's G axis.
     ``outputs``
         Any subset of ("T", "lam", "rho").  Requesting "lam" or "rho"
         computes both (ρ is a free ratio of λ and T).
@@ -199,6 +234,7 @@ class Query:
 
     scenarios: object = None
     costs: object = None
+    structure: object = None
     outputs: Sequence[str] = _OUTPUTS
     graphs: object = None
     params: object = None
@@ -207,16 +243,16 @@ class Query:
 @dataclasses.dataclass
 class Result:
     """Axis-shaped sweep tensors: ``T`` has one dim per populated axis, in
-    canonical [G?, K?, S] order (``axes`` names them); ``lam``/``rho``
+    canonical [G?|B?, K?, S] order (``axes`` names them); ``lam``/``rho``
     carry a trailing latency-class dim."""
 
     T: np.ndarray
     lam: Optional[np.ndarray]
     rho: Optional[np.ndarray]
-    axes: tuple                       # subset of ("G", "K", "S"), in order
+    axes: tuple                       # subset of ("G"|"B", "K", "S"), in order
     scenarios: object                 # ScenarioBatch, or per-graph list
     backend: str
-    names: Optional[tuple] = None     # graph names when the G axis is populated
+    names: Optional[tuple] = None     # graph/variant names on a leading G/B axis
     from_cache: bool = False
     lam_mode: str = "exact"
 
@@ -234,21 +270,29 @@ class Result:
     def G(self) -> Optional[int]:
         return int(self.T.shape[0]) if "G" in self.axes else None
 
+    @property
+    def B(self) -> Optional[int]:
+        return int(self.T.shape[0]) if "B" in self.axes else None
+
     def __getitem__(self, key) -> "Result":
-        """Slice off the leading G axis (by index or graph name)."""
-        if "G" not in self.axes:
-            raise TypeError("result has no graph axis to index")
+        """Slice off the leading graph/variant axis (by index or name)."""
+        if not self.axes or self.axes[0] not in ("G", "B"):
+            raise TypeError("result has no graph or variant axis to index")
         g = self.names.index(key) if isinstance(key, str) else int(key)
+        # a structure-batched run shares one scenario batch; a multi-graph
+        # run carries one per graph
+        scen = self.scenarios[g] if self.axes[0] == "G" else self.scenarios
         return Result(
             T=self.T[g].copy(),
             lam=None if self.lam is None else self.lam[g].copy(),
             rho=None if self.rho is None else self.rho[g].copy(),
-            axes=self.axes[1:], scenarios=self.scenarios[g],
+            axes=self.axes[1:], scenarios=scen,
             backend=self.backend, from_cache=self.from_cache,
             lam_mode=self.lam_mode)
 
     def split(self) -> dict:
-        """{name: per-graph Result} — the variant-study return shape."""
+        """{name: per-graph (or per-variant) Result} — the variant-study
+        return shape."""
         return {name: self[i] for i, name in enumerate(self.names)}
 
     def _objective(self, reduce: str, axis: int) -> np.ndarray:
@@ -263,10 +307,11 @@ class Result:
         raise ValueError(f"unknown reduce {reduce!r}")
 
     def rank(self, reduce: str = "mean") -> list:
-        """Graphs ordered best-first by makespan objective over the grid."""
-        if "G" not in self.axes:
-            raise TypeError("result has no graph axis to rank")
-        obj = self._objective(reduce, self.axes.index("G"))
+        """Graphs (or structural variants) ordered best-first by makespan
+        objective over the grid."""
+        if not self.axes or self.axes[0] not in ("G", "B"):
+            raise TypeError("result has no graph or variant axis to rank")
+        obj = self._objective(reduce, 0)
         order = np.argsort(obj, kind="stable")
         return [(self.names[i], float(obj[i])) for i in order]
 
@@ -278,11 +323,11 @@ class Result:
         if "K" in self.axes:
             return int(np.argmin(self._objective(reduce,
                                                  self.axes.index("K"))))
-        if "G" in self.axes:
-            raise TypeError("argbest() on a graph-axis result is ambiguous "
-                            "(a flat index would conflate graph and "
-                            "scenario) — use rank(), or index a graph "
-                            "first: res[g].argbest()")
+        if self.axes[0] in ("G", "B"):
+            raise TypeError("argbest() on a graph/variant-axis result is "
+                            "ambiguous (a flat index would conflate it "
+                            "with scenarios) — use rank(), or index one "
+                            "out first: res[g].argbest()")
         return int(np.argmin(self.T))
 
 
@@ -293,14 +338,28 @@ def _copy(res: Result, **replace) -> Result:
         rho=None if res.rho is None else res.rho.copy(), **replace)
 
 
+def _variant_names(sb: StructureBatch) -> tuple:
+    return sb.names if sb.names is not None else tuple(
+        f"v{i}" for i in range(sb.B))
+
+
 class Engine:
     """Compile once, evaluate any populated combination of G×K×S axes.
 
     ``graphs``: an ``ExecutionGraph`` (with ``params``), a
     :class:`~repro.sweep.compile.CompiledPlan`, a
-    :class:`~repro.sweep.compile.MultiPlan`, or a sequence of plans /
+    :class:`~repro.sweep.compile.MultiPlan`, a
+    :class:`~repro.sweep.compile.StructureBatch` (its base plan is bound
+    and the batch becomes the engine's default ``structure=`` axis), a
+    :class:`~repro.sweep.compile.SparsePlan`, or a sequence of plans /
     graphs / (graph, params) pairs (packed into a MultiPlan, members
     retained so per-graph cost extras can be patched).
+
+    An ``ExecutionGraph`` whose *estimated* dense envelope exceeds
+    :data:`MAX_DENSE_BYTES` is never laid out dense: the engine warns
+    once, compiles it with :func:`~repro.sweep.compile.compile_sparse`,
+    and switches the policy to ``backend="sparse"`` (raising instead if
+    ``dtype="float32"`` pinned the pallas contract).
 
     The engine stages plan tensors per backend once, resolves each run's
     populated axes, and dispatches through the shared jit cells of
@@ -315,11 +374,26 @@ class Engine:
                  policy: Optional[ExecPolicy] = None, names=None):
         self.policy = (policy if policy is not None else ExecPolicy()) \
             .validate()
+        self._warned: set = set()     # per-instance warn-once registry
         plan = multi = plans = None
-        if isinstance(graphs, MultiPlan):
+        sparse = structure = None
+        if isinstance(graphs, StructureBatch):
+            structure = graphs
+            if structure.base is None:
+                raise ValueError(
+                    "StructureBatch carries no base plan — build it with "
+                    "CompiledPlan.patch_structure() or "
+                    "StructureBatch.from_plans()")
+            if names is not None:
+                structure = dataclasses.replace(structure,
+                                                names=tuple(names))
+            plan = structure.base
+        elif isinstance(graphs, MultiPlan):
             multi = graphs
         elif isinstance(graphs, CompiledPlan):
             plan = graphs
+        elif isinstance(graphs, SparsePlan):
+            sparse = graphs
         elif isinstance(graphs, (list, tuple)):
             if not graphs:
                 raise ValueError("need at least one graph or plan")
@@ -333,12 +407,40 @@ class Engine:
                     plans.append(compile_plan(item, params))
             multi = pack_plans(plans)
         elif graphs is not None:
-            plan = compile_plan(graphs, params)
+            if self.policy.backend == "sparse":
+                sparse = compile_sparse(graphs, params)
+            else:
+                est = estimate_dense_bytes(graphs)
+                if est > self.MAX_DENSE_BYTES:
+                    # the dense materialization IS the memory cliff — the
+                    # switch must happen before compile_plan, off degree
+                    # statistics alone
+                    if self.policy.dtype == "float32":
+                        raise ValueError(
+                            f"graph's padded dense envelope needs "
+                            f"~{est >> 20} MiB (> "
+                            f"{self.MAX_DENSE_BYTES >> 20} MiB) and "
+                            "dtype='float32' pins the pallas contract — "
+                            "pass backend='sparse' (float64) explicitly, "
+                            "or raise Engine.MAX_DENSE_BYTES")
+                    _eng._warn_once(
+                        ("auto-sparse",),
+                        f"graph's padded dense envelope needs ~{est >> 20} "
+                        f"MiB (> {self.MAX_DENSE_BYTES >> 20} MiB); "
+                        "auto-switching to backend='sparse' (compact slot "
+                        "lists, T/λ bit-identical to segment)",
+                        registry=self._warned)
+                    self.policy = self.policy.replace(backend="sparse")
+                    sparse = compile_sparse(graphs, params)
+                else:
+                    plan = compile_plan(graphs, params)
         else:
             raise ValueError("need a graph, plan(s), or a MultiPlan")
         self.plan = plan
         self.multi = multi
         self.plans = plans            # member plans (cost patching); or None
+        self.sparse = sparse          # SparsePlan; or None until first use
+        self.structure = structure    # default StructureBatch; or None
         self.params = params
         if multi is not None:
             self.names = tuple(names) if names else tuple(
@@ -350,7 +452,6 @@ class Engine:
             self.names = None
         self.calls = 0                # compiled dispatches (cache hits excluded)
         self._dev: dict = {}
-        self._warned: set = set()     # per-instance warn-once registry
         self._occupancy: Optional[float] = None   # slot-occupancy memo
 
     # -- introspection -------------------------------------------------------
@@ -360,13 +461,41 @@ class Engine:
 
     @property
     def nclass(self) -> int:
-        return (self.plan if self.multi is None else self.multi).nclass
+        if self.multi is not None:
+            return self.multi.nclass
+        if self.plan is not None:
+            return self.plan.nclass
+        return self.sparse.nclass
+
+    def _sparse_plan(self) -> SparsePlan:
+        """The engine's sparse layout, derived lazily from a bound dense
+        plan on the first ``backend="sparse"`` run."""
+        if self.sparse is None:
+            if self.plan is None:
+                raise ValueError(
+                    "the sparse backend evaluates one graph at a time — "
+                    "build a single-graph Engine (or one per MultiPlan "
+                    "member)")
+            self.sparse = SparsePlan.from_plan(self.plan)
+        return self.sparse
 
     def _arrays(self, kind: str) -> tuple:
         if kind not in self._dev:
-            self._dev[kind] = _eng._stage_arrays(
-                self.plan if self.multi is None else self.multi, kind,
-                self.MAX_DENSE_BYTES)
+            if kind == "sparse":
+                sp = self._sparse_plan()
+                self._dev[kind] = _eng._stage_arrays(
+                    sp, kind, self.MAX_DENSE_BYTES)
+                _DENSE_BYTES.set(float(sp.sparse_bytes()), view="sparse")
+            else:
+                plan0 = self.plan if self.multi is None else self.multi
+                if plan0 is None:
+                    raise ValueError(
+                        "this engine compiled its graph sparse-only (dense "
+                        "envelope over MAX_DENSE_BYTES) — only "
+                        "backend='sparse' can evaluate it")
+                self._dev[kind] = _eng._stage_arrays(
+                    plan0, kind, self.MAX_DENSE_BYTES)
+                _DENSE_BYTES.set(float(plan0.dense_bytes()), view=kind)
         return self._dev[kind]
 
     # -- normalization -------------------------------------------------------
@@ -472,10 +601,48 @@ class Engine:
                              f"{[cb.K for cb in out]})")
         return out
 
+    def _structure(self, structure) -> Optional[StructureBatch]:
+        """Normalize the B axis: an explicit batch wins, else the engine's
+        bound default (an Engine built from a StructureBatch); validated
+        against the staged base plan the variants ride."""
+        sb = structure if structure is not None else self.structure
+        if sb is None:
+            return None
+        if not isinstance(sb, StructureBatch):
+            raise ValueError(
+                "structure must be a StructureBatch — mint one with "
+                "CompiledPlan.patch_structure() or "
+                "StructureBatch.from_plans()")
+        if self.multi is not None:
+            raise ValueError(
+                "structure blocks and a multi-graph engine cannot combine "
+                "(pick one variant axis: pack plans into a MultiPlan OR "
+                "batch them with StructureBatch.from_plans)")
+        if self.plan is None:
+            raise ValueError(
+                "this engine compiled its graph sparse-only; structure "
+                "batching needs a dense base plan")
+        if sb.vsrc.shape[1:] != self.plan.vsrc.shape:
+            raise ValueError(
+                f"structure block envelope {sb.vsrc.shape[1:]} does not "
+                f"match the plan's {self.plan.vsrc.shape} — patch or "
+                "re-batch onto the plan this engine compiled")
+        if sb.plan_hash is not None and \
+                sb.plan_hash != self.plan.content_hash():
+            # bucketing makes DISTINCT graphs share envelopes, so the
+            # shape check alone cannot catch a foreign batch; from_plans
+            # batches (plan_hash None) materialize every tensor per
+            # variant, so the envelope check alone is sound for them
+            raise ValueError(
+                "structure batch was patched from a different plan than "
+                "this engine compiled (same envelope, different content) "
+                "— patch_structure() the engine's own plan")
+        return sb
+
     # -- the run -------------------------------------------------------------
-    def run(self, query=None, *, scenarios=None, costs=None, outputs=None,
-            compute_lam=None, backend=None, shard=None, shard_axis=None,
-            use_cache: bool = True,
+    def run(self, query=None, *, scenarios=None, costs=None, structure=None,
+            outputs=None, compute_lam=None, backend=None, shard=None,
+            shard_axis=None, use_cache: bool = True,
             policy: Optional[ExecPolicy] = None) -> Result:
         """Evaluate one query; returns a numpy-backed :class:`Result`.
 
@@ -495,11 +662,13 @@ class Engine:
                              else self.policy)
                 return sub.run(dataclasses.replace(query, graphs=None,
                                                    params=None),
-                               outputs=outputs, compute_lam=compute_lam,
-                               backend=backend, shard=shard,
-                               shard_axis=shard_axis, use_cache=use_cache)
+                               structure=structure, outputs=outputs,
+                               compute_lam=compute_lam, backend=backend,
+                               shard=shard, shard_axis=shard_axis,
+                               use_cache=use_cache)
             scenarios = query.scenarios if scenarios is None else scenarios
             costs = query.costs if costs is None else costs
+            structure = query.structure if structure is None else structure
             outputs = query.outputs if outputs is None else outputs
         elif query is not None:
             if scenarios is not None:
@@ -532,6 +701,36 @@ class Engine:
         want_lam = "lam" in outputs or "rho" in outputs
         fd = want_lam and pol.lam == "fd"
         kind = pol.backend
+
+        sb = self._structure(structure)
+        has_B = sb is not None
+        if kind == "sparse":
+            if has_B:
+                raise ValueError("the sparse backend does not take "
+                                 "structure blocks yet — use "
+                                 "backend='segment'")
+            if costs is not None:
+                raise ValueError("the sparse backend does not take cost "
+                                 "blocks yet — use backend='segment'")
+            if self.multi is not None:
+                raise ValueError("the sparse backend evaluates one graph "
+                                 "at a time — build a single-graph Engine "
+                                 "per member")
+            if pol.shard:
+                raise ValueError("the sparse backend does not shard yet")
+        elif self.plan is None and self.multi is None:
+            raise ValueError(
+                "this engine compiled its graph sparse-only (dense "
+                f"envelope over MAX_DENSE_BYTES); backend={kind!r} cannot "
+                "evaluate it — run with backend='sparse'")
+        if has_B and pol.shard:
+            raise ValueError("sharding a structure-batched query is not "
+                             "supported yet")
+        if has_B and costs is not None and sb.plan_hash is None:
+            raise ValueError(
+                "a from_plans() StructureBatch cannot combine with cost "
+                "blocks — its variants share no base plan to patch costs "
+                "into (use patch_structure() variants for B×K studies)")
 
         # pallas λ needs the argmax kernel; if it cannot even be built on
         # this install, say so ONCE and fall back — never silently ignore
@@ -570,7 +769,8 @@ class Engine:
         has_G = self.multi is not None
         has_K = cbs is not None
         cache = pol.cache if use_cache else None
-        axes_s = ("G" if has_G else "") + ("K" if has_K else "") + "S"
+        axes_s = ("G" if has_G else "") + ("B" if has_B else "") \
+            + ("K" if has_K else "") + "S"
 
         # -- cache lookup ----------------------------------------------------
         key = None
@@ -587,12 +787,25 @@ class Engine:
                     cost_hash = (hashes[0] if len(hashes) == 1
                                  else hashlib.sha1(
                                      "|".join(hashes).encode()).hexdigest())
-                ph = (self.plan.content_hash() if not has_G
+                structure_hash = None
+                if has_B:
+                    # like costs: hash only the view this backend consumes
+                    sfields = (_eng._SEG_STRUCT_FIELDS if kind == "segment"
+                               else _eng._PAL_STRUCT_FIELDS)
+                    structure_hash = sb.content_hash(fields=sfields)
+                ph = (self._sparse_plan().content_hash()
+                      if kind == "sparse"
+                      else self.plan.content_hash() if not has_G
                       else self.multi.content_hash())
-                key = query_key(ph, batches, want_lam, kind, cost_hash,
+                # the sparse f32 kernel flavor returns different floats
+                # than the f64 forward — it must never share cache entries
+                kkey = ("sparse_pallas" if kind == "sparse"
+                        and pol.dtype == "float32" else kind)
+                key = query_key(ph, batches, want_lam, kkey, cost_hash,
                                 lam_mode=pol.lam if want_lam else "exact",
-                                fd_eps=pol.fd_eps)
-                hit = cache.get(key, patched=has_K)
+                                fd_eps=pol.fd_eps,
+                                structure_hash=structure_hash)
+                hit = cache.get(key, patched=has_K or has_B)
             if hit is not None:
                 _QUERIES.inc(backend=kind, axes=axes_s, cache="hit")
                 # copy the arrays (callers may mutate results in place) and
@@ -602,11 +815,13 @@ class Engine:
                 return _copy(hit,
                              scenarios=(batches[0] if not has_G
                                         else batches),
-                             names=self.names, from_cache=True)
+                             names=(_variant_names(sb) if has_B
+                                    else self.names),
+                             from_cache=True)
 
         _QUERIES.inc(backend=kind, axes=axes_s,
                      cache="miss" if cache is not None else "off")
-        res = self._run_uncached(batches, cbs, want_lam, fd, kind, pol)
+        res = self._run_uncached(batches, cbs, sb, want_lam, fd, kind, pol)
         if cache is not None:
             # store a private copy: caller mutation of the returned arrays
             # must never poison later cache hits
@@ -614,13 +829,18 @@ class Engine:
         return res
 
     # -- the uncached forward ------------------------------------------------
-    def _run_uncached(self, batches, cbs, want_lam, fd, kind,
+    def _run_uncached(self, batches, cbs, sb, want_lam, fd, kind,
                       pol: ExecPolicy) -> Result:
         has_G = self.multi is not None
         has_K = cbs is not None
+        has_B = sb is not None
+        sparse = kind == "sparse"
+        sp = self._sparse_plan() if sparse else None
         G = self.multi.G if has_G else None
         K = cbs[0].K if has_K else None
         Kp = _bucket(K, lo=1) if has_K else None
+        B = sb.B if has_B else None
+        Bp = _bucket(B, lo=1) if has_B else None
         nc = self.nclass
         S = batches[0].S
         h = float(pol.fd_eps)
@@ -653,14 +873,16 @@ class Engine:
                     GSmat[i, Sext:] = G0[-1]
 
         # -- envelope occupancy: padding-waste gauges ------------------------
-        plan0 = self.plan if not has_G else self.multi
+        plan0 = sp if sparse else (self.plan if not has_G else self.multi)
         if self._occupancy is None:
-            vf = plan0.valid_flat
+            vf = sp.valid if sparse else plan0.valid_flat
             self._occupancy = float(np.count_nonzero(vf) / vf.size)
         _OCCUPANCY.set(self._occupancy, axis="slots")
         _OCCUPANCY.set(Sext / Sp, axis="S")
         if has_K:
             _OCCUPANCY.set(K / Kp, axis="K")
+        if has_B:
+            _OCCUPANCY.set(B / Bp, axis="B")
 
         # -- device sharding: any populated axis -----------------------------
         axis = pol.shard_axis
@@ -730,9 +952,55 @@ class Engine:
                     arr if dtype is None else arr.astype(dtype)))
             return tuple(out)
 
+        # -- structure-tensor staging: only genuinely per-variant tensors
+        #    ride the vmapped B axis (patch_structure materializes just
+        #    vsrc/vmaskd/esrc/emask; from_plans batches every field) --------
+        saxes = sbp = None
+        if has_B:
+            sbp = sb.padded(Bp)
+            spos = _eng._SEG_STRUCT_POS if seg else _eng._PAL_STRUCT_POS
+            ax = [None] * (_eng._N_PLAN_ARGS + 2)
+            for n, p in spos.items():
+                if getattr(sbp, n).strides[0] != 0:
+                    ax[p] = 0
+            if not seg and (sbp.emask.strides[0] != 0
+                            or sbp.edstl.strides[0] != 0):
+                ax[0] = 0              # per-variant 0/−inf indicator
+            if all(a is None for a in ax):     # vmap needs ≥1 batched input
+                ax[spos["vsrc" if seg else "esrc"]] = 0
+            saxes = tuple(ax)
+        f32_struct = {"econst", "egap", "elat", "vcost_lv"}
+
+        def stage_structure(args):
+            args = list(args)
+            spos = _eng._SEG_STRUCT_POS if seg else _eng._PAL_STRUCT_POS
+            for n, p in spos.items():
+                if saxes[p] != 0:
+                    continue
+                a = getattr(sbp, n)
+                if a.strides[0] == 0:          # forced-batched fallback
+                    a = np.broadcast_to(a[:1], (Bp,) + a.shape[1:])
+                if not seg and n in f32_struct:
+                    a = np.asarray(a, dtype=np.float32)
+                args[p] = jnp.asarray(np.ascontiguousarray(a))
+            if not seg and saxes[0] == 0:
+                # the pallas scatter indicator is derived structure:
+                # rebuild it per variant from the patched masks
+                em = sbp.emask
+                edl = np.broadcast_to(sbp.edstl, em.shape)
+                nlv, Emax = em.shape[1:]
+                A = np.full((Bp, nlv, self.plan.Vmax, Emax), -_eng.BIG,
+                            dtype=np.float32)
+                bb, lv, sl = np.nonzero(em)
+                A[bb, lv, edl[bb, lv, sl], sl] = 0.0
+                args[0] = jnp.asarray(A)
+            return tuple(args)
+
         fwd_kw = {}
         if kaxes is not None:
             fwd_kw["costs"] = kaxes
+        if saxes is not None:
+            fwd_kw["structure"] = saxes
         if mesh is not None and axis != ("G" if has_G else "S"):
             fwd_kw["shard_axis"] = axis
 
@@ -740,13 +1008,35 @@ class Engine:
         # this dispatch is attributed to this query's signature (the
         # np.asarray transfers inside the span block on jax's async
         # dispatch, so the window covers compile + execute)
-        axes_s = ("G" if has_G else "") + ("K" if has_K else "") + "S"
-        nlv_p, Vmax, Dmax = plan0.vsrc.shape[-3:]
+        axes_s = ("G" if has_G else "") + ("B" if has_B else "") \
+            + ("K" if has_K else "") + "S"
+        if sparse:
+            env_s = f"ne{sp.esrc_slot.shape[0]}v{sp.vcost.shape[0]}"
+        else:
+            nlv_p, Vmax, Dmax = plan0.vsrc.shape[-3:]
+            env_s = f"{nlv_p}x{Vmax}x{Dmax}"
         n_prog0 = _WATCHER.programs()
         t0_ns = time.perf_counter_ns()
         t0 = time.perf_counter()
         with _span("sweep.execute", backend=kind, axes=axes_s):
-            if seg:
+            if sparse:
+                from jax.experimental import enable_x64
+                with enable_x64():
+                    arrs = self._arrays("sparse")
+                    # dtype="float32" pins the Pallas slot-list kernel
+                    # flavor; float64 (native) is the bit-exact jnp
+                    # forward.  Same staged arrays — the kernel core
+                    # casts at the (max,+) reduction boundary.
+                    flavor = ("sparse_pallas" if pol.dtype == "float32"
+                              else "sparse")
+                    fwd = _eng._get_forward(
+                        flavor, want_lam_compiled,
+                        sparse_dims=(sp.Emax_lv, sp.Vmax_lv))
+                    T, lam = fwd(*arrs, jnp.asarray(Lmat),
+                                 jnp.asarray(GSmat))
+                    T = np.asarray(T).astype(np.float64)
+                    lam = np.asarray(lam).astype(np.float64)
+            elif seg:
                 from jax.experimental import enable_x64
                 with enable_x64():
                     arrs = self._arrays("segment")
@@ -755,6 +1045,8 @@ class Engine:
                         args = arrs[:2] + cost_arrs + arrs[7:]
                     else:
                         args = arrs
+                    if has_B:
+                        args = stage_structure(args)
                     fwd = _eng._get_forward("segment", want_lam_compiled,
                                             has_G, False, mesh, **fwd_kw)
                     T, lam = fwd(*args, jnp.asarray(Lmat),
@@ -768,6 +1060,8 @@ class Engine:
                     args = arrs[:3] + cost_arrs + arrs[7:]
                 else:
                     args = arrs
+                if has_B:
+                    args = stage_structure(args)
                 fwd = _eng._get_forward("pallas", want_lam_compiled,
                                         has_G, False, mesh, **fwd_kw)
                 T, lam = fwd(*args, jnp.asarray(Lmat, dtype=jnp.float32),
@@ -782,12 +1076,14 @@ class Engine:
             backend=kind, axes=axes_s,
             lam=("exact" if want_lam_compiled else
                  "fd" if fd else "none"),
-            envelope=f"{nlv_p}x{Vmax}x{Dmax}", S=Sp,
-            **({"K": Kp} if has_K else {}), **({"G": G} if has_G else {}))
+            envelope=env_s, S=Sp,
+            **({"K": Kp} if has_K else {}), **({"G": G} if has_G else {}),
+            **({"B": Bp} if has_B else {}))
         self.calls += 1
 
         # -- slice padding, reduce fd, derive ρ ------------------------------
         idx = ((slice(None),) if has_G else ()) \
+            + ((slice(0, B),) if has_B else ()) \
             + ((slice(0, K),) if has_K else ()) + (slice(0, Sext),)
         T = T[idx]
         if want_lam_compiled:
@@ -813,14 +1109,16 @@ class Engine:
                                0.0)
         else:
             lam, rho = None, None
-        axes = (("G",) if has_G else ()) + (("K",) if has_K else ()) + ("S",)
+        axes = (("G",) if has_G else ()) + (("B",) if has_B else ()) \
+            + (("K",) if has_K else ()) + ("S",)
         # np.array: np.asarray of a jax buffer is a read-only view; results
         # must be writable (and consistent with the writable cache-hit copies)
         return Result(T=np.array(T),
                       lam=None if lam is None else np.array(lam),
                       rho=rho, axes=axes,
                       scenarios=batches[0] if not has_G else batches,
-                      backend=kind, names=self.names,
+                      backend=kind,
+                      names=_variant_names(sb) if has_B else self.names,
                       lam_mode=pol.lam if want_lam else "exact")
 
 

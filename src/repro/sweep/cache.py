@@ -72,13 +72,17 @@ def result_key(plan_hash: str, scenarios, compute_lam: bool,
 def query_key(plan_hash: str, batches: Sequence, want_lam: bool,
               backend: str, cost_hash: Optional[str] = None,
               lam_mode: str = "exact",
-              fd_eps: Optional[float] = None) -> str:
+              fd_eps: Optional[float] = None,
+              structure_hash: Optional[str] = None) -> str:
     """Key for a unified :class:`repro.sweep.api.Engine` query: the plan (or
     MultiPlan) content hash, the per-graph scenario batches in order, the
     requested sensitivity flag, the backend, the λ mode (finite-difference
     λ is a *different numeric contract* than the exact backtrace, so the
-    two must never collide — and fd keys fold the step size in), and the
-    cost-batch hash when a candidate axis is populated."""
+    two must never collide — and fd keys fold the step size in), the
+    cost-batch hash when a candidate axis is populated, and the
+    structure-batch hash when a variant axis is — bucketing makes distinct
+    variant sets share the plan's super-envelope, so two studies differing
+    only in their structure blocks must never collide."""
     sha = hashlib.sha1(b"sweep-query-v1|")
     sha.update(plan_hash.encode())
     for b in batches:
@@ -89,6 +93,8 @@ def query_key(plan_hash: str, batches: Sequence, want_lam: bool,
         sha.update(repr(float(fd_eps)).encode())
     if cost_hash is not None:
         sha.update(f"|costs:{cost_hash}".encode())
+    if structure_hash is not None:
+        sha.update(f"|structure:{structure_hash}".encode())
     return sha.hexdigest()
 
 

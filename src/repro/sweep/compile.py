@@ -60,6 +60,16 @@ candidate of every greedy step reuses ONE compiled program).  Patched
 costs are bit-identical to rebuilding the plan with
 ``compile_plan(extra_edge_cost=...)``: both add the extra to the baked
 edge constant in float64 before anything else touches it.
+
+The same split now runs in the other direction: *structure itself* is
+patchable inside a bounded super-envelope.  :meth:`CompiledPlan.patch_structure`
+/ :class:`StructureBatch` stack B edge-rewired variant blocks (slot source
+indices and edge masks as runtime inputs; λ tie-break ordinals re-derived
+in-kernel from the patched masks) that vmap alongside K cost blocks and S
+scenarios — a whole topology study is ONE XLA program.  And past the dense
+memory cliff, :class:`SparsePlan` / :func:`compile_sparse` lay the schedule
+out as compact CSR-style slot lists with no ``[nlv, Vmax, Dmax]`` padding
+at all (the ``sparse`` backend).
 """
 
 from __future__ import annotations
@@ -85,6 +95,34 @@ def _bucket(n: int, lo: int = 8) -> int:
 #: view).  Everything else on a plan is immutable structure.
 COST_FIELDS = ("vconst", "vgap", "vgclass", "vlat", "vlat_sum",
                "econst", "egap", "egclass", "elat")
+
+#: Every plan tensor the engine forwards consume (per-vertex view first,
+#: then the pallas per-edge view).  A :class:`StructureBatch` stacks B
+#: variant blocks of ALL of them — rewired fields materialized, untouched
+#: fields stride-0 broadcast — so edge rewirings vmap like cost blocks do.
+STRUCT_FIELDS = ("vsrc", "vmaskd", "vconst", "vgap", "vgclass", "vlat",
+                 "vlat_sum", "vcost_lv", "valid_flat", "vert_of_slot",
+                 "esrc", "edstl", "emask", "econst", "egap", "egclass",
+                 "elat")
+
+
+def _segment_view_bytes(nlv_p: int, Vmax: int, Dmax: int, nc: int) -> int:
+    """Footprint of the padded per-vertex (segment) tensors, λ tie-break
+    slope array (``vlat_sum``) included."""
+    slot = nlv_p * Vmax * Dmax
+    return (slot * (4 + 1 + 8 + 8 + 4 + 8 * nc + 8)  # vsrc..vlat_sum
+            + nlv_p * Vmax * 8                        # vcost_lv
+            + (nlv_p * Vmax + 1) * 5)                 # valid_flat+vert_of_slot
+
+
+def _pallas_view_bytes(nlv_p: int, Vmax: int, Emax: int, nc: int) -> int:
+    """Footprint of the pallas per-edge view: the [nlv, Vmax, Emax] 0/−inf
+    indicator, the f32 edge tensors, and the per-level λ argmax plane."""
+    edge = nlv_p * Emax
+    return (nlv_p * Vmax * Emax * 4                   # indicator
+            + edge * (4 + 4 + 1 + 4 + 4 + 4 + 4 * nc)
+            + nlv_p * Vmax * 4 * 2                    # vcost f32 + argmax
+            + (nlv_p * Vmax + 1) * 5)
 
 
 @dataclasses.dataclass
@@ -222,6 +260,148 @@ class CostBatch:
 
 
 @dataclasses.dataclass
+class StructureBatch:
+    """B *structural* variant blocks sharing one bounded super-envelope.
+
+    The :class:`CostBatch` idiom applied to the structure tensors: slot
+    source indices (``vsrc``/``esrc``) and edge masks (``vmaskd``/
+    ``emask``) become runtime inputs with a leading variant axis, so a
+    whole topology study (collective-algorithm swaps, link re-routes)
+    vmaps through ONE compiled XLA program — B structure blocks alongside
+    K cost blocks and S scenarios.  λ tie-break ordinals need no extra
+    tensor: the in-edge ordinal IS the position along ``Dmax`` (the edge
+    slot along ``Emax`` on the pallas view), so the kernels re-derive it
+    from the patched masks and tie-breaks stay bit-exact per variant.
+
+    Two constructors: :meth:`CompiledPlan.patch_structure` rewires edges
+    of one plan (only ``vsrc``/``vmaskd``/``esrc``/``emask`` are
+    materialized B times — everything else stays a stride-0 broadcast
+    view of the parent's tensors), and :meth:`from_plans` stamps
+    separately-compiled plans onto their union envelope (the
+    zero-recompile replacement for per-bucket ``MultiPlan`` studies).
+    """
+
+    vsrc: np.ndarray       # [B, nlv_p, Vmax, Dmax] int32
+    vmaskd: np.ndarray     # [B, nlv_p, Vmax, Dmax] bool
+    vconst: np.ndarray     # [B, nlv_p, Vmax, Dmax] float64
+    vgap: np.ndarray       # [B, nlv_p, Vmax, Dmax] float64
+    vgclass: np.ndarray    # [B, nlv_p, Vmax, Dmax] int32
+    vlat: np.ndarray       # [B, nlv_p, Vmax, Dmax, nclass] float64
+    vlat_sum: np.ndarray   # [B, nlv_p, Vmax, Dmax] float64
+    vcost_lv: np.ndarray   # [B, nlv_p, Vmax] float64
+    valid_flat: np.ndarray  # [B, nlv_p·Vmax + 1] bool
+    vert_of_slot: np.ndarray  # [B, nlv_p·Vmax + 1] int32
+    esrc: np.ndarray       # [B, nlv_p, Emax] int32
+    edstl: np.ndarray      # [B, nlv_p, Emax] int32
+    emask: np.ndarray      # [B, nlv_p, Emax] bool
+    econst: np.ndarray     # [B, nlv_p, Emax] float64
+    egap: np.ndarray       # [B, nlv_p, Emax] float64
+    egclass: np.ndarray    # [B, nlv_p, Emax] int32
+    elat: np.ndarray       # [B, nlv_p, Emax, nclass] float64
+    #: the plan whose envelope (and, for broadcast fields, tensors) the
+    #: variants share — the engine stages it once and overwrites the
+    #: batched positions
+    base: Optional["CompiledPlan"] = None
+    #: content hash of the patched-from plan (None for :meth:`from_plans`
+    #: batches, whose structure hash covers every member tensor)
+    plan_hash: Optional[str] = None
+    #: optional per-variant display names (drive ``Result.split()``)
+    names: Optional[tuple] = None
+
+    @property
+    def B(self) -> int:
+        return int(self.vsrc.shape[0])
+
+    @property
+    def nclass(self) -> int:
+        return int(self.vlat.shape[4])
+
+    @property
+    def shape_key(self) -> tuple:
+        """Envelope of the super-plan (no B: any B shares its programs)."""
+        return self.vsrc.shape[1:] + self.esrc.shape[2:] + (self.nclass,)
+
+    def content_hash(self, fields: Optional[Sequence[str]] = None) -> str:
+        """SHA1 over the structure tensors — patched structure participates
+        in sweep result keys exactly like patched costs do (two variants
+        sharing a super-envelope must never collide in the cache).
+        ``fields`` restricts the hash to one backend's view; broadcast
+        (unvaried) fields hash one block plus the count, so keying a study
+        costs O(patched tensors), not O(B × plan)."""
+        names = tuple(fields) if fields is not None else STRUCT_FIELDS
+        memo = getattr(self, "_hashes", None)
+        if memo is None:
+            memo = {}
+            object.__setattr__(self, "_hashes", memo)
+        h = memo.get(names)
+        if h is None:
+            from .cache import canonical_bytes
+            sha = hashlib.sha1(b"structure-batch-v1")
+            for name in names:
+                a = getattr(self, name)
+                chunks = ((f"|bcast{a.shape[0]}|".encode(),)
+                          + canonical_bytes(a[0])
+                          if a.strides[0] == 0 else canonical_bytes(a))
+                for chunk in chunks:
+                    sha.update(chunk)
+            h = memo[names] = sha.hexdigest()
+        return h
+
+    def padded(self, Bp: int) -> "StructureBatch":
+        """Pad the variant axis to ``Bp`` by repeating the last block, so
+        varying variant counts share one bucketed XLA program (pad rows are
+        sliced off by the engine).  Broadcast fields stay broadcasts."""
+        B = self.B
+        if Bp == B:
+            return self
+        if Bp < B:
+            raise ValueError(f"cannot pad {B} structure blocks down to {Bp}")
+
+        def pad(a):
+            if a.strides[0] == 0:
+                return np.broadcast_to(a[:1], (Bp,) + a.shape[1:])
+            return np.concatenate(
+                [a, np.broadcast_to(a[-1:], (Bp - B,) + a.shape[1:])])
+
+        return StructureBatch(**{n: pad(getattr(self, n))
+                                 for n in STRUCT_FIELDS},
+                              base=self.base, plan_hash=self.plan_hash,
+                              names=self.names)
+
+    @classmethod
+    def from_plans(cls, plans: Sequence["CompiledPlan"],
+                   names: Optional[Sequence[str]] = None
+                   ) -> "StructureBatch":
+        """Stack separately-compiled plans onto their union envelope.
+
+        Every tensor is materialized B times (independently built graphs
+        share nothing), but the batch still evaluates as ONE XLA program;
+        repadding is exact (see :func:`repad_plan`), so results are
+        bit-identical to evaluating each plan alone.
+        """
+        if not plans:
+            raise ValueError("from_plans needs at least one plan")
+        nc = plans[0].nclass
+        if any(p.nclass != nc for p in plans):
+            raise ValueError("cannot batch plans with different latency-"
+                             "class counts into one StructureBatch")
+        if names is not None and len(names) != len(plans):
+            raise ValueError(f"{len(names)} names for {len(plans)} plans")
+        nlv = max(p.vsrc.shape[0] for p in plans)
+        Vm = max(p.vsrc.shape[1] for p in plans)
+        Dm = max(p.vsrc.shape[2] for p in plans)
+        Em = max(p.esrc.shape[1] for p in plans)
+        padded = [repad_plan(p, nlv, Vm, Dm, Em) for p in plans]
+
+        def stack(name):
+            return np.stack([getattr(p, name) for p in padded])
+
+        return cls(**{n: stack(n) for n in STRUCT_FIELDS},
+                   base=padded[0], plan_hash=None,
+                   names=tuple(names) if names is not None else None)
+
+
+@dataclasses.dataclass
 class CompiledPlan:
     """Padded per-level tensors for batched max-plus relaxation.
 
@@ -276,9 +456,17 @@ class CompiledPlan:
 
     @property
     def padding_ratio(self) -> float:
-        """Padded-edge-slots / real edges (compile-quality diagnostic)."""
-        real = max(int(self.vmaskd.sum()), 1)
-        return float(self.vmaskd.size) / real
+        """Padded bytes / real-work bytes across the dense per-vertex
+        tensors, λ tie-break arrays (``vlat``/``vlat_sum``) included — the
+        compile-quality diagnostic feeding the dense→sparse auto-switch
+        alongside :meth:`dense_bytes`."""
+        per_slot = 33 + 8 * self.nclass       # one in-edge slot, all fields
+        per_vert = 12                          # vcost_lv + λ argmax plane
+        nlv, Vmax, _ = self.vsrc.shape
+        real = (max(int(self.vmaskd.sum()), 1) * per_slot
+                + max(self.nv, 1) * per_vert)
+        padded = self.vmaskd.size * per_slot + nlv * Vmax * per_vert
+        return padded / real
 
     def dense_indicator(self, neg: float = -1e30) -> np.ndarray:
         """[nlv_p, Vmax, Emax] float32 0/−inf scatter matrix for the Pallas
@@ -291,9 +479,21 @@ class CompiledPlan:
         A[lv, self.edstl[lv, sl], sl] = 0.0
         return A
 
+    def segment_bytes(self) -> int:
+        """Bytes the segment backend stages (padded per-vertex tensors,
+        λ tie-break slope array included)."""
+        nlv, Vmax, Dmax = self.vsrc.shape
+        return _segment_view_bytes(nlv, Vmax, Dmax, self.nclass)
+
     def dense_bytes(self) -> int:
+        """Total padded dense footprint across both backend views — the
+        segment per-vertex tensors plus the pallas 0/−inf indicator, f32
+        edge tensors, and λ argmax planes.  This (not just the indicator)
+        is what the dense→sparse auto-switch compares to
+        ``MAX_DENSE_BYTES``."""
         nlv, Emax = self.esrc.shape
-        return nlv * self.Vmax * Emax * 4
+        return (self.segment_bytes()
+                + _pallas_view_bytes(nlv, self.Vmax, Emax, self.nclass))
 
     def content_hash(self) -> str:
         """SHA1 over the compiled tensors — keys memoized sweep results.
@@ -379,6 +579,89 @@ class CompiledPlan:
             np.asarray(extra_edge_cost, dtype=np.float64).ravel())
         return dataclasses.replace(self, vconst=cb.vconst[0],
                                    econst=cb.econst[0])
+
+    # -- structure patching (zero-recompile topology studies) ----------------
+
+    def patch_structure(self, src: Optional[np.ndarray] = None,
+                        keep: Optional[np.ndarray] = None,
+                        names: Optional[Sequence[str]] = None
+                        ) -> StructureBatch:
+        """Stack B edge-rewired structural variants of this plan.
+
+        ``src``: [ne] or [B, ne] *original vertex ids* in original edge
+        order — the new source of each edge (``None`` keeps every baked
+        source).  ``keep``: [ne] or [B, ne] bool — ``False`` removes the
+        edge from that variant.  Destinations, per-edge costs, and the
+        level schedule are fixed by the envelope; every kept edge's new
+        source must sit at a strictly lower topological level than its
+        destination (checked), which is exactly the class of rewirings a
+        topology study sweeps: collective-algorithm swaps and link
+        re-routes on a fixed super-graph.
+
+        λ stays bit-exact per variant: removals leave surviving edges at
+        their baked in-edge ordinals, and the tie-break consumes only the
+        ordinals' *relative* order per destination — which matches a
+        ground-up rebuild, whose compaction also preserves original edge
+        order.
+        """
+        if self.epos_lvl is None:
+            raise ValueError(
+                "plan carries no edge-position records (hand-assembled?); "
+                "recompile with compile_plan() to enable structure patching")
+        if src is None and keep is None:
+            raise ValueError("patch_structure needs src and/or keep")
+        ne = self.epos_lvl.shape[0]
+        if src is not None:
+            src = np.atleast_2d(np.asarray(src, dtype=np.int64))
+        if keep is not None:
+            keep = np.atleast_2d(np.asarray(keep, dtype=bool))
+        B = src.shape[0] if src is not None else keep.shape[0]
+        if keep is None:
+            keep = np.broadcast_to(np.ones(ne, dtype=bool), (B, ne))
+        lvl = self.epos_lvl.astype(np.int64)
+        dst = self.epos_dst.astype(np.int64)
+        d = self.epos_d.astype(np.int64)
+        es = self.epos_e.astype(np.int64)
+        if src is None:
+            baked = self.vert_of_slot[self.vsrc[lvl, dst, d]].astype(np.int64)
+            src = np.broadcast_to(baked, (B, ne))
+        if src.shape != (B, ne) or keep.shape != (B, ne):
+            raise ValueError(
+                f"src/keep must be [B, {ne}] in original edge order, got "
+                f"{src.shape} / {keep.shape}")
+        # original vertex id → flat slot (inverse of vert_of_slot)
+        slots = np.nonzero(self.valid_flat[:self.flat_dummy])[0]
+        sov = np.full(self.nv, -1, dtype=np.int64)
+        sov[self.vert_of_slot[slots]] = slots
+        ok = (src >= 0) & (src < self.nv)
+        if not bool(np.all(ok | ~keep)):
+            raise ValueError("src names vertex ids outside [0, nv)")
+        srcslot = sov[np.where(keep & ok, src, 0)]
+        if bool(np.any(keep & (srcslot // self.Vmax >= lvl))):
+            raise ValueError(
+                "structure patch violates the level schedule: every kept "
+                "edge's new source must sit at a strictly lower "
+                "topological level than its destination")
+        new_src = np.where(keep, srcslot, self.flat_dummy).astype(np.int32)
+        vsrc = np.repeat(self.vsrc[None], B, axis=0)
+        vsrc[:, lvl, dst, d] = new_src
+        vmaskd = np.repeat(self.vmaskd[None], B, axis=0)
+        vmaskd[:, lvl, dst, d] = keep
+        esrc = np.repeat(self.esrc[None], B, axis=0)
+        esrc[:, lvl, es] = new_src
+        emask = np.repeat(self.emask[None], B, axis=0)
+        emask[:, lvl, es] = keep
+
+        def rest(a):
+            return np.broadcast_to(a[None], (B,) + a.shape)
+
+        done = {"vsrc": vsrc, "vmaskd": vmaskd, "esrc": esrc, "emask": emask}
+        return StructureBatch(
+            **done,
+            **{n: rest(getattr(self, n)) for n in STRUCT_FIELDS
+               if n not in done},
+            base=self, plan_hash=self.content_hash(),
+            names=tuple(names) if names is not None else None)
 
 
 def compile_plan(g: ExecutionGraph, params: Optional[LogGPS] = None,
@@ -636,7 +919,9 @@ class MultiPlan:
 
     def dense_bytes(self) -> int:
         G, nlv, Emax = self.esrc.shape
-        return G * nlv * self.Vmax * Emax * 4
+        _, _, Vmax, Dmax = self.vsrc.shape
+        return G * (_segment_view_bytes(nlv, Vmax, Dmax, self.nclass)
+                    + _pallas_view_bytes(nlv, Vmax, Emax, self.nclass))
 
     def content_hash(self) -> str:
         """Order-sensitive hash over the member plans + envelope."""
@@ -723,3 +1008,205 @@ def group_plans(plans: Sequence[CompiledPlan],
             groups.append([i])
             meta.append((p.nclass, nat))
     return groups
+
+
+# -- sparse slot-list layout (beyond the dense envelope) ----------------------
+
+
+@dataclasses.dataclass
+class SparsePlan:
+    """Compact CSR-style slot lists — no ``[nlv, Vmax, Dmax]`` padding.
+
+    Vertices live at compact level-major slots ``0..nv-1`` (level
+    ascending, original id ascending within a level — the same order the
+    dense views use, so tie-breaks agree); edges sort by (destination
+    level, destination, original id) exactly like :func:`compile_plan`.
+    ``level_ptr``/``v_ptr`` delimit each level's edge and vertex runs, and
+    the forward walks levels with fixed ``[Emax_lv]``/``[Vmax_lv]``
+    windows (bucketed per-level maxima) via dynamic slices + segment-max —
+    memory is O(nv + ne), not O(nlv·Vmax·max(Dmax, Emax)).
+
+    Padding invariants the sparse forward relies on:
+
+    - ``ne_p ≥ ne + Emax_lv`` and ``nv_p ≥ nv + Vmax_lv``: real levels'
+      windows never clamp, and padded levels' windows (which start at
+      ``ne``/``nv``) only ever touch pad slots.
+    - pad edges carry ``edst_slot = nv + Vmax_lv``, so their window-local
+      destination is ≥ ``Vmax_lv`` at every level — dropped by JAX's
+      scatter out-of-bounds semantics (and never negative).
+    """
+
+    esrc_slot: np.ndarray   # [ne_p] int32 compact slot of the edge source
+    edst_slot: np.ndarray   # [ne_p] int32 compact slot of the destination
+    emask: np.ndarray       # [ne_p] bool
+    econst: np.ndarray      # [ne_p] float64
+    egap: np.ndarray        # [ne_p] float64
+    egclass: np.ndarray     # [ne_p] int32
+    elat: np.ndarray        # [ne_p, nclass] float64
+    elat_sum: np.ndarray    # [ne_p] float64 (λ tie-break slopes)
+    vcost: np.ndarray       # [nv_p] float64
+    valid: np.ndarray       # [nv_p] bool
+    vert_of_slot: np.ndarray  # [nv_p] int32 (original id, pad → nv)
+    level_ptr: np.ndarray   # [nlv_p + 1] int32 edge run starts (pad → ne)
+    v_ptr: np.ndarray       # [nlv_p + 1] int32 vertex run starts (pad → nv)
+    nv: int
+    ne: int
+    nclass: int
+    nlevels: int
+    Emax_lv: int            # bucketed max edges in one level (window size)
+    Vmax_lv: int            # bucketed max vertices in one level
+
+    @property
+    def shape_key(self) -> tuple:
+        """Bucketed shapes + window sizes — equal keys share XLA programs."""
+        return (self.esrc_slot.shape[0], self.vcost.shape[0],
+                self.level_ptr.shape[0], self.Emax_lv, self.Vmax_lv,
+                self.nclass)
+
+    def sparse_bytes(self) -> int:
+        """Bytes the sparse backend stages for this plan."""
+        return sum(getattr(self, n).nbytes for n in (
+            "esrc_slot", "edst_slot", "emask", "econst", "egap", "egclass",
+            "elat", "elat_sum", "vcost", "valid", "vert_of_slot",
+            "level_ptr", "v_ptr"))
+
+    def content_hash(self) -> str:
+        h = getattr(self, "_hash", None)
+        if h is None:
+            from .cache import canonical_bytes
+            sha = hashlib.sha1(b"sparse-plan-v1")
+            sha.update(np.int64([self.nv, self.ne, self.nclass,
+                                 self.nlevels]).tobytes())
+            for n in ("esrc_slot", "edst_slot", "emask", "econst", "egap",
+                      "egclass", "elat", "vcost", "valid", "vert_of_slot",
+                      "level_ptr", "v_ptr"):
+                for chunk in canonical_bytes(getattr(self, n)):
+                    sha.update(chunk)
+            h = sha.hexdigest()
+            object.__setattr__(self, "_hash", h)
+        return h
+
+    @classmethod
+    def from_plan(cls, c: CompiledPlan) -> "SparsePlan":
+        """Re-lay a dense plan as slot lists (the ``run(backend="sparse")``
+        per-call override path).  Produces exactly what
+        :func:`compile_sparse` builds from the source graph: the dense
+        plan's ``epos_*`` records recover every edge in original order,
+        and ascending flat-slot order IS compact level-major order."""
+        if c.epos_lvl is None:
+            raise ValueError(
+                "plan carries no edge-position records (hand-assembled?); "
+                "recompile with compile_plan() or use compile_sparse()")
+        Vmax, dummy = c.Vmax, c.flat_dummy
+        slots = np.nonzero(c.valid_flat[:dummy])[0]
+        compact = np.full(dummy + 1, -1, dtype=np.int64)
+        compact[slots] = np.arange(c.nv, dtype=np.int64)
+        lvl = c.epos_lvl.astype(np.int64)
+        es = c.epos_e.astype(np.int64)
+        esrc_c = compact[c.esrc[lvl, es].astype(np.int64)]
+        edst_c = compact[lvl * Vmax + c.epos_dst.astype(np.int64)]
+        eorder = np.argsort(edst_c, kind="stable")
+        vlvl_s = slots // Vmax
+        v_ptr = np.searchsorted(vlvl_s, np.arange(c.nlevels + 1))
+        elvl_s = lvl[eorder]
+        level_ptr = np.searchsorted(elvl_s, np.arange(c.nlevels + 1))
+        return _assemble_sparse(
+            nv=c.nv, nc=c.nclass, nlevels=c.nlevels,
+            esrc_s=esrc_c[eorder], edst_s=edst_c[eorder],
+            econst_s=c.econst[lvl, es][eorder],
+            egap_s=c.egap[lvl, es][eorder],
+            egclass_s=c.egclass[lvl, es][eorder],
+            elat_s=c.elat[lvl, es][eorder],
+            vcost_s=c.vcost_lv[vlvl_s, slots % Vmax],
+            vert_s=c.vert_of_slot[slots],
+            level_ptr=level_ptr, v_ptr=v_ptr)
+
+
+def _assemble_sparse(nv: int, nc: int, nlevels: int,
+                     esrc_s: np.ndarray, edst_s: np.ndarray,
+                     econst_s: np.ndarray, egap_s: np.ndarray,
+                     egclass_s: np.ndarray, elat_s: np.ndarray,
+                     vcost_s: np.ndarray, vert_s: np.ndarray,
+                     level_ptr: np.ndarray, v_ptr: np.ndarray) -> SparsePlan:
+    """Pad level-sorted compact-slot arrays into a :class:`SparsePlan`
+    honouring the class's padding invariants."""
+    ne = int(esrc_s.shape[0])
+    Emax_lv = _bucket(int(np.diff(level_ptr).max(initial=1)))
+    Vmax_lv = _bucket(int(np.diff(v_ptr).max(initial=1)))
+    nlv_p = _bucket(nlevels)
+    ne_p = _bucket(ne + Emax_lv)
+    nv_p = _bucket(nv + Vmax_lv)
+
+    def padv(a, n, fill, dtype=None):
+        out = np.full((n,) + a.shape[1:], fill,
+                      dtype=a.dtype if dtype is None else dtype)
+        out[:a.shape[0]] = a
+        return out
+
+    elat_p = padv(elat_s.astype(np.float64), ne_p, 0.0)
+    return SparsePlan(
+        esrc_slot=padv(esrc_s, ne_p, 0, np.int32),
+        edst_slot=padv(edst_s, ne_p, nv + Vmax_lv, np.int32),
+        emask=padv(np.ones(ne, dtype=bool), ne_p, False),
+        econst=padv(econst_s.astype(np.float64), ne_p, 0.0),
+        egap=padv(egap_s.astype(np.float64), ne_p, 0.0),
+        egclass=padv(egclass_s, ne_p, 0, np.int32),
+        elat=elat_p, elat_sum=elat_p.sum(axis=1),
+        vcost=padv(vcost_s.astype(np.float64), nv_p, 0.0),
+        valid=padv(np.ones(nv, dtype=bool), nv_p, False),
+        vert_of_slot=padv(vert_s, nv_p, nv, np.int32),
+        level_ptr=padv(level_ptr, nlv_p + 1, ne, np.int32),
+        v_ptr=padv(v_ptr, nlv_p + 1, nv, np.int32),
+        nv=nv, ne=ne, nclass=nc, nlevels=nlevels,
+        Emax_lv=Emax_lv, Vmax_lv=Vmax_lv)
+
+
+def compile_sparse(g: ExecutionGraph,
+                   params: Optional[LogGPS] = None) -> SparsePlan:
+    """Compile an execution graph straight into a :class:`SparsePlan`.
+
+    Same edge/vertex orders and gap decomposition as :func:`compile_plan`
+    (so T and λ agree bit-for-bit with the segment backend), but nothing
+    is ever laid out dense — this is the entry point for graphs whose
+    padded envelope would blow past ``MAX_DENSE_BYTES``.
+    """
+    nv, ne, nc = g.num_vertices, g.num_edges, g.nclass
+    if nv == 0:
+        raise ValueError("cannot compile an empty graph")
+    nlevels = g.nlevels
+    lvl_of_edge = g.level[g.edst]
+    eorder = np.lexsort((g.edst, lvl_of_edge))
+    elvl_s = lvl_of_edge[eorder].astype(np.int64)
+    level_ptr = np.searchsorted(elvl_s, np.arange(nlevels + 1))
+    vorder = np.argsort(g.level, kind="stable").astype(np.int64)
+    vlvl_s = g.level[vorder].astype(np.int64)
+    v_ptr = np.searchsorted(vlvl_s, np.arange(nlevels + 1))
+    slot_of_vertex = np.empty(nv, dtype=np.int64)
+    slot_of_vertex[vorder] = np.arange(nv, dtype=np.int64)
+    egap_o, egclass_o = edge_gap_shares(g, params)
+    return _assemble_sparse(
+        nv=nv, nc=nc, nlevels=nlevels,
+        esrc_s=slot_of_vertex[g.esrc[eorder].astype(np.int64)],
+        edst_s=slot_of_vertex[g.edst[eorder].astype(np.int64)],
+        econst_s=g.econst[eorder].astype(np.float64),
+        egap_s=egap_o[eorder], egclass_s=egclass_o[eorder],
+        elat_s=g.elat[eorder].astype(np.float64),
+        vcost_s=g.vcost[vorder].astype(np.float64),
+        vert_s=vorder, level_ptr=level_ptr, v_ptr=v_ptr)
+
+
+def estimate_dense_bytes(g: ExecutionGraph) -> int:
+    """What :meth:`CompiledPlan.dense_bytes` would report for ``g``,
+    computed from degree statistics WITHOUT materializing the dense
+    envelope — the dense materialization is itself the memory cliff, so
+    the dense→sparse auto-switch must decide before compiling."""
+    nv = g.num_vertices
+    indeg = np.bincount(g.edst, minlength=nv)
+    ecnt = np.bincount(g.level[g.edst], minlength=g.nlevels)
+    vcnt = np.bincount(g.level, minlength=g.nlevels)
+    Emax = _bucket(int(ecnt.max(initial=1)))
+    Vmax = _bucket(int(vcnt.max(initial=1)))
+    Dmax = _bucket(int(indeg.max(initial=1)), lo=2)
+    nlv_p = _bucket(g.nlevels)
+    return (_segment_view_bytes(nlv_p, Vmax, Dmax, g.nclass)
+            + _pallas_view_bytes(nlv_p, Vmax, Emax, g.nclass))

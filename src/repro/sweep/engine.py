@@ -35,6 +35,15 @@ pallas backend serves T *and* sensitivities natively — no segment
 redispatch.  Float32 accumulators (like the TPU VPU): tolerance ≈ 1e-6
 relative vs segment.
 
+``sparse``: compact CSR-style slot lists (``compile.SparsePlan``) — each
+level is a fixed-size window of the level-sorted edge list relaxed with a
+``segment_max`` over window-local destinations, so memory is O(nv + ne)
+with no dense padding at all.  Float64 with the same tie-break op
+sequences as ``segment`` (T and λ bit-identical); the scenario axis is
+``vmap``'d and is the only batch axis.  :class:`repro.sweep.api.Engine`
+auto-switches to it when a graph's dense envelope would blow past
+``MAX_DENSE_BYTES``.
+
 λ on the segment backend is **two-pass** by default: a values-only
 ``fori_loop`` forward recording per-level argmax slots, then a reverse
 backtrace scan — bit-identical to the original fused single-loop backtrace
@@ -53,6 +62,13 @@ alongside the scenario axis on either backend, λ/ρ included.  Structure
 tensors stay unbatched inside the vmap, so every cost block of every call
 reuses the ONE compiled program of the plan's shape bucket: the zero-
 recompile path behind ``core.placement``'s greedy search.
+
+Structure blocks: ``Query(structure=StructureBatch)`` adds a B variant
+axis over the *structure* tensors instead — rewired slot sources and edge
+masks batched, everything untouched broadcast — so a whole topology study
+(edge re-wirings, or separately-compiled plans stamped onto a union
+envelope) runs as ONE compiled program per super-envelope, λ tie-breaks
+re-derived per variant in-kernel.
 
 Also here: lockstep-batched versions of the bisection loops from
 ``core.dag`` (``tolerance_batched``, ``breakpoints_batched``) — every probe
@@ -323,7 +339,8 @@ def _make_segment_one(want_lam: bool, fused: bool = False):
 
 
 def _segment_core_axes(want_lam: bool, multi: bool, costs: Optional[tuple],
-                       fused: bool = False):
+                       fused: bool = False,
+                       structure: Optional[tuple] = None):
     """The generalized segment forward: one vmap per populated batch axis.
 
     The innermost vmap always rides scenarios [S]; ``costs`` (a
@@ -342,6 +359,8 @@ def _segment_core_axes(want_lam: bool, multi: bool, costs: Optional[tuple],
     if costs is not None:
         core = jax.vmap(core, in_axes=(None, None) + tuple(costs)
                         + (None,) * 3 + (None, None))            # K
+    if structure is not None:
+        core = jax.vmap(core, in_axes=tuple(structure))          # B
     if multi:
         core = jax.vmap(core, in_axes=(0,) * 12)                 # G
     return core
@@ -371,6 +390,23 @@ _PAL_COST_FIELDS = ("econst", "egap", "egclass", "elat")
 _SEG_COST_POS = {n: i for i, n in enumerate(_SEG_COST_FIELDS, start=2)}
 _PAL_COST_POS = {n: i for i, n in enumerate(_PAL_COST_FIELDS, start=3)}
 
+#: structure-batch tensors each backend stages, mapped to their position in
+#: the 10 staged plan args.  The pallas 0/−inf indicator (position 0) is
+#: derived from emask/edstl and handled separately by the engine; ``edstl``
+#: itself is consumed only through the indicator.
+_SEG_STRUCT_POS = {"vsrc": 0, "vmaskd": 1, "vconst": 2, "vgap": 3,
+                   "vgclass": 4, "vlat": 5, "vlat_sum": 6, "vcost_lv": 7,
+                   "valid_flat": 8, "vert_of_slot": 9}
+_PAL_STRUCT_POS = {"esrc": 1, "emask": 2, "econst": 3, "egap": 4,
+                   "egclass": 5, "elat": 6, "vcost_lv": 7,
+                   "valid_flat": 8, "vert_of_slot": 9}
+#: structure tensors that determine one backend's results — the view the
+#: engine hashes a StructureBatch under when keying cached results
+_SEG_STRUCT_FIELDS = tuple(_SEG_STRUCT_POS)
+_PAL_STRUCT_FIELDS = ("esrc", "edstl", "emask", "econst", "egap",
+                      "egclass", "elat", "vcost_lv", "valid_flat",
+                      "vert_of_slot")
+
 
 def _same_buffer(a: np.ndarray, b: np.ndarray) -> bool:
     """True iff two arrays are literally the same memory view (start,
@@ -399,18 +435,23 @@ def _segment_core_costs(want_lam: bool, axes: tuple, fused: bool = False):
     return _segment_core_axes(want_lam, False, axes, fused)
 
 
-def _dense_core_axes(want_lam: bool, multi: bool, costs: Optional[tuple]):
+def _dense_core_axes(want_lam: bool, multi: bool, costs: Optional[tuple],
+                     structure: Optional[tuple] = None):
     """The generalized pallas forward.  The scenario axis rides the
     kernel's 128-wide lanes and the graph axis (``multi``) rides the
     batched kernel's outer grid axis, so neither is a vmap; ``costs`` adds
     the candidate axis by vmapping ONLY the patched cost tensors over the
     (graph-batched) kernel core — output layout [K?, G?, S], which the
-    engine transposes to the canonical [G?, K?, S]."""
+    engine transposes to the canonical [G?, K?, S].  ``structure`` adds
+    the B variant axis outermost (per-staged-arg vmap axes, indicator
+    included) — output layout [B, K?, S]."""
     jax = _jax()
     core = (_dense_core_multi if multi else _dense_core)(want_lam)
     if costs is not None:
         core = jax.vmap(core, in_axes=(None,) * 3 + tuple(costs)
                         + (None,) * 3 + (None, None))
+    if structure is not None:
+        core = jax.vmap(core, in_axes=tuple(structure))           # B
     return core
 
 
@@ -626,6 +667,255 @@ def _dense_core_multi(want_lam: bool = False):
     return fwd
 
 
+def _make_sparse_one(want_lam: bool, Emax_lv: int, Vmax_lv: int):
+    """The single-scenario sparse (slot-list) forward.
+
+    Levels are walked with fixed ``[Emax_lv]`` windows of the level-sorted
+    edge lists and ``[Vmax_lv]`` vertex windows; the level scatter-max is a
+    ``segment_max`` over window-local destinations (``edst − v_ptr[lv]``,
+    computed in-kernel).  :class:`~repro.sweep.compile.SparsePlan`'s
+    padding invariants make the windows safe: real levels never clamp,
+    padded levels' windows touch only pad slots, and pad/foreign edges
+    land at window-local destinations ≥ the destination level's true size
+    — overrun writes into later-level slots are overwritten by that
+    level's own full-window write before anything reads them, and
+    out-of-window destinations are dropped by scatter OOB semantics.
+
+    λ mirrors the segment backend's two-pass backtrace with the argmax in
+    the *edge* domain: among value hits (within ATOL of the level max),
+    max cumulative slope, then max global edge index — which, with edges
+    sorted by (destination level, destination, original id), IS the max
+    in-edge ordinal.  Same float64 op sequences per path ⇒ T and λ are
+    bit-identical to ``segment``.
+    """
+    jax = _jax()
+    jnp = jax.numpy
+    dus = jax.lax.dynamic_update_slice
+    dsl = jax.lax.dynamic_slice
+
+    def one(esrc, edst, emask, econst, egap, egclass, elat, elat_sum,
+            vcost, valid, vert_of_slot, level_ptr, v_ptr, Lrow, gsrow):
+        nlv = level_ptr.shape[0] - 1
+        nv_p = vcost.shape[0]
+        nc = elat.shape[1]
+        eidx = jnp.arange(Emax_lv, dtype=jnp.int32)
+        vidx = jnp.arange(Vmax_lv, dtype=jnp.int32)
+
+        def relax(lv, t):
+            e0 = level_ptr[lv]
+            es = dsl(esrc, (e0,), (Emax_lv,))
+            em = dsl(emask, (e0,), (Emax_lv,))
+            w = (dsl(econst, (e0,), (Emax_lv,))
+                 + dsl(egap, (e0,), (Emax_lv,))
+                 * (gsrow[dsl(egclass, (e0,), (Emax_lv,))] - 1.0)
+                 + dsl(elat, (e0, jnp.int32(0)), (Emax_lv, nc)) @ Lrow)
+            cand = jnp.where(em, t[es] + w, -BIG)
+            dloc = dsl(edst, (e0,), (Emax_lv,)) - v_ptr[lv]
+            seg = jax.ops.segment_max(cand, dloc, num_segments=Vmax_lv)
+            ts = jnp.maximum(seg, 0.0)
+            return e0, es, em, cand, dloc, ts
+
+        def vwin(lv):
+            return dsl(vcost, (v_ptr[lv],), (Vmax_lv,))
+
+        if not want_lam:
+            def body(lv, t):
+                _, _, _, _, _, ts = relax(lv, t)
+                return dus(t, ts + vwin(lv), (v_ptr[lv],))
+
+            t = jax.lax.fori_loop(0, nlv, body, jnp.zeros(nv_p))
+            T = jnp.max(jnp.where(valid, t, -BIG))
+            return T, jnp.zeros((nc,))
+
+        def body(lv, carry):
+            t, ssum, nxt, lrow = carry
+            e0, es, em, cand, dloc, ts = relax(lv, t)
+            dsafe = jnp.clip(dloc, 0, Vmax_lv - 1)
+            hit = em & (cand >= ts[dsafe] - ATOL)
+            cs = ssum[es] + dsl(elat_sum, (e0,), (Emax_lv,))
+            best = jax.ops.segment_max(jnp.where(hit, cs, -BIG), dloc,
+                                       num_segments=Vmax_lv)
+            sel = hit & (cs >= best[dsafe] - ATOL)
+            chosen = jax.ops.segment_max(
+                jnp.where(sel, e0 + eidx, -1), dloc,
+                num_segments=Vmax_lv)
+            has = chosen >= 0
+            ce = jnp.where(has, chosen, 0)
+            srcslot = esrc[ce]
+            ss_new = jnp.where(has, ssum[srcslot] + elat_sum[ce], 0.0)
+            own = v_ptr[lv] + vidx
+            nxt_row = jnp.where(has, srcslot, own).astype(jnp.int32)
+            row = jnp.where(has[:, None], elat[ce], 0.0)
+            v0 = v_ptr[lv]
+            return (dus(t, ts + vwin(lv), (v0,)),
+                    dus(ssum, ss_new, (v0,)),
+                    dus(nxt, nxt_row, (v0,)),
+                    dus(lrow, row, (v0, jnp.int32(0))))
+
+        init = (jnp.zeros(nv_p), jnp.zeros(nv_p),
+                jnp.arange(nv_p, dtype=jnp.int32),
+                jnp.zeros((nv_p, nc)))
+        t, ssum, nxt, lrow = jax.lax.fori_loop(0, nlv, body, init)
+        T = jnp.max(jnp.where(valid, t, -BIG))
+        sink = valid & (t >= T - ATOL)
+        mx = jnp.max(jnp.where(sink, ssum, -BIG))
+        top = sink & (ssum >= mx)
+        v = jnp.argmin(jnp.where(top, vert_of_slot,
+                                 jnp.iinfo(jnp.int32).max))
+        _, visited = jax.lax.scan(lambda cur, _: (nxt[cur], cur),
+                                  jnp.int32(v), None, length=nlv)
+        lam, _ = jax.lax.scan(lambda acc, r: (acc + r, 0.0),
+                              jnp.zeros(nc), lrow[visited][::-1])
+        return T, lam
+
+    return one
+
+
+def _sparse_core_axes(want_lam: bool, dims: tuple):
+    """Sparse forward over S scenarios — the only batch axis the sparse
+    backend populates (graphs past the dense cliff are evaluated solo).
+    ``dims`` = (Emax_lv, Vmax_lv), the static window sizes."""
+    jax = _jax()
+    one = _make_sparse_one(want_lam, *dims)
+    return jax.vmap(one, in_axes=(None,) * 13 + (0, 0))
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _sparse_pallas_core(want_lam: bool, dims: tuple):
+    """Sparse slot-list forward through the Pallas kernel — the float32
+    flavor of the sparse backend (``ExecPolicy(backend="sparse",
+    dtype="float32")``).
+
+    Same compact per-level windows as :func:`_make_sparse_one`, but the
+    level scatter-max runs the slot-list (max,+) kernel with scenarios on
+    the 128-wide lane axis (no per-scenario vmap) and the in-kernel
+    lexicographic (value, cumulative-slope key, ordinal) argmax drives the
+    λ backtrace — the sparse twin of ``_dense_core``.  Float32
+    accumulators ⇒ T within ~1e-6 relative of the float64 slot-list
+    forward; the same exact-tie caveat as the dense kernel applies
+    (tolerance-grouped tie sets aren't associative across blocked
+    reductions), so segment/sparse-f64 stay the bit-exact references.
+    """
+    jax = _jax()
+    jnp = jax.numpy
+    from repro.kernels.maxplus.ops import maxplus_slotlist_argmax
+
+    Emax_lv, Vmax_lv = dims
+    dsl = jax.lax.dynamic_slice
+    dus = jax.lax.dynamic_update_slice
+    E_pad = _round_up(Emax_lv, min(128, _round_up(Emax_lv, 8)))
+    be = min(128, E_pad)
+    E_pad = _round_up(E_pad, be)
+    M_pad = _round_up(Vmax_lv, min(128, _round_up(Vmax_lv, 8)))
+    bm = min(128, M_pad)
+    M_pad = _round_up(M_pad, bm)
+
+    def fwd(esrc, edst, emask, econst, egap, egclass, elat, elat_sum,
+            vcost, valid, vert_of_slot, level_ptr, v_ptr, Lmat, GSmat):
+        nlv = level_ptr.shape[0] - 1
+        nv_p = vcost.shape[0]
+        nc = elat.shape[1]
+        S = Lmat.shape[0]
+        vidx = jnp.arange(Vmax_lv, dtype=jnp.int32)
+
+        def relax(lv, t):
+            e0 = level_ptr[lv]
+            es = dsl(esrc, (e0,), (Emax_lv,))
+            em = dsl(emask, (e0,), (Emax_lv,))
+            gcls = dsl(egclass, (e0,), (Emax_lv,))
+            w = (dsl(econst, (e0,), (Emax_lv,))[:, None]
+                 + dsl(egap, (e0,), (Emax_lv,))[:, None]
+                 * (jnp.take(GSmat, gcls, axis=1).T - 1.0)
+                 + dsl(elat, (e0, jnp.int32(0)), (Emax_lv, nc)) @ Lmat.T)
+            cand = jnp.where(em[:, None], t[es] + w, -BIG)   # [Emax_lv, S]
+            dloc = dsl(edst, (e0,), (Emax_lv,)) - v_ptr[lv]
+            return e0, es, cand, dloc
+
+        def reduce(cand, dloc, key):
+            # pad to the kernel's block multiples; pad slots point past
+            # every row (never hit), pad rows come back −∞/−1 and are
+            # sliced off
+            cf = jnp.pad(cand.astype(jnp.float32),
+                         ((0, E_pad - Emax_lv), (0, 0)),
+                         constant_values=-BIG)
+            kf = jnp.pad(key.astype(jnp.float32),
+                         ((0, E_pad - Emax_lv), (0, 0)))
+            d = jnp.pad(dloc.astype(jnp.int32), (0, E_pad - Emax_lv),
+                        constant_values=M_pad)[:, None]
+            out, idx = maxplus_slotlist_argmax(d, cf, kf, M=M_pad,
+                                               bm=bm, be=be)
+            return out[:Vmax_lv], idx[:Vmax_lv]
+
+        def vwin(lv):
+            return dsl(vcost, (v_ptr[lv],), (Vmax_lv,))
+
+        if not want_lam:
+            def body(lv, t):
+                _, _, cand, dloc = relax(lv, t)
+                raw, _ = reduce(cand, dloc, jnp.zeros_like(cand))
+                ts = jnp.maximum(raw, 0.0)
+                return dus(t, (ts + vwin(lv)[:, None]).astype(jnp.float32),
+                           (v_ptr[lv], jnp.int32(0)))
+
+            t = jax.lax.fori_loop(0, nlv, body,
+                                  jnp.zeros((nv_p, S), jnp.float32))
+            T = jnp.max(jnp.where(valid[:, None], t, -BIG), axis=0)
+            return T, jnp.zeros((S, nc), jnp.float32)
+
+        def body(lv, carry):
+            t, ssum, nxt, lrow = carry
+            e0, es, cand, dloc = relax(lv, t)
+            cs = (jnp.take(ssum, es, axis=0)
+                  + dsl(elat_sum, (e0,), (Emax_lv,))[:, None])
+            raw, eidx = reduce(cand, dloc, cs)               # [Vmax_lv, S]
+            ts = jnp.maximum(raw, 0.0)
+            has = (raw >= 0.0) & (eidx >= 0)
+            ce = jnp.where(has, eidx, 0)
+            srcslot = es[ce]                                 # [Vmax_lv, S]
+            ss_new = jnp.where(
+                has,
+                jnp.take_along_axis(ssum, srcslot, axis=0)
+                + dsl(elat_sum, (e0,), (Emax_lv,))[ce], 0.0)
+            own = v_ptr[lv] + vidx
+            nxt_row = jnp.where(has, srcslot, own[:, None]).astype(jnp.int32)
+            elat_w = dsl(elat, (e0, jnp.int32(0)), (Emax_lv, nc))
+            row = jnp.where(has[:, :, None], elat_w[ce], 0.0)
+            v0 = v_ptr[lv]
+            z = jnp.int32(0)
+            return (dus(t, (ts + vwin(lv)[:, None]).astype(jnp.float32),
+                        (v0, z)),
+                    dus(ssum, ss_new.astype(jnp.float32), (v0, z)),
+                    dus(nxt, nxt_row, (v0, z)),
+                    dus(lrow, row.astype(jnp.float32), (v0, z, z)))
+
+        init = (jnp.zeros((nv_p, S), jnp.float32),
+                jnp.zeros((nv_p, S), jnp.float32),
+                jnp.broadcast_to(jnp.arange(nv_p, dtype=jnp.int32)[:, None],
+                                 (nv_p, S)),
+                jnp.zeros((nv_p, S, nc), jnp.float32))
+        t, ssum, nxt, lrow = jax.lax.fori_loop(0, nlv, body, init)
+        T = jnp.max(jnp.where(valid[:, None], t, -BIG), axis=0)
+        sink = valid[:, None] & (t >= T[None, :])
+        mx = jnp.max(jnp.where(sink, ssum, -BIG), axis=0)
+        top = sink & (ssum >= mx[None, :])
+        vsel = jnp.argmin(jnp.where(top, vert_of_slot[:, None],
+                                    jnp.iinfo(jnp.int32).max), axis=0)
+        sidx = jnp.arange(S)
+
+        def step(cur, _):
+            return nxt[cur, sidx], cur
+
+        _, visited = jax.lax.scan(step, vsel.astype(jnp.int32), None,
+                                  length=nlv)                # [nlv, S]
+        lam = jnp.sum(lrow[visited, sidx[None, :], :], axis=0)
+        return T, lam
+
+    return fwd
+
+
 _FWD_CACHE: dict = {}
 _MESHES: dict = {}
 
@@ -666,11 +956,16 @@ def _stage_arrays(plan, kind: str, max_dense_bytes: int) -> tuple:
             plan.vsrc, plan.vmaskd, plan.vconst, plan.vgap, plan.vgclass,
             plan.vlat, plan.vlat_sum, plan.vcost_lv, plan.valid_flat,
             plan.vert_of_slot))
+    if kind == "sparse":
+        return tuple(jnp.asarray(a) for a in (
+            plan.esrc_slot, plan.edst_slot, plan.emask, plan.econst,
+            plan.egap, plan.egclass, plan.elat, plan.elat_sum, plan.vcost,
+            plan.valid, plan.vert_of_slot, plan.level_ptr, plan.v_ptr))
     if plan.dense_bytes() > max_dense_bytes:
         raise ValueError(
             f"dense pallas backend needs {plan.dense_bytes() >> 20} MiB "
             f"of indicator tensors (> {max_dense_bytes >> 20}); "
-            "use backend='segment'")
+            "use backend='segment' or backend='sparse'")
     return tuple(jnp.asarray(a) for a in (
         plan.dense_indicator(-BIG), plan.esrc, plan.emask,
         plan.econst.astype(np.float32), plan.egap.astype(np.float32),
@@ -731,7 +1026,9 @@ def _shard_specs(kind: str, multi: bool, costs: Optional[tuple],
 def _get_forward(kind: str, want_lam: bool = False, multi: bool = False,
                  fused: bool = False, mesh=None,
                  costs: Optional[tuple] = None,
-                 shard_axis: Optional[str] = None):
+                 shard_axis: Optional[str] = None,
+                 structure: Optional[tuple] = None,
+                 sparse_dims: Optional[tuple] = None):
     """Build (or fetch) the jitted forward for one populated-axis cell.
 
     The cell is keyed on (backend, λ, G axis, K axes, mesh, shard axis):
@@ -755,6 +1052,21 @@ def _get_forward(kind: str, want_lam: bool = False, multi: bool = False,
     mesh_key = None if mesh is None else tuple(
         d.id for d in np.asarray(mesh.devices).flat)
     fused = bool(fused and want_lam and kind == "segment")
+    if kind in ("sparse", "sparse_pallas"):
+        if multi or costs is not None or structure is not None:
+            raise ValueError("sparse backend populates the scenario axis "
+                             "only (no G/K/B batching yet)")
+        if mesh is not None:
+            raise ValueError("sparse backend does not shard yet")
+        if sparse_dims is None:
+            raise ValueError("sparse forward needs sparse_dims="
+                             "(Emax_lv, Vmax_lv)")
+    if structure is not None and multi:
+        raise ValueError("structure blocks and a MultiPlan graph axis "
+                         "cannot combine (pick one variant axis)")
+    if structure is not None and mesh is not None:
+        raise ValueError("sharding a structure-batched query is not "
+                         "supported yet")
     if mesh is None:
         shard_axis = None
     elif shard_axis is None:
@@ -765,12 +1077,18 @@ def _get_forward(kind: str, want_lam: bool = False, multi: bool = False,
     if shard_axis == "K" and costs is None:
         raise ValueError("shard_axis='K' needs a cost-batched forward "
                          "(no candidate axis is populated)")
-    key = (kind, want_lam, multi, fused, mesh_key, costs, shard_axis)
+    key = (kind, want_lam, multi, fused, mesh_key, costs, shard_axis,
+           structure, sparse_dims)
     if key in _FWD_CACHE:
         return _FWD_CACHE[key]
-    core = (_segment_core_axes(want_lam, multi, costs, fused)
-            if kind == "segment" else _dense_core_axes(want_lam, multi,
-                                                       costs))
+    if kind == "segment":
+        core = _segment_core_axes(want_lam, multi, costs, fused, structure)
+    elif kind == "sparse":
+        core = _sparse_core_axes(want_lam, sparse_dims)
+    elif kind == "sparse_pallas":
+        core = _sparse_pallas_core(want_lam, sparse_dims)
+    else:
+        core = _dense_core_axes(want_lam, multi, costs, structure)
     if mesh is not None:
         from jax.experimental.shard_map import shard_map
         in_specs, out_specs = _shard_specs(kind, multi, costs, shard_axis)

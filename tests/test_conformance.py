@@ -26,6 +26,10 @@ Tolerance contract (no looser than PR 3's):
 * scalar itself anchors against *independent* oracles: the explicit HiGHS
   LP's duals (solo/multi) and a graph rebuilt with the extra costs baked
   into ``econst`` (patched).
+* sparse vs segment — **bit-exact** on T/λ/ρ (same float64 reductions over
+  compact slot lists instead of padded dense tensors); vs pallas at the
+  pallas tolerances.  Dedicated tests below (the sparse backend is
+  solo-only: one graph per compiled program).
 """
 
 import dataclasses
@@ -285,6 +289,75 @@ def test_random_graph_matrix():
         np.testing.assert_allclose(pal.rho, seg.rho, rtol=1e-4, atol=1e-5)
         combos += batch.S
     assert combos >= 100
+
+
+def test_sparse_backend_conformance():
+    """The sparse rows of the matrix: compact slot lists (float64 segment
+    reductions, no dense padding) are **bit-exact** with the segment
+    backend on T, λ and ρ for every case — whether the sparse layout was
+    compiled directly from the graph or derived lazily from a bound dense
+    plan — and within the pallas tolerances of the pallas backend."""
+    for c in CASES:
+        seg = sweep.Engine(c.g, params=c.params,
+                           policy=sweep.ExecPolicy(cache=None)).run(c.batch)
+        # direct compile_sparse path (what million-edge graphs take)
+        eng = sweep.Engine(c.g, params=c.params,
+                           policy=sweep.ExecPolicy(backend="sparse",
+                                                   cache=None))
+        sp = eng.run(c.batch)
+        assert sp.backend == "sparse"
+        np.testing.assert_array_equal(sp.T, seg.T, err_msg=c.name)
+        np.testing.assert_array_equal(sp.lam, seg.lam, err_msg=c.name)
+        np.testing.assert_array_equal(sp.rho, seg.rho, err_msg=c.name)
+        # lazily-derived layout (dense engine, per-run backend override)
+        eng2 = sweep.Engine(sweep.compile_plan(c.g, c.params),
+                            params=c.params,
+                            policy=sweep.ExecPolicy(cache=None))
+        sp2 = eng2.run(c.batch, backend="sparse")
+        np.testing.assert_array_equal(sp2.T, seg.T, err_msg=c.name)
+        np.testing.assert_array_equal(sp2.lam, seg.lam, err_msg=c.name)
+        pal = eng2.run(c.batch, backend="pallas")
+        np.testing.assert_allclose(sp.T, pal.T, rtol=1e-5, atol=1e-7,
+                                   err_msg=c.name)
+        np.testing.assert_allclose(sp.lam, pal.lam, rtol=1e-5, atol=1e-5,
+                                   err_msg=c.name)
+        np.testing.assert_allclose(sp.rho, pal.rho, rtol=1e-4, atol=1e-5,
+                                   err_msg=c.name)
+        # dtype="float32" pins the slot-list (max,+) Pallas kernel flavor
+        # of the sparse backend — the pallas tolerances apply
+        spk = sweep.Engine(c.g, params=c.params,
+                           policy=sweep.ExecPolicy(
+                               backend="sparse", dtype="float32",
+                               cache=None)).run(c.batch)
+        assert spk.backend == "sparse"
+        np.testing.assert_allclose(spk.T, seg.T, rtol=1e-5, atol=1e-7,
+                                   err_msg=c.name)
+        np.testing.assert_allclose(spk.lam, seg.lam, rtol=1e-5, atol=1e-5,
+                                   err_msg=c.name)
+        np.testing.assert_allclose(spk.rho, seg.rho, rtol=1e-4, atol=1e-5,
+                                   err_msg=c.name)
+
+
+def test_sparse_random_graph_matrix():
+    """Random-DAG sweep for the sparse backend: bit-exact vs the scalar
+    oracle (the same guarantee the segment rows carry)."""
+    rng = np.random.default_rng(17)
+    for i in range(8):
+        p = LogGPS(L=(float(rng.uniform(0.5, 8.0)),),
+                   G=(float(rng.uniform(1e-6, 1e-4)),),
+                   o=float(rng.uniform(0.0, 4.0)), S=1e9)
+        g = synth.random_dag(rng, nranks=int(rng.integers(2, 5)), nops=40,
+                             p_msg=float(rng.uniform(0.2, 0.6)), params=p)
+        batch = sweep.latency_grid(p, np.sort(rng.uniform(0.0, 60.0, 4)))
+        res = sweep.Engine(g, params=p,
+                           policy=sweep.ExecPolicy(backend="sparse",
+                                                   cache=None)).run(batch)
+        plan = dag.LevelPlan(g)
+        for s_i in range(batch.S):
+            s = plan.forward(p.replace(L=tuple(batch.L[s_i])))
+            assert res.T[s_i] == s.T, (i, s_i)
+            np.testing.assert_array_equal(res.lam[s_i], s.lam)
+            np.testing.assert_array_equal(res.rho[s_i], s.rho())
 
 
 def test_lambda_matches_highs_marginals():

@@ -105,6 +105,38 @@ def test_maxplus_argmax_matches_ref(M, N, K, bm, bn):
     assert int(np.asarray(i)[7].max()) >= 0
 
 
+@pytest.mark.parametrize("M,E,K,bm,be", [(64, 128, 8, 32, 32),
+                                         (128, 256, 16, 64, 64)])
+def test_maxplus_slotlist_argmax_matches_ref(M, E, K, bm, be):
+    """The slot-list segment kernel reduces a compact edge list (no dense
+    [M, N] padding) to the same lexicographic (value, tie-key, ordinal)
+    argmax the dense kernel produces — ties injected across slot-block
+    boundaries, plus empty rows and out-of-range pad slots."""
+    from repro.kernels.maxplus import (maxplus_slotlist_argmax,
+                                       maxplus_slotlist_argmax_ref)
+    rng = np.random.default_rng(13)
+    dst = rng.integers(0, M - 4, E).astype(np.int32)  # rows M-4..M-1 empty
+    dst[-3:] = M                                      # pad slots: never hit
+    cand = rng.uniform(0.0, 100.0, (E, K)).astype(np.float32)
+    c = rng.integers(0, 5, (E, K)).astype(np.float32)
+    # exact value ties across slot-block boundaries: same row, same value,
+    # dominating the row so the tie chain (not some third slot) realizes it
+    dst[3] = dst[E - 5] = 7
+    cand[3] = cand[E - 5] = 1000.0
+    c[3] = c[E - 5]                      # key tie too → ordinal decides
+    o, i = maxplus_slotlist_argmax(jnp.asarray(dst[:, None]),
+                                   jnp.asarray(cand), jnp.asarray(c),
+                                   M=M, bm=bm, be=be)
+    ro, ri = maxplus_slotlist_argmax_ref(jnp.asarray(dst), jnp.asarray(cand),
+                                         jnp.asarray(c), M)
+    np.testing.assert_array_equal(np.asarray(o), np.asarray(ro))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+    # empty rows report the no-slot sentinels
+    assert np.all(np.asarray(i)[M - 4:] == -1)
+    assert np.all(np.asarray(o)[M - 4:] <= -1e29)
+    assert int(np.asarray(i)[7, 0]) == E - 5          # ordinal tie-break
+
+
 def test_maxplus_argmax_batched_matches_ref():
     from repro.kernels.maxplus import (maxplus_matvec_argmax_batched,
                                       maxplus_matvec_argmax_ref)

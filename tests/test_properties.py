@@ -159,6 +159,93 @@ def test_patched_costs_bit_equal_rebuilt_random_swaps(swaps):
         np.testing.assert_array_equal(res.rho[k], ref.rho)
 
 
+# -- zero-recompile structure patching: patched ≡ rebuilt, bit for bit --------
+
+def _rewire_fixture():
+    """One random-DAG workload + compiled base plan + warm engine, built
+    once (the property below replays many rewiring batches against it —
+    exactly a topology study's access pattern)."""
+    if "rewire" not in _PATCH_CACHE:
+        pytest.importorskip("jax")
+        from repro import sweep as sweep_mod
+        p = LogGPS(L=(3.0,), G=(1e-5,), o=1.0, S=1e9)
+        g = synth.random_dag(np.random.default_rng(5), nranks=4, nops=36,
+                             p_msg=0.5, params=p)
+        base = sweep_mod.compile_plan(g, p)
+        eng = sweep_mod.Engine(base, params=p,
+                               policy=sweep_mod.ExecPolicy(cache=None))
+        batch = sweep_mod.latency_grid(p, [0.0, 10.0, 30.0])
+        _PATCH_CACHE["rewire"] = (g, p, base, eng, batch)
+    return _PATCH_CACHE["rewire"]
+
+
+def _filtered(g, keep, src):
+    """Ground-up rebuild oracle: the graph with edges removed/re-sourced,
+    levels and in-edge CSR recomputed from scratch (the independent
+    construction a structure patch must be bit-equal to)."""
+    import dataclasses as dc
+    from repro.core.graph import _topo_levels
+    nv = g.num_vertices
+    esrc = src[keep].astype(np.int32)
+    edst = g.edst[keep]
+    level = _topo_levels(nv, esrc, edst)
+    in_ptr = np.zeros(nv + 1, np.int64)
+    np.cumsum(np.bincount(edst, minlength=nv), out=in_ptr[1:])
+    return dc.replace(
+        g, esrc=esrc, edst=edst, econst=g.econst[keep],
+        ebytes=g.ebytes[keep], elat=g.elat[keep],
+        egap=None if g.egap is None else g.egap[keep],
+        egclass=None if g.egclass is None else g.egclass[keep],
+        in_ptr=in_ptr,
+        in_edge=np.argsort(edst, kind="stable").astype(np.int32),
+        level=level, nlevels=int(level.max(initial=0)) + 1)
+
+
+@given(st.lists(
+    st.tuples(st.lists(st.integers(0, 10**6), max_size=6),
+              st.lists(st.tuples(st.integers(0, 10**6),
+                                 st.integers(0, 10**6)), max_size=4)),
+    min_size=1, max_size=4))
+@settings(max_examples=12, deadline=None)
+def test_patched_structure_bit_equal_rebuilt_random_rewiring(variants):
+    """Random edge rewirings (removals + level-respecting source moves —
+    a topology study's candidate structures): T/λ/ρ of the once-compiled
+    structure-batched run must be bit-equal to freshly rebuilt graphs
+    compiled from scratch, per variant, even though the rebuilds settle
+    on different (tighter) level schedules."""
+    from repro import sweep as sweep_mod
+
+    g, p, base, eng, batch = _rewire_fixture()
+    ne = g.num_edges
+    keeps, srcs = [], []
+    for removals, rewires in variants:
+        keep = np.ones(ne, dtype=bool)
+        for i in removals:
+            keep[i % ne] = False
+        src = g.esrc.astype(np.int64).copy()
+        for ei, vi in rewires:
+            e = ei % ne
+            # any vertex strictly below the destination's envelope level
+            # is a legal new source (the class of rewirings the patch
+            # supports); the rebuild re-levels from scratch regardless
+            cand = np.nonzero(g.level < g.level[g.edst[e]])[0]
+            if cand.size:
+                src[e] = cand[vi % cand.size]
+        keeps.append(keep)
+        srcs.append(src)
+    sb = base.patch_structure(src=np.stack(srcs), keep=np.stack(keeps))
+    res = eng.run(batch, structure=sb)
+    assert res.axes == ("B", "S")
+    for b in range(len(keeps)):
+        reb = sweep_mod.compile_plan(_filtered(g, keeps[b], srcs[b]), p)
+        ref = sweep_mod.Engine(
+            reb, params=p,
+            policy=sweep_mod.ExecPolicy(cache=None)).run(batch)
+        np.testing.assert_array_equal(res.T[b], ref.T)
+        np.testing.assert_array_equal(res.lam[b], ref.lam)
+        np.testing.assert_array_equal(res.rho[b], ref.rho)
+
+
 @given(st.integers(2, 5), st.integers(1, 4))
 @settings(max_examples=10, deadline=None)
 def test_injection_equivalence(pdim, iters):

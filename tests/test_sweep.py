@@ -57,8 +57,9 @@ def test_collective_variants(params):
     variants = sweep.collective_variants(
         lambda a: synth.allreduce_chain(8, 2, params=params, algo=a),
         ["ring", "recursive_doubling"], params)
-    out = sweep.sweep_variants(
-        variants, lambda v: sweep.latency_grid(params, [0.0, 20.0]))
+    with pytest.warns(DeprecationWarning, match="StructureBatch"):
+        out = sweep.sweep_variants(
+            variants, lambda v: sweep.latency_grid(params, [0.0, 20.0]))
     # recursive doubling has fewer latency-critical rounds: λ smaller, and
     # under +20µs latency it beats ring (the Fig 10 ordering)
     ring, rd = out["algo=ring"], out["algo=recursive_doubling"]
@@ -223,13 +224,15 @@ def test_sweep_variants_batched_call_count(params):
         ["ring", "bidir_ring", "recursive_doubling", "tree"], params)
     batch_of = lambda v: sweep.latency_grid(params, np.linspace(0, 50, 20))
     stats = {}
-    batched = sweep.sweep_variants(variants, batch_of, stats=stats,
-                                   batched=True, cache=None)
+    with pytest.warns(DeprecationWarning, match="StructureBatch"):
+        batched = sweep.sweep_variants(variants, batch_of, stats=stats,
+                                       batched=True, cache=None)
     assert stats["groups"] < len(variants)      # buckets merged variants
     assert stats["calls"] == stats["groups"] <= len(variants)
     loop_stats = {}
-    loop = sweep.sweep_variants(variants, batch_of, stats=loop_stats,
-                                batched=False, cache=None)
+    with pytest.warns(DeprecationWarning, match="StructureBatch"):
+        loop = sweep.sweep_variants(variants, batch_of, stats=loop_stats,
+                                    batched=False, cache=None)
     assert loop_stats["calls"] == len(variants)
     for name, ref in loop.items():
         np.testing.assert_array_equal(batched[name].T, ref.T)
