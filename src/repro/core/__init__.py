@@ -2,7 +2,7 @@
 
 Public API:
     graph.GraphBuilder / ExecutionGraph      — Schedgen-style DAGs
-    loggps.LogGPS / cluster_params / tpu_pod_params
+    loggps.LogGPS / NetworkModel / NetClass / cluster_params / pod_model
     collectives.allreduce / all_gather / ...  — collective → p2p expansion
     dag.evaluate / tolerance / breakpoints   — exact parametric engine
     lp.build_lp / predict_runtime / tolerance_lp  — Algorithm 1 + HiGHS
@@ -23,5 +23,6 @@ queries and fall back to the scalar engine when JAX is unavailable.
 from . import (collectives, dag, graph, hlo, ipm, loggps, lp, placement,  # noqa: F401
                sensitivity, simulator, synth, topology)
 from .graph import ExecutionGraph, GraphBuilder  # noqa: F401
-from .loggps import LogGPS, cluster_params, tpu_pod_params  # noqa: F401
+from .loggps import (LogGPS, NetClass, NetworkModel, cluster_params,  # noqa: F401
+                     pod_model, resolve_class, tpu_pod_params)
 from .sensitivity import analyze, latency_curve, latency_tolerance  # noqa: F401

@@ -47,7 +47,8 @@ def _round(b: GraphBuilder, msgs, p: LogGPS) -> None:
         cls = p.link_class(src, dst)
         gcost = p.gap_cost(nbytes, src, dst)
         b.add_edge(sv, rv, const_us=gcost, nbytes=nbytes, lat=((cls, 1),),
-                   gap_us=gcost, gclass=cls)
+                   gap_us=gcost, gclass=cls,
+                   link=b.intern_link(cls, src, dst))
 
 
 def _pairs_round(b: GraphBuilder, pairs, nbytes, p: LogGPS) -> None:

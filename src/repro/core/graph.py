@@ -69,6 +69,13 @@ class ExecutionGraph:
     nranks: int
     egap: Optional[np.ndarray] = None     # (ne,) float64
     egclass: Optional[np.ndarray] = None  # (ne,) int32
+    # physical-link interning (congestion analyses aggregate load per link):
+    # elink[e] is a dense link id in [0, nlinks) for message edges, -1 for
+    # dependency/handshake edges; link_classes[l] is the latency class of
+    # link l.  None on hand-constructed graphs (= no link information).
+    elink: Optional[np.ndarray] = None    # (ne,) int32
+    nlinks: int = 0
+    link_classes: Optional[np.ndarray] = None  # (nlinks,) int32
     # CSR-by-destination (computed in finalize)
     in_ptr: np.ndarray = None  # (nv+1,)
     in_edge: np.ndarray = None  # (ne,) edge ids sorted by dst
@@ -124,6 +131,9 @@ class GraphBuilder:
         self._elat: list[tuple] = []  # sparse: list of (class, mult) tuples
         self._egap: list[float] = []  # (s-1)·G share of econst per edge
         self._egclass: list[int] = []
+        self._elink: list[int] = []   # interned link id per edge (-1 = none)
+        self._links: dict[tuple, int] = {}  # (class, src, dst) -> link id
+        self._link_cls: list[int] = []      # class per interned link
         self._tail = [-1] * nranks  # last vertex id per rank
         self._independent = False  # when True, skip program-order chaining
 
@@ -161,10 +171,25 @@ class GraphBuilder:
         self._elat.append(())
         self._egap.append(0.0)
         self._egclass.append(0)
+        self._elink.append(-1)
+
+    def intern_link(self, cls: int, src_rank: int, dst_rank: int) -> int:
+        """Dense id for the directed physical link (class, src, dst).
+
+        Repeated messages between the same rank pair on the same class share
+        one id, so per-link load aggregation (the congestion fixed point)
+        sees the sum of all traffic on that link.
+        """
+        key = (int(cls), int(src_rank), int(dst_rank))
+        lid = self._links.get(key)
+        if lid is None:
+            lid = self._links[key] = len(self._link_cls)
+            self._link_cls.append(int(cls))
+        return lid
 
     def add_edge(self, u: int, v: int, const_us: float = 0.0, nbytes: float = 0.0,
                  lat: tuple = (), gap_us: Optional[float] = None,
-                 gclass: int = 0) -> None:
+                 gclass: int = 0, link: int = -1) -> None:
         """General edge. ``lat`` is a tuple of (class_id, multiplicity).
 
         ``gap_us`` records how much of ``const_us`` is the (s-1)·G bandwidth
@@ -185,6 +210,7 @@ class GraphBuilder:
         else:
             self._egap.append(float(gap_us))
         self._egclass.append(int(gclass))
+        self._elink.append(int(link))
 
     # -- messages (LogGPS-costed at analysis time) --------------------------
     def add_message(self, src_rank: int, dst_rank: int, nbytes: float, params,
@@ -202,11 +228,12 @@ class GraphBuilder:
             lat = ((params.link_class(src_rank, dst_rank), 1),)
         gcls = params.link_class(src_rank, dst_rank)
         gcost = params.gap_cost(nbytes, src_rank, dst_rank)
+        lid = self.intern_link(gcls, src_rank, dst_rank)
         s_v = self.add_send_vertex(src_rank, params.o)
         r_v = self.add_recv_vertex(dst_rank, params.o)
         if nbytes < params.S:
             self.add_edge(s_v, r_v, const_us=gcost, nbytes=nbytes, lat=lat,
-                          gap_us=gcost, gclass=gcls)
+                          gap_us=gcost, gclass=gcls, link=lid)
         else:
             x = self.add_sync_vertex(dst_rank)
             self.add_edge(s_v, x, const_us=0.0, nbytes=0.0, lat=lat)   # RTS
@@ -214,7 +241,7 @@ class GraphBuilder:
             # CTS + data transfer back onto the receiving rank's chain
             done = self._add_vertex(RECV, 0.0, dst_rank)
             self.add_edge(x, done, const_us=gcost, nbytes=nbytes, lat=lat,
-                          gap_us=gcost, gclass=gcls)
+                          gap_us=gcost, gclass=gcls, link=lid)
             return s_v, done
         return s_v, r_v
 
@@ -264,12 +291,29 @@ class GraphBuilder:
         in_ptr = np.zeros(nv + 1, dtype=np.int64)
         np.cumsum(counts, out=in_ptr[1:])
 
+        egap = np.asarray(self._egap, dtype=np.float64)
+        n_unknown = int(np.isnan(egap).sum())
+        if n_unknown:
+            # NaN shares silently poison any analysis that consumes g.egap
+            # without params-backed reconstruction (edge_gap_shares); flag
+            # it once per build instead of letting NaN curves escape.
+            import warnings
+            warnings.warn(
+                f"{n_unknown} message edge(s) were added without a gap_us "
+                "share (raw add_edge(nbytes=...) calls); bandwidth (γ·G) "
+                "analyses will need a params object to reconstruct the "
+                "missing (s-1)·G shares, and g.egap contains NaN entries",
+                RuntimeWarning, stacklevel=2)
+
         g = ExecutionGraph(
             kind=kind, vcost=vcost, vrank=vrank,
             esrc=esrc, edst=edst, econst=econst, ebytes=ebytes, elat=elat,
             nclass=self.nclass, nranks=self.nranks,
-            egap=np.asarray(self._egap, dtype=np.float64),
+            egap=egap,
             egclass=np.asarray(self._egclass, dtype=np.int32),
+            elink=np.asarray(self._elink, dtype=np.int32),
+            nlinks=len(self._link_cls),
+            link_classes=np.asarray(self._link_cls, dtype=np.int32),
             in_ptr=in_ptr, in_edge=in_edge, level=level, nlevels=nlevels,
         )
         g.validate()

@@ -36,7 +36,7 @@ import numpy as np
 
 from . import dag
 from .graph import ExecutionGraph
-from .loggps import LogGPS
+from .loggps import LogGPS, resolve_class
 
 
 @dataclasses.dataclass
@@ -154,8 +154,11 @@ def _params_memo_key(g: ExecutionGraph, params: LogGPS) -> tuple:
             m = np.asarray([[params.link_class(i, j) for j in range(P)]
                             for i in range(P)], dtype=np.int32)
             cls_key = cache[P] = b"".join(canonical_bytes(m))
+    # α/β are runtime congestion inputs, but the compiled engine snapshots
+    # its params object — two registries differing only in congestion
+    # coefficients must not alias one memoized engine
     return (tuple(params.L), tuple(params.G), params.o, params.g, params.S,
-            cls_key)
+            tuple(params.alpha_full), tuple(params.beta_full), cls_key)
 
 
 def _sweep_engine(g: ExecutionGraph, params: LogGPS, policy=None):
@@ -195,9 +198,12 @@ def _sweep_engine(g: ExecutionGraph, params: LogGPS, policy=None):
 
 
 def latency_curve(g: ExecutionGraph, params: LogGPS, deltas: Sequence[float],
-                  cls: int = 0, plan: Optional[dag.LevelPlan] = None,
+                  cls=0, plan: Optional[dag.LevelPlan] = None,
                   engine: str = "auto", policy=None) -> LatencyCurve:
+    """ΔL curve on latency class ``cls`` (an index, or a registered class
+    name like ``"dcn"``)."""
     _check_engine_arg(engine)
+    cls = resolve_class(params, cls)
     deltas_arr = np.asarray(deltas, dtype=np.float64)
     want_sweep = (engine == "sweep" or policy is not None
                   or (engine == "auto" and deltas_arr.size >= SWEEP_MIN_POINTS))
@@ -233,15 +239,17 @@ def latency_curve(g: ExecutionGraph, params: LogGPS, deltas: Sequence[float],
 
 def latency_tolerance(g: ExecutionGraph, params: LogGPS,
                       degradations: Sequence[float] = (0.01, 0.02, 0.05),
-                      cls: int = 0, plan: Optional[dag.LevelPlan] = None,
+                      cls=0, plan: Optional[dag.LevelPlan] = None,
                       engine: str = "auto", policy=None) -> dict:
     """The Fig 1 colored zones: ΔL tolerable before each p% degradation.
 
-    With ≥ :data:`SWEEP_MIN_DEGRADATIONS` levels the bisections run in
+    ``cls`` is a class index or registered name.  With ≥
+    :data:`SWEEP_MIN_DEGRADATIONS` levels the bisections run in
     lockstep on the batched engine — one sweep call per probe round instead
     of one scalar forward per probe per level.
     """
     _check_engine_arg(engine)
+    cls = resolve_class(params, cls)
     degr = list(degradations)
     want_sweep = (engine == "sweep" or policy is not None
                   or (engine == "auto" and len(degr) >= SWEEP_MIN_DEGRADATIONS))
@@ -268,10 +276,11 @@ def latency_tolerance(g: ExecutionGraph, params: LogGPS,
 
 
 def bandwidth_curve(g: ExecutionGraph, params: LogGPS,
-                    gscales: Sequence[float], cls: int = 0,
+                    gscales: Sequence[float], cls=0,
                     plan: Optional[dag.LevelPlan] = None,
                     engine: str = "auto", policy=None) -> LatencyCurve:
-    """T(γ·G) over bandwidth scales (γ > 1 = slower links on class ``cls``).
+    """T(γ·G) over bandwidth scales (γ > 1 = slower links on class ``cls``,
+    an index or a registered class name).
 
     Both paths resolve per-edge gap shares through
     :func:`repro.core.graph.edge_gap_shares` — build-time recorded shares
@@ -280,9 +289,27 @@ def bandwidth_curve(g: ExecutionGraph, params: LogGPS,
     engine re-scales the shares inside the compiled forward; the scalar
     fallback feeds ``egap·(γ−1)`` through ``extra_edge_cost`` — no graph
     rebuild either way.
+
+    Raises ``ValueError`` if any resolved share is non-finite (an inf/NaN
+    recorded ``g.egap`` entry, or non-finite ``params.G`` feeding the
+    reconstruction): one bad share would silently poison the whole curve
+    through the γ·G scaling on either path.
     """
     from .graph import edge_gap_shares
     _check_engine_arg(engine)
+    cls = resolve_class(params, cls)
+    # resolve shares up front (cheap, O(ne) numpy) so BOTH paths are
+    # guarded — the compiled sweep engine bakes these same shares in
+    egap, egclass = edge_gap_shares(g, params)
+    bad = ~np.isfinite(egap)
+    if bad.any():
+        raise ValueError(
+            f"bandwidth_curve: {int(bad.sum())}/{egap.size} edge gap "
+            "share(s) resolved non-finite — a γ·G sweep would return NaN/"
+            "inf curves.  Recorded shares (GraphBuilder gap_us=...) are "
+            "used as-is and unknown shares (raw add_edge(nbytes=...) "
+            "calls) reconstruct as (s−1)·G from params: check g.egap for "
+            "hand-set NaN/inf entries and params.G for non-finite values")
     gs = np.asarray(gscales, dtype=np.float64)
     want_sweep = (engine == "sweep" or policy is not None
                   or (engine == "auto" and gs.size >= SWEEP_MIN_POINTS))
@@ -306,7 +333,6 @@ def bandwidth_curve(g: ExecutionGraph, params: LogGPS,
                     raise
                 _warn_sweep_fallback("bandwidth_curve", e)
     plan = plan or dag.LevelPlan(g)
-    egap, egclass = edge_gap_shares(g, params)
     scale = np.where(egclass == cls, 1.0, 0.0) * egap
     Ts, lams, rhos = [], [], []
     for gamma in gs:
@@ -319,12 +345,14 @@ def bandwidth_curve(g: ExecutionGraph, params: LogGPS,
 
 
 def critical_latencies(g: ExecutionGraph, params: LogGPS, L_min: float,
-                       L_max: float, cls: int = 0,
+                       L_max: float, cls=0,
                        plan: Optional[dag.LevelPlan] = None,
                        engine: str = "auto", policy=None) -> list:
-    """Algorithm 2's kink search; big graphs probe whole interval frontiers
-    per batched sweep call instead of one scalar forward per interval."""
+    """Algorithm 2's kink search on class ``cls`` (index or registered
+    name); big graphs probe whole interval frontiers per batched sweep
+    call instead of one scalar forward per interval."""
     _check_engine_arg(engine)
+    cls = resolve_class(params, cls)
     want_sweep = (engine == "sweep" or policy is not None
                   or (engine == "auto"
                       and g.num_edges >= SWEEP_MIN_EDGES_BREAKPOINTS))

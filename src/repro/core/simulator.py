@@ -15,6 +15,15 @@ Injector modes (Fig 8):
   "progress"  — (C) single progress thread on the receiver: delays are
                 serialized per receiving rank (ΔL-busy server), so
                 back-to-back messages accumulate ~2ΔL.
+  "contention" — per-link single-server queueing on the (s−1)·G gap
+                shares: every message edge occupies its physical link
+                (``g.elink``, or an interned (class, src, dst) link for
+                graphs without recorded ids) for its gap share before the
+                wire latency starts, so overlapping transfers on one link
+                serialize.  This is the ground truth the sweep engine's
+                congestion fixed point (``ExecPolicy(congestion=
+                "fixed_point")``) approximates with a utilization-driven
+                effective-G inflation; ΔL still injects flow-style on top.
 """
 
 from __future__ import annotations
@@ -44,13 +53,46 @@ def simulate(g: ExecutionGraph, params: LogGPS, delta_L: float = 0.0,
 
     inject_class: restrict injection to one latency class (None = all).
     """
+    if injector not in ("flow", "sender", "progress", "contention"):
+        raise ValueError(
+            f"injector must be 'flow', 'sender', 'progress' or "
+            f"'contention', got {injector!r}")
     nv = g.num_vertices
+    ne = g.num_edges
     Lvec = np.asarray(params.L, dtype=np.float64)
     # per-edge latency cost and message-ness
     lat_edge = g.elat.astype(np.float64) @ Lvec
     is_msg = g.ebytes > 0
     n_lat = (g.elat.sum(axis=1) if inject_class is None
              else g.elat[:, inject_class]).astype(np.float64)
+
+    # contention: per-link single-server occupancy on the gap shares
+    link_gap = link_of = link_free = None
+    if injector == "contention":
+        from .graph import edge_gap_shares
+        link_gap, link_cls = edge_gap_shares(g, params)
+        if g.elink is not None and g.elink.shape[0] == ne:
+            link_of = g.elink.astype(np.int64).copy()
+        else:
+            link_of = np.full(ne, -1, dtype=np.int64)
+        # edges without a recorded link id (hand-built graphs, raw
+        # add_edge callers) still need a physical-link key: intern one
+        # per (class, src rank, dst rank), matching GraphBuilder's scheme
+        need = (link_of < 0) & is_msg
+        if need.any():
+            nxt = int(link_of.max(initial=-1)) + 1
+            interned: dict = {}
+            for e in np.nonzero(need)[0]:
+                key = (int(link_cls[e]), int(g.vrank[g.esrc[e]]),
+                       int(g.vrank[g.edst[e]]))
+                lid = interned.get(key)
+                if lid is None:
+                    lid = interned[key] = nxt
+                    nxt += 1
+                link_of[e] = lid
+            link_free = np.zeros(nxt)
+        else:
+            link_free = np.zeros(int(link_of.max(initial=-1)) + 1)
 
     indeg = np.bincount(g.edst, minlength=nv).astype(np.int64)
     # CSR by source
@@ -97,9 +139,17 @@ def simulate(g: ExecutionGraph, params: LogGPS, delta_L: float = 0.0,
         for k in range(out_ptr[v], out_ptr[v + 1]):
             e = out_edge[k]
             w = g.edst[e]
-            arr = end + g.econst[e] + lat_edge[e]
+            base = end
+            if (link_free is not None and is_msg[e] and link_gap[e] > 0
+                    and link_of[e] >= 0):
+                # the transfer holds its link for the gap share before the
+                # wire latency starts; queued transfers wait for release
+                l = link_of[e]
+                base = max(end, link_free[l])
+                link_free[l] = base + link_gap[e]
+            arr = base + g.econst[e] + lat_edge[e]
             if is_msg[e] and delta_L > 0 and n_lat[e] > 0:
-                if injector == "flow":
+                if injector in ("flow", "contention"):
                     arr += delta_L * n_lat[e]          # Fig 8D: pure flow delay
                 elif injector == "progress":
                     # Fig 8C: per-receiver delay server busy ΔL per message

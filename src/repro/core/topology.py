@@ -188,6 +188,8 @@ class TopologyStamper:
         r_v = b.add_recv_vertex(dst, self.params.o)
         # gap share recorded so γ·G scenarios re-scale only the (s-1)·G term,
         # never the h·d_switch constant folded in alongside it
+        cls = self.params.link_class(src, dst)
         b.add_edge(s_v, r_v, const_us=const + gcost, nbytes=nbytes, lat=lat,
-                   gap_us=gcost, gclass=self.params.link_class(src, dst))
+                   gap_us=gcost, gclass=cls,
+                   link=b.intern_link(cls, src, dst))
         return s_v, r_v

@@ -14,9 +14,12 @@ The tracer emits, per device, the LogGPS op sequence the step executes:
           2 TP allreduces/layer; epilogue logits all-reduce.
 
 Collective algorithms are selectable (ring / recursive_doubling / …) —
-the Fig 10 case-study axis.  Latency classes: 0 = ICI, 1 = DCN, so the
-reduced costs λ_L split per fabric, and tolerance queries can target DCN
-(the FEC/cloud question the paper asks) or ICI.
+the Fig 10 case-study axis.  Latency classes come from the network-model
+registry (`pod_model`): ("ici", "dcn") by default, or ("node", "ici",
+"dcn") when ``ranks_per_host`` is set — the "node" class models the
+intra-node fabric (NVLink/shared-memory) between same-host ranks.  The
+reduced costs λ_L split per fabric, so tolerance queries can target DCN
+(the FEC/cloud question the paper asks), ICI, or the intra-node class.
 
 Compute-vertex costs come from the config's analytic FLOP model at a given
 MFU guess — predictions are *model-relative* (see DESIGN.md §2).
@@ -31,7 +34,7 @@ import numpy as np
 
 from . import collectives as coll
 from .graph import ExecutionGraph, GraphBuilder
-from .loggps import LogGPS, tpu_pod_params
+from .loggps import LogGPS, pod_model
 from ..models.config import ModelConfig, ShapeConfig
 
 
@@ -45,6 +48,7 @@ class TraceSpec:
     dp_algo: str = "ring"
     peak_flops: float = 197e12
     bytes_per_elt: int = 2             # bf16 activations/grads
+    ranks_per_host: Optional[int] = None  # set → emit the intra-node class
 
     @property
     def n_devices(self) -> int:
@@ -53,8 +57,13 @@ class TraceSpec:
     def device(self, p: int, d: int, m: int) -> int:
         return (p * self.data + d) * self.model + m
 
+    def network_model(self, **kw):
+        """The registry this spec traces against (see :func:`pod_model`)."""
+        return pod_model(pod_size=self.data * self.model,
+                         ranks_per_host=self.ranks_per_host, **kw)
+
     def params(self, **kw) -> LogGPS:
-        return tpu_pod_params(pod_size=self.data * self.model, **kw)
+        return self.network_model(**kw).params()
 
 
 def _model_groups(ts: TraceSpec):

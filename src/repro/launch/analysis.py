@@ -76,7 +76,7 @@ import numpy as np
 
 from repro.core import placement as placement_mod
 from repro.core.graph import ExecutionGraph
-from repro.core.loggps import LogGPS
+from repro.core.loggps import LogGPS, resolve_class
 from repro.obs import metrics as _obs_metrics
 from repro.obs import trace as _obs_trace
 from repro.sweep import (Engine, ExecPolicy, GraphVariant,  # noqa: F401
@@ -97,7 +97,9 @@ class AnalysisRequest:
 
     kind: str                                   # see module docstring
     variant: Optional[str] = None               # default: first registered
-    cls: int = 0                                # latency class under study
+    cls: object = 0                             # latency class under study
+                                                # (index, or a registered
+                                                # class name like "dcn")
     deltas: Optional[Sequence[float]] = None    # ΔL grid (curve / rank)
     gscales: Optional[Sequence[float]] = None   # γ grid (bandwidth)
     degradations: Optional[Sequence[float]] = None  # p levels (tolerance)
@@ -314,38 +316,41 @@ class AnalysisService:
         compiled path per query (backend, λ mode, scenario-axis device
         fan-out) — λ is first-class on both segment and pallas."""
         v = self._variant(req.variant)
+        cls = resolve_class(v.params, req.cls)
         deltas = np.asarray(req.deltas if req.deltas is not None
                             else self.default_deltas, dtype=np.float64)
         res = self.engine(v.name).run(latency_grid(v.params, deltas,
-                                                   cls=req.cls),
+                                                   cls=cls),
                                       policy=self._policy(req))
-        return {"variant": v.name, "cls": req.cls, "deltas": deltas,
+        return {"variant": v.name, "cls": cls, "deltas": deltas,
                 "backend": res.backend,
-                "T": res.T, "lam": res.lam[:, req.cls],
-                "rho": res.rho[:, req.cls], "from_cache": res.from_cache}
+                "T": res.T, "lam": res.lam[:, cls],
+                "rho": res.rho[:, cls], "from_cache": res.from_cache}
 
     def bandwidth(self, req: AnalysisRequest) -> dict:
         v = self._variant(req.variant)
+        cls = resolve_class(v.params, req.cls)
         gs = np.asarray(req.gscales if req.gscales is not None
                         else (1.0, 2.0, 4.0), dtype=np.float64)
         # values-only: the payload exposes T alone, so don't pay for the
         # λ-backtrace program
         res = self.engine(v.name).run(bandwidth_grid(v.params, gs,
-                                                     cls=req.cls),
+                                                     cls=cls),
                                       outputs=("T",),
                                       policy=self._policy(req))
-        return {"variant": v.name, "cls": req.cls, "gscales": gs,
+        return {"variant": v.name, "cls": cls, "gscales": gs,
                 "backend": res.backend,
                 "T": res.T, "from_cache": res.from_cache}
 
     def tolerance(self, req: AnalysisRequest) -> dict:
         v = self._variant(req.variant)
+        cls = resolve_class(v.params, req.cls)
         degr = tuple(req.degradations if req.degradations is not None
                      else (0.01, 0.02, 0.05))
         tol = tolerance_batched(self.engine(v.name), v.params, degr,
-                                cls=req.cls,
+                                cls=cls,
                                 backend=self._policy(req).backend)
-        return {"variant": v.name, "cls": req.cls, "tolerance": tol}
+        return {"variant": v.name, "cls": cls, "tolerance": tol}
 
     def rank(self, req: AnalysisRequest) -> dict:
         """Order every registered variant over a shared ΔL grid — one
@@ -356,11 +361,17 @@ class AnalysisService:
             raise ValueError("no variants registered")
         deltas = np.asarray(req.deltas if req.deltas is not None
                             else self.default_deltas, dtype=np.float64)
-        lacking = [n for n, v in self._variants.items()
-                   if req.cls >= v.params.nclass]
+        # resolve per variant — a class *name* may map to different indexes
+        # across registries, but every variant must know it
+        lacking = []
+        for n, v in self._variants.items():
+            try:
+                resolve_class(v.params, req.cls)
+            except (ValueError, KeyError):
+                lacking.append(n)
         if lacking:
             raise ValueError(
-                f"cls={req.cls} is out of range for variants {lacking} — "
+                f"cls={req.cls!r} is unknown to variants {lacking} — "
                 "a ranking must sweep every variant on the same class")
         scored: list = []
         calls = 0
@@ -415,7 +426,9 @@ class AnalysisService:
         P = int(spec.pop("P", v.graph.nranks))
         pod = int(spec.pop("pod", max(P // 2, 1)))
         phi = placement_mod.ArchTopology.two_tier(P, pod, **spec)
-        pts = (placement_mod.latency_points(v.params, req.deltas, cls=req.cls)
+        pts = (placement_mod.latency_points(v.params, req.deltas,
+                                            cls=resolve_class(v.params,
+                                                              req.cls))
                if req.deltas is not None else None)
         # zero-recompile loop: ONE compiled plan, candidates patched in;
         # the shared service cache memoizes candidate evaluations (patched
@@ -656,7 +669,9 @@ def main(argv=None):
     ap.add_argument("--query", default=None,
                     help="one-shot query kind (curve/tolerance/rank/...)")
     ap.add_argument("--variant", default=None)
-    ap.add_argument("--cls", type=int, default=0)
+    ap.add_argument("--cls", default=0,
+                    type=lambda s: int(s) if s.lstrip("-").isdigit() else s,
+                    help="latency class index or registered name (e.g. dcn)")
     ap.add_argument("--deltas", default=None,
                     help="ΔL grid as start:stop:num, e.g. 0:100:25")
     ap.add_argument("--shard", type=int, default=None,

@@ -46,6 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import os
 import time
 from typing import Optional, Sequence, Union
 
@@ -66,7 +67,8 @@ from .scenarios import ScenarioBatch
 #: of ``launch.analysis`` requests).  ``cache`` deliberately excluded — a
 #: result cache is a process-local object, never serialized state.
 POLICY_WIRE_FIELDS = ("backend", "shard", "shard_axis", "lam", "fd_eps",
-                      "dtype")
+                      "dtype", "congestion", "max_iters", "tol",
+                      "max_dense_bytes")
 
 _OUTPUTS = ("T", "lam", "rho")
 
@@ -85,6 +87,11 @@ _DENSE_BYTES = _obs_metrics.gauge(
     "the dense→sparse auto-switch compares to MAX_DENSE_BYTES; the "
     "sparse view reports its compact slot-list bytes).",
     labels=("view",))
+_CONGESTION_ITERS = _obs_metrics.histogram(
+    "sweep_congestion_iters",
+    "Fixed-point iterations to convergence per scenario lane "
+    "(congestion='fixed_point' dispatches only).",
+    buckets=(1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,6 +133,22 @@ class ExecPolicy:
         the default 2⁻¹⁰ ≈ 1e-3 µs is far below any realistic breakpoint
         spacing.  On the float32 pallas backend, fd λ noise is
         ~ulp(T)/fd_eps — prefer the segment backend for fd sensitivities.
+    ``congestion`` / ``max_iters`` / ``tol``
+        "none" (default) — the plain LogGPS forward, links uncongested.
+        "fixed_point" (segment backend only) — wrap the forward in an
+        iterated per-link congestion closure: evaluate, aggregate each
+        physical link's offered gap-time, inflate effective gaps by
+        ``1 + α_c·max(util − β_c, 0)`` (α, β from the bound params'
+        network-class registry), re-evaluate — a damped ``while_loop``
+        *inside* the one jitted program, all scenario (and K) lanes in
+        lockstep.  ``max_iters``/``tol`` are runtime knobs (changing them
+        never recompiles).  With every α = 0 the result is bit-identical
+        to ``congestion="none"``.
+    ``max_dense_bytes``
+        Per-engine override of :data:`Engine.MAX_DENSE_BYTES` (the dense-
+        envelope auto-sparse threshold).  None defers to the
+        ``REPRO_MAX_DENSE_BYTES`` environment variable, then the class
+        attribute.
     ``cache``
         A :class:`~repro.sweep.cache.SweepCache` (or None to disable).
     ``dtype``
@@ -142,6 +165,10 @@ class ExecPolicy:
     lam: str = "exact"
     fd_eps: float = 2.0 ** -10
     dtype: str = "auto"
+    congestion: str = "none"
+    max_iters: int = 16
+    tol: float = 1e-6
+    max_dense_bytes: Optional[int] = None
     cache: Optional[SweepCache] = DEFAULT_CACHE
 
     def validate(self) -> "ExecPolicy":
@@ -164,6 +191,23 @@ class ExecPolicy:
         if self.dtype not in ("auto", "float64", "float32"):
             raise ValueError(f"unknown dtype {self.dtype!r} "
                              "(use 'auto', 'float64' or 'float32')")
+        if self.congestion not in ("none", "fixed_point"):
+            raise ValueError(f"unknown congestion mode {self.congestion!r} "
+                             "(use 'none' or 'fixed_point')")
+        if self.congestion != "none" and self.backend != "segment":
+            raise ValueError(
+                "congestion='fixed_point' runs on the segment backend only "
+                f"(got backend={self.backend!r}) — the fixed point wraps "
+                "the float64 gather/max core")
+        if int(self.max_iters) < 1:
+            raise ValueError(f"max_iters must be >= 1, got "
+                             f"{self.max_iters!r}")
+        if not float(self.tol) > 0.0:
+            raise ValueError(f"tol must be positive, got {self.tol!r}")
+        if self.max_dense_bytes is not None \
+                and int(self.max_dense_bytes) <= 0:
+            raise ValueError("max_dense_bytes must be a positive byte "
+                             f"count, got {self.max_dense_bytes!r}")
         native = {"segment": "float64", "pallas": "float32",
                   "sparse": "float64"}[self.backend]
         if self.backend == "sparse":
@@ -198,7 +242,8 @@ class ExecPolicy:
         the cache *object* — two policies sharing every knob but pointing
         at different caches must not share a memoized engine)."""
         return (self.backend, self.shard, self.shard_axis, self.lam,
-                float(self.fd_eps), self.dtype,
+                float(self.fd_eps), self.dtype, self.congestion,
+                int(self.max_iters), float(self.tol), self.max_dense_bytes,
                 None if self.cache is None else id(self.cache))
 
 
@@ -255,6 +300,8 @@ class Result:
     names: Optional[tuple] = None     # graph/variant names on a leading G/B axis
     from_cache: bool = False
     lam_mode: str = "exact"
+    #: [K?, S] fixed-point iteration counts (congestion dispatches only)
+    congestion_iters: Optional[np.ndarray] = None
 
     @property
     def S(self) -> int:
@@ -335,7 +382,9 @@ def _copy(res: Result, **replace) -> Result:
     return dataclasses.replace(
         res, T=res.T.copy(),
         lam=None if res.lam is None else res.lam.copy(),
-        rho=None if res.rho is None else res.rho.copy(), **replace)
+        rho=None if res.rho is None else res.rho.copy(),
+        congestion_iters=(None if res.congestion_iters is None
+                          else res.congestion_iters.copy()), **replace)
 
 
 def _variant_names(sb: StructureBatch) -> tuple:
@@ -374,6 +423,16 @@ class Engine:
                  policy: Optional[ExecPolicy] = None, names=None):
         self.policy = (policy if policy is not None else ExecPolicy()) \
             .validate()
+        # dense-envelope guard resolution: policy field, then the
+        # REPRO_MAX_DENSE_BYTES environment variable, then the class
+        # attribute.  Overrides land on the *instance* so class-level
+        # monkeypatches (benchmarks) and subclass overrides keep working.
+        mdb = self.policy.max_dense_bytes
+        if mdb is None:
+            env = os.environ.get("REPRO_MAX_DENSE_BYTES", "")
+            mdb = int(env) if env else None
+        if mdb is not None:
+            self.MAX_DENSE_BYTES = int(mdb)
         self._warned: set = set()     # per-instance warn-once registry
         plan = multi = plans = None
         sparse = structure = None
@@ -732,6 +791,27 @@ class Engine:
                 "blocks — its variants share no base plan to patch costs "
                 "into (use patch_structure() variants for B×K studies)")
 
+        cong = pol.congestion == "fixed_point"
+        if cong:
+            if has_B:
+                raise ValueError("congestion='fixed_point' populates the "
+                                 "S and K axes only — no structure blocks "
+                                 "yet (run variants through separate "
+                                 "engines)")
+            if self.multi is not None:
+                raise ValueError("congestion='fixed_point' populates the "
+                                 "S and K axes only — no multi-graph G "
+                                 "axis (build one engine per graph)")
+            if pol.shard:
+                raise ValueError("congestion='fixed_point' does not shard "
+                                 "yet (the while_loop lanes must stay in "
+                                 "lockstep on one device)")
+            if self.params is None:
+                raise ValueError(
+                    "congestion needs the engine's bound LogGPS params "
+                    "for the per-class (α, β) congestion registry — "
+                    "construct Engine(graph_or_plan, params=...)")
+
         # pallas λ needs the argmax kernel; if it cannot even be built on
         # this install, say so ONCE and fall back — never silently ignore
         # an explicit backend choice (fd λ runs the plain values kernel,
@@ -800,11 +880,22 @@ class Engine:
                 # the sparse f32 kernel flavor returns different floats
                 # than the f64 forward — it must never share cache entries
                 kkey = ("sparse_pallas" if kind == "sparse"
-                        and pol.dtype == "float32" else kind)
+                        and pol.dtype == "float32"
+                        else "congestion" if cong else kind)
+                congestion_hash = None
+                if cong:
+                    ch = hashlib.sha1(b"congestion-v1|")
+                    ch.update(self.plan.link_hash().encode())
+                    ch.update(repr((tuple(self.params.alpha_full),
+                                    tuple(self.params.beta_full),
+                                    int(pol.max_iters),
+                                    float(pol.tol))).encode())
+                    congestion_hash = ch.hexdigest()
                 key = query_key(ph, batches, want_lam, kkey, cost_hash,
                                 lam_mode=pol.lam if want_lam else "exact",
                                 fd_eps=pol.fd_eps,
-                                structure_hash=structure_hash)
+                                structure_hash=structure_hash,
+                                congestion_hash=congestion_hash)
                 hit = cache.get(key, patched=has_K or has_B)
             if hit is not None:
                 _QUERIES.inc(backend=kind, axes=axes_s, cache="hit")
@@ -834,6 +925,8 @@ class Engine:
         has_G = self.multi is not None
         has_K = cbs is not None
         has_B = sb is not None
+        cong = pol.congestion == "fixed_point"
+        iters = None
         sparse = kind == "sparse"
         sp = self._sparse_plan() if sparse else None
         G = self.multi.G if has_G else None
@@ -1039,7 +1132,7 @@ class Engine:
             elif seg:
                 from jax.experimental import enable_x64
                 with enable_x64():
-                    arrs = self._arrays("segment")
+                    arrs = self._arrays("congestion" if cong else "segment")
                     if has_K:
                         cost_arrs = stage_costs(arrs)
                         args = arrs[:2] + cost_arrs + arrs[7:]
@@ -1047,10 +1140,28 @@ class Engine:
                         args = arrs
                     if has_B:
                         args = stage_structure(args)
-                    fwd = _eng._get_forward("segment", want_lam_compiled,
-                                            has_G, False, mesh, **fwd_kw)
-                    T, lam = fwd(*args, jnp.asarray(Lmat),
-                                 jnp.asarray(GSmat))
+                    if cong:
+                        pp = self.params
+                        fwd = _eng._get_forward(
+                            "congestion", want_lam_compiled, costs=kaxes)
+                        with _span("sweep.congestion_fixed_point",
+                                   max_iters=int(pol.max_iters)):
+                            T, lam, iters = fwd(
+                                *args,
+                                jnp.asarray(np.asarray(pp.alpha_full,
+                                                       dtype=np.float64)),
+                                jnp.asarray(np.asarray(pp.beta_full,
+                                                       dtype=np.float64)),
+                                jnp.asarray(np.int32(pol.max_iters)),
+                                jnp.asarray(np.float64(pol.tol)),
+                                jnp.asarray(Lmat), jnp.asarray(GSmat))
+                        iters = np.asarray(iters)
+                    else:
+                        fwd = _eng._get_forward(
+                            "segment", want_lam_compiled, has_G, False,
+                            mesh, **fwd_kw)
+                        T, lam = fwd(*args, jnp.asarray(Lmat),
+                                     jnp.asarray(GSmat))
                     T = np.asarray(T)
                     lam = np.asarray(lam)
             else:
@@ -1086,6 +1197,15 @@ class Engine:
             + ((slice(0, B),) if has_B else ()) \
             + ((slice(0, K),) if has_K else ()) + (slice(0, Sext),)
         T = T[idx]
+        if iters is not None:
+            iters = iters[idx]
+            if fd:
+                # fd expands scenarios (nc+1)×; each expanded lane ran its
+                # own fixed point — report the base rows' counts
+                iters = iters.reshape(
+                    iters.shape[:-1] + (nc + 1, S))[..., 0, :]
+            for v in iters.ravel():
+                _CONGESTION_ITERS.observe(float(v))
         if want_lam_compiled:
             lam = lam[idx]
         if want_lam:
@@ -1119,7 +1239,9 @@ class Engine:
                       scenarios=batches[0] if not has_G else batches,
                       backend=kind,
                       names=_variant_names(sb) if has_B else self.names,
-                      lam_mode=pol.lam if want_lam else "exact")
+                      lam_mode=pol.lam if want_lam else "exact",
+                      congestion_iters=(None if iters is None
+                                        else np.array(iters)))
 
 
 def run(query: Query, policy: Optional[ExecPolicy] = None,

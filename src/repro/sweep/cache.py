@@ -73,7 +73,8 @@ def query_key(plan_hash: str, batches: Sequence, want_lam: bool,
               backend: str, cost_hash: Optional[str] = None,
               lam_mode: str = "exact",
               fd_eps: Optional[float] = None,
-              structure_hash: Optional[str] = None) -> str:
+              structure_hash: Optional[str] = None,
+              congestion_hash: Optional[str] = None) -> str:
     """Key for a unified :class:`repro.sweep.api.Engine` query: the plan (or
     MultiPlan) content hash, the per-graph scenario batches in order, the
     requested sensitivity flag, the backend, the λ mode (finite-difference
@@ -95,6 +96,10 @@ def query_key(plan_hash: str, batches: Sequence, want_lam: bool,
         sha.update(f"|costs:{cost_hash}".encode())
     if structure_hash is not None:
         sha.update(f"|structure:{structure_hash}".encode())
+    if congestion_hash is not None:
+        # link topology + (α, β) registry + convergence knobs: two runs
+        # differing only in congestion parameters must never collide
+        sha.update(f"|congestion:{congestion_hash}".encode())
     return sha.hexdigest()
 
 

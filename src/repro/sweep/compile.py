@@ -103,7 +103,7 @@ COST_FIELDS = ("vconst", "vgap", "vgclass", "vlat", "vlat_sum",
 STRUCT_FIELDS = ("vsrc", "vmaskd", "vconst", "vgap", "vgclass", "vlat",
                  "vlat_sum", "vcost_lv", "valid_flat", "vert_of_slot",
                  "esrc", "edstl", "emask", "econst", "egap", "egclass",
-                 "elat")
+                 "elat", "vlink", "elinkp")
 
 
 def _segment_view_bytes(nlv_p: int, Vmax: int, Dmax: int, nc: int) -> int:
@@ -298,6 +298,8 @@ class StructureBatch:
     egap: np.ndarray       # [B, nlv_p, Emax] float64
     egclass: np.ndarray    # [B, nlv_p, Emax] int32
     elat: np.ndarray       # [B, nlv_p, Emax, nclass] float64
+    vlink: np.ndarray = None   # [B, nlv_p, Vmax, Dmax] int32 link ids
+    elinkp: np.ndarray = None  # [B, nlv_p, Emax] int32 link ids
     #: the plan whose envelope (and, for broadcast fields, tensors) the
     #: variants share — the engine stages it once and overwrites the
     #: batched positions
@@ -339,6 +341,9 @@ class StructureBatch:
             sha = hashlib.sha1(b"structure-batch-v1")
             for name in names:
                 a = getattr(self, name)
+                if a is None:           # optional link tensors
+                    sha.update(f"|none:{name}|".encode())
+                    continue
                 chunks = ((f"|bcast{a.shape[0]}|".encode(),)
                           + canonical_bytes(a[0])
                           if a.strides[0] == 0 else canonical_bytes(a))
@@ -358,6 +363,8 @@ class StructureBatch:
             raise ValueError(f"cannot pad {B} structure blocks down to {Bp}")
 
         def pad(a):
+            if a is None:
+                return None
             if a.strides[0] == 0:
                 return np.broadcast_to(a[:1], (Bp,) + a.shape[1:])
             return np.concatenate(
@@ -394,6 +401,8 @@ class StructureBatch:
         padded = [repad_plan(p, nlv, Vm, Dm, Em) for p in plans]
 
         def stack(name):
+            if any(getattr(p, name) is None for p in padded):
+                return None             # optional link tensors
             return np.stack([getattr(p, name) for p in padded])
 
         return cls(**{n: stack(n) for n in STRUCT_FIELDS},
@@ -440,6 +449,16 @@ class CompiledPlan:
     epos_dst: Optional[np.ndarray] = None   # [ne] int32 level-local dst slot
     epos_d: Optional[np.ndarray] = None     # [ne] int32 in-edge ordinal
     epos_e: Optional[np.ndarray] = None     # [ne] int32 level-local edge slot
+    # physical-link slot tensors (congestion fixed point): the dense link id
+    # of each in-edge slot / pallas edge slot; dummy bin = ``nlinks`` (pad
+    # slots and dependency edges land there, and the fixed point pins its
+    # scale to 1).  Auxiliary — staged only under congestion, and excluded
+    # from the dense_bytes/padding_ratio accounting.  None on hand-
+    # assembled plans (congestion then refuses to run).
+    vlink: Optional[np.ndarray] = None      # [nlv_p, Vmax, Dmax] int32
+    elinkp: Optional[np.ndarray] = None     # [nlv_p, Emax] int32
+    nlinks: int = 0
+    link_classes: Optional[np.ndarray] = None  # [nlinks] int32
 
     @property
     def Vmax(self) -> int:
@@ -513,6 +532,25 @@ class CompiledPlan:
                     sha.update(chunk)
             h = sha.hexdigest()
             object.__setattr__(self, "_hash", h)
+        return h
+
+    def link_hash(self) -> str:
+        """SHA1 over the link-id tensors and per-link classes — folded into
+        query keys only when the congestion fixed point is on (plain runs
+        never consume links, so ``content_hash`` stays link-blind)."""
+        h = getattr(self, "_lhash", None)
+        if h is None:
+            from .cache import canonical_bytes
+            sha = hashlib.sha1(b"plan-links-v1")
+            sha.update(np.int64([self.nlinks]).tobytes())
+            for a in (self.vlink, self.link_classes):
+                if a is None:
+                    sha.update(b"|none|")
+                    continue
+                for chunk in canonical_bytes(a):
+                    sha.update(chunk)
+            h = sha.hexdigest()
+            object.__setattr__(self, "_lhash", h)
         return h
 
     # -- cost patching (zero-recompile variant evaluation) -------------------
@@ -653,6 +691,8 @@ class CompiledPlan:
         emask[:, lvl, es] = keep
 
         def rest(a):
+            if a is None:
+                return None
             return np.broadcast_to(a[None], (B,) + a.shape)
 
         done = {"vsrc": vsrc, "vmaskd": vmaskd, "esrc": esrc, "emask": emask}
@@ -723,6 +763,20 @@ def compile_plan(g: ExecutionGraph, params: Optional[LogGPS] = None,
     egap_s = egap_o[eorder]
     egclass_s = egclass_o[eorder]
 
+    # -- link interning (congestion): -1 / missing info → dummy bin --------
+    if g.elink is not None and g.elink.shape[0] == ne:
+        nlinks = int(g.nlinks)
+        elink_s = g.elink[eorder].astype(np.int64)
+        elink_s = np.where((elink_s < 0) | (elink_s >= nlinks), nlinks,
+                           elink_s)
+        link_classes = (g.link_classes.astype(np.int32)
+                        if g.link_classes is not None
+                        else np.zeros(nlinks, dtype=np.int32))
+    else:
+        nlinks = 0
+        elink_s = np.zeros(ne, dtype=np.int64)
+        link_classes = np.zeros(0, dtype=np.int32)
+
     # -- vertex → (level, offset) flat slots --------------------------------
     vslot = np.arange(nv, dtype=np.int64) - v_ptr[vlvl_s]     # offset of vorder[i]
     slot_of_vertex = np.empty(nv, dtype=np.int64)
@@ -749,6 +803,8 @@ def compile_plan(g: ExecutionGraph, params: Optional[LogGPS] = None,
     vgap[elvl_s, edstl_s, d_idx] = egap_s
     vgclass[elvl_s, edstl_s, d_idx] = egclass_s
     vlat[elvl_s, edstl_s, d_idx] = elat_s
+    vlink = np.full((nlv_p, Vmax, Dmax), nlinks, dtype=np.int32)
+    vlink[elvl_s, edstl_s, d_idx] = elink_s
 
     vcost_lv = np.zeros((nlv_p, Vmax))
     vcost_lv[vlvl_s, vslot] = g.vcost[vorder]
@@ -772,6 +828,8 @@ def compile_plan(g: ExecutionGraph, params: Optional[LogGPS] = None,
     egap_p[elvl_s, eslot] = egap_s
     egclass_p[elvl_s, eslot] = egclass_s
     elat_p[elvl_s, eslot] = elat_s
+    elinkp = np.full((nlv_p, Emax), nlinks, dtype=np.int32)
+    elinkp[elvl_s, eslot] = elink_s
 
     # -- edge slot coordinates back in original order (cost patching) -------
     def unsort(a):
@@ -788,6 +846,8 @@ def compile_plan(g: ExecutionGraph, params: Optional[LogGPS] = None,
         nv=nv, nclass=nc, nlevels=nlevels,
         epos_lvl=unsort(elvl_s), epos_dst=unsort(edstl_s),
         epos_d=unsort(d_idx), epos_e=unsort(eslot),
+        vlink=vlink, elinkp=elinkp, nlinks=nlinks,
+        link_classes=link_classes,
     )
 
 
@@ -851,6 +911,11 @@ def repad_plan(c: CompiledPlan, nlv_p: int, Vmax: int, Dmax: int,
     egap = grow(c.egap, (nlv_p, Emax))
     egclass = grow(c.egclass, (nlv_p, Emax))
     elat = grow(c.elat, (nlv_p, Emax, nc))
+    # link pad slots must land in the dummy bin (= nlinks), never link 0
+    vlink = None if c.vlink is None else \
+        grow(c.vlink, (nlv_p, Vmax, Dmax), fill=c.nlinks)
+    elinkp = None if c.elinkp is None else \
+        grow(c.elinkp, (nlv_p, Emax), fill=c.nlinks)
 
     return CompiledPlan(
         vsrc=vsrc, vmaskd=vmaskd, vconst=vconst, vgap=vgap, vgclass=vgclass,
@@ -863,6 +928,8 @@ def repad_plan(c: CompiledPlan, nlv_p: int, Vmax: int, Dmax: int,
         # working on a repadded plan
         epos_lvl=c.epos_lvl, epos_dst=c.epos_dst,
         epos_d=c.epos_d, epos_e=c.epos_e,
+        vlink=vlink, elinkp=elinkp, nlinks=c.nlinks,
+        link_classes=c.link_classes,
     )
 
 
@@ -1055,6 +1122,10 @@ class SparsePlan:
     nlevels: int
     Emax_lv: int            # bucketed max edges in one level (window size)
     Vmax_lv: int            # bucketed max vertices in one level
+    # physical-link ids per edge (congestion carriage; pad → nlinks dummy)
+    elink: Optional[np.ndarray] = None  # [ne_p] int32
+    nlinks: int = 0
+    link_classes: Optional[np.ndarray] = None  # [nlinks] int32
 
     @property
     def shape_key(self) -> tuple:
@@ -1119,7 +1190,10 @@ class SparsePlan:
             elat_s=c.elat[lvl, es][eorder],
             vcost_s=c.vcost_lv[vlvl_s, slots % Vmax],
             vert_s=c.vert_of_slot[slots],
-            level_ptr=level_ptr, v_ptr=v_ptr)
+            level_ptr=level_ptr, v_ptr=v_ptr,
+            elink_s=(None if c.elinkp is None
+                     else c.elinkp[lvl, es][eorder]),
+            nlinks=c.nlinks, link_classes=c.link_classes)
 
 
 def _assemble_sparse(nv: int, nc: int, nlevels: int,
@@ -1127,7 +1201,9 @@ def _assemble_sparse(nv: int, nc: int, nlevels: int,
                      econst_s: np.ndarray, egap_s: np.ndarray,
                      egclass_s: np.ndarray, elat_s: np.ndarray,
                      vcost_s: np.ndarray, vert_s: np.ndarray,
-                     level_ptr: np.ndarray, v_ptr: np.ndarray) -> SparsePlan:
+                     level_ptr: np.ndarray, v_ptr: np.ndarray,
+                     elink_s: Optional[np.ndarray] = None, nlinks: int = 0,
+                     link_classes: Optional[np.ndarray] = None) -> SparsePlan:
     """Pad level-sorted compact-slot arrays into a :class:`SparsePlan`
     honouring the class's padding invariants."""
     ne = int(esrc_s.shape[0])
@@ -1158,7 +1234,10 @@ def _assemble_sparse(nv: int, nc: int, nlevels: int,
         level_ptr=padv(level_ptr, nlv_p + 1, ne, np.int32),
         v_ptr=padv(v_ptr, nlv_p + 1, nv, np.int32),
         nv=nv, ne=ne, nclass=nc, nlevels=nlevels,
-        Emax_lv=Emax_lv, Vmax_lv=Vmax_lv)
+        Emax_lv=Emax_lv, Vmax_lv=Vmax_lv,
+        elink=(None if elink_s is None
+               else padv(elink_s.astype(np.int32), ne_p, nlinks, np.int32)),
+        nlinks=nlinks, link_classes=link_classes)
 
 
 def compile_sparse(g: ExecutionGraph,
@@ -1184,6 +1263,15 @@ def compile_sparse(g: ExecutionGraph,
     slot_of_vertex = np.empty(nv, dtype=np.int64)
     slot_of_vertex[vorder] = np.arange(nv, dtype=np.int64)
     egap_o, egclass_o = edge_gap_shares(g, params)
+    if g.elink is not None and g.elink.shape[0] == ne:
+        nlinks = int(g.nlinks)
+        el = g.elink[eorder].astype(np.int64)
+        elink_s = np.where((el < 0) | (el >= nlinks), nlinks, el)
+        link_classes = (g.link_classes.astype(np.int32)
+                        if g.link_classes is not None
+                        else np.zeros(nlinks, dtype=np.int32))
+    else:
+        nlinks, elink_s, link_classes = 0, None, None
     return _assemble_sparse(
         nv=nv, nc=nc, nlevels=nlevels,
         esrc_s=slot_of_vertex[g.esrc[eorder].astype(np.int64)],
@@ -1192,7 +1280,8 @@ def compile_sparse(g: ExecutionGraph,
         egap_s=egap_o[eorder], egclass_s=egclass_o[eorder],
         elat_s=g.elat[eorder].astype(np.float64),
         vcost_s=g.vcost[vorder].astype(np.float64),
-        vert_s=vorder, level_ptr=level_ptr, v_ptr=v_ptr)
+        vert_s=vorder, level_ptr=level_ptr, v_ptr=v_ptr,
+        elink_s=elink_s, nlinks=nlinks, link_classes=link_classes)
 
 
 def estimate_dense_bytes(g: ExecutionGraph) -> int:

@@ -213,7 +213,7 @@ def _make_segment_one(want_lam: bool, fused: bool = False):
     dus = jax.lax.dynamic_update_slice
 
     def one(vsrc, vmaskd, vconst, vgap, vgclass, vlat, vlat_sum, vcost_lv,
-            valid_flat, vert_of_slot, Lrow, gsrow):
+            valid_flat, vert_of_slot, Lrow, gsrow, *link):
         nlv, Vmax, Dmax = vsrc.shape
         nc = vlat.shape[3]
         nflat = valid_flat.shape[0]          # nlv·Vmax + 1 (dummy tail)
@@ -221,7 +221,14 @@ def _make_segment_one(want_lam: bool, fused: bool = False):
 
         def relax(lv, t_end):
             """[Vmax, Dmax] candidate ends and [Vmax] level start times."""
-            w = (vconst[lv] + vgap[lv] * (gsrow[vgclass[lv]] - 1.0)
+            gse = gsrow[vgclass[lv]]
+            if link:
+                # congestion closure: per-link effective-gap inflation.
+                # lscale ≡ 1.0 multiplies exactly, so a zero-congestion
+                # fixed point is bit-identical to the plain forward.
+                vlink, lscale = link
+                gse = gse * lscale[vlink[lv]]
+            w = (vconst[lv] + vgap[lv] * (gse - 1.0)
                  + vlat[lv] @ Lrow)
             cand = jnp.where(vmaskd[lv], t_end[vsrc[lv]] + w, -BIG)
             ts = jnp.maximum(jnp.max(cand, axis=1), 0.0)   # t_start ≥ 0
@@ -379,6 +386,78 @@ def _segment_core_multi(want_lam: bool, fused: bool = False):
     [G, S, ·] so variant groups with different base points batch together).
     """
     return _segment_core_axes(want_lam, True, None, fused)
+
+
+def _congestion_core_axes(want_lam: bool, costs: Optional[tuple] = None):
+    """Congestion-aware segment forward: an iterated fixed point per lane.
+
+    The LogGPS gap term models an uncongested link; when many messages
+    share one physical link (``CompiledPlan.vlink``), their gap shares
+    contend.  We close the loop with a standard utilization model: evaluate
+    the forward, aggregate each link's *offered* gap-time ``busy_l``
+    (scatter-add of ``vgap · gscale`` over link ids — a constant of the
+    scenario, computed once), read utilization ``u_l = busy_l / T``, and
+    inflate each link's effective gap by ``1 + α_c·max(u_l − β_c, 0)``
+    (α, β per network class) before re-evaluating.  Iteration runs as a
+    ``lax.while_loop`` *inside* the jitted program with 0.5 damping and a
+    runtime (max_iters, tol) stopping rule — no recompile across knob
+    values, and under vmap all S scenarios (and K cost blocks) advance in
+    lockstep with converged lanes frozen (their lscale no longer updates;
+    per-lane iteration counts are reported).
+
+    With α ≡ 0 the update is the identity (lscale stays exactly 1.0) and
+    the loop exits after one iteration — the final evaluation multiplies
+    every gap by exactly 1.0, so a zero-congestion run is bit-identical
+    to the plain segment backend (the conformance contract).
+
+    λ comes from one final λ-recording evaluation at the converged lscale:
+    the fixed point's sensitivities are read at its solution (the inner
+    loop stays values-only, which keeps the program small).
+    """
+    jax = _jax()
+    jnp = jax.numpy
+    one_vals = _make_segment_one(False)
+    one_fin = _make_segment_one(want_lam)
+
+    def fixed_point(vsrc, vmaskd, vconst, vgap, vgclass, vlat, vlat_sum,
+                    vcost_lv, valid_flat, vert_of_slot, vlink, link_cls,
+                    link_mask, alpha, beta, max_iters, tol, Lrow, gsrow):
+        Lp = link_mask.shape[0]
+        # offered gap-time per physical link (pad/dep slots carry vgap = 0
+        # and land in the dummy bin, which link_mask zeroes out below)
+        busy = jax.ops.segment_sum((vgap * gsrow[vgclass]).ravel(),
+                                   vlink.ravel(), num_segments=Lp)
+        a_l = jnp.where(link_mask, alpha[link_cls], 0.0)
+        b_l = beta[link_cls]
+
+        def cond(c):
+            _, it, done = c
+            return (it < max_iters) & ~done
+
+        def body(c):
+            ls, it, done = c
+            T, _ = one_vals(vsrc, vmaskd, vconst, vgap, vgclass, vlat,
+                            vlat_sum, vcost_lv, valid_flat, vert_of_slot,
+                            Lrow, gsrow, vlink, ls)
+            util = busy / jnp.maximum(T, 1e-30)
+            tgt = 1.0 + a_l * jnp.maximum(util - b_l, 0.0)
+            new = ls + 0.5 * (tgt - ls)          # damped update
+            fin = jnp.max(jnp.abs(new - ls)) <= tol
+            return (jnp.where(done, ls, new), it + jnp.where(done, 0, 1),
+                    done | fin)
+
+        ls, iters, _ = jax.lax.while_loop(
+            cond, body, (jnp.ones(Lp), jnp.int32(0), jnp.bool_(False)))
+        T, lam = one_fin(vsrc, vmaskd, vconst, vgap, vgclass, vlat,
+                         vlat_sum, vcost_lv, valid_flat, vert_of_slot,
+                         Lrow, gsrow, vlink, ls)
+        return T, lam, iters
+
+    core = jax.vmap(fixed_point, in_axes=(None,) * 17 + (0, 0))     # S
+    if costs is not None:
+        core = jax.vmap(core, in_axes=(None, None) + tuple(costs)
+                        + (None,) * 10 + (None, None))              # K
+    return core
 
 
 #: cost tensors each backend's forward consumes, in positional order
@@ -961,6 +1040,24 @@ def _stage_arrays(plan, kind: str, max_dense_bytes: int) -> tuple:
             plan.esrc_slot, plan.edst_slot, plan.emask, plan.econst,
             plan.egap, plan.egclass, plan.elat, plan.elat_sum, plan.vcost,
             plan.valid, plan.vert_of_slot, plan.level_ptr, plan.v_ptr))
+    if kind == "congestion":
+        if plan.vlink is None:
+            raise ValueError(
+                "congestion needs per-edge link ids, but this plan carries "
+                "none (the graph was built without link interning — use "
+                "GraphBuilder.add_message / intern_link, or recompile from "
+                "a graph with elink populated)")
+        # link bins: [0, nlinks) real links, nlinks = dummy (dep edges,
+        # pad slots), bucketed up to Lp; masked bins keep lscale ≡ 1.0
+        Lp = _bucket(plan.nlinks + 1, lo=8)
+        link_cls = np.zeros(Lp, dtype=np.int32)
+        if plan.link_classes is not None and plan.nlinks:
+            link_cls[:plan.nlinks] = plan.link_classes
+        link_mask = np.arange(Lp) < plan.nlinks
+        return tuple(jnp.asarray(a) for a in (
+            plan.vsrc, plan.vmaskd, plan.vconst, plan.vgap, plan.vgclass,
+            plan.vlat, plan.vlat_sum, plan.vcost_lv, plan.valid_flat,
+            plan.vert_of_slot, plan.vlink, link_cls, link_mask))
     if plan.dense_bytes() > max_dense_bytes:
         raise ValueError(
             f"dense pallas backend needs {plan.dense_bytes() >> 20} MiB "
@@ -1061,6 +1158,14 @@ def _get_forward(kind: str, want_lam: bool = False, multi: bool = False,
         if sparse_dims is None:
             raise ValueError("sparse forward needs sparse_dims="
                              "(Emax_lv, Vmax_lv)")
+    if kind == "congestion":
+        if multi or structure is not None:
+            raise ValueError("the congestion fixed point populates the S "
+                             "and K axes only (no G/B batching)")
+        if mesh is not None:
+            raise ValueError("the congestion fixed point does not shard "
+                             "yet (while_loop lanes must stay lockstep on "
+                             "one device)")
     if structure is not None and multi:
         raise ValueError("structure blocks and a MultiPlan graph axis "
                          "cannot combine (pick one variant axis)")
@@ -1083,6 +1188,8 @@ def _get_forward(kind: str, want_lam: bool = False, multi: bool = False,
         return _FWD_CACHE[key]
     if kind == "segment":
         core = _segment_core_axes(want_lam, multi, costs, fused, structure)
+    elif kind == "congestion":
+        core = _congestion_core_axes(want_lam, costs)
     elif kind == "sparse":
         core = _sparse_core_axes(want_lam, sparse_dims)
     elif kind == "sparse_pallas":

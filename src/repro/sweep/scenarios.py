@@ -25,7 +25,7 @@ import numpy as np
 
 from repro.core import topology as topo_mod
 from repro.core.graph import ExecutionGraph
-from repro.core.loggps import LogGPS
+from repro.core.loggps import LogGPS, resolve_class
 
 
 @dataclasses.dataclass
@@ -81,9 +81,11 @@ def base_batch(params: LogGPS) -> ScenarioBatch:
                          meta=[{"delta": 0.0}])
 
 
-def latency_grid(params: LogGPS, deltas: Sequence[float], cls: int = 0,
+def latency_grid(params: LogGPS, deltas: Sequence[float], cls=0,
                  absolute: bool = False) -> ScenarioBatch:
-    """One scenario per ΔL (or absolute L with ``absolute=True``) on ``cls``."""
+    """One scenario per ΔL (or absolute L with ``absolute=True``) on ``cls``
+    (a class index, or a registered class name like ``"dcn"``)."""
+    cls = resolve_class(params, cls)
     d = np.asarray(deltas, dtype=np.float64).ravel()
     S, nc = d.shape[0], params.nclass
     L = np.tile(np.asarray(params.L, dtype=np.float64), (S, 1))
@@ -93,8 +95,10 @@ def latency_grid(params: LogGPS, deltas: Sequence[float], cls: int = 0,
 
 
 def bandwidth_grid(params: LogGPS, gscales: Sequence[float],
-                   cls: int = 0) -> ScenarioBatch:
-    """One scenario per bandwidth scale γ on ``cls`` (γ>1 = slower links)."""
+                   cls=0) -> ScenarioBatch:
+    """One scenario per bandwidth scale γ on ``cls`` (an index or a
+    registered class name; γ>1 = slower links)."""
+    cls = resolve_class(params, cls)
     gs = np.asarray(gscales, dtype=np.float64).ravel()
     S, nc = gs.shape[0], params.nclass
     L = np.tile(np.asarray(params.L, dtype=np.float64), (S, 1))
@@ -109,19 +113,22 @@ def cartesian_grid(params: LogGPS,
                    gscales: Optional[dict] = None) -> ScenarioBatch:
     """Cartesian product of per-class ΔL axes × per-class γ axes.
 
-    ``lat_deltas`` / ``gscales`` map class id → sequence of values; omitted
-    classes stay at the base point.  E.g. a 2-class TPU sweep::
+    ``lat_deltas`` / ``gscales`` map class id (or registered class name,
+    e.g. ``"dcn"``) → sequence of values; omitted classes stay at the base
+    point.  E.g. a 2-class TPU sweep::
 
         cartesian_grid(p, lat_deltas={0: ici_dl, 1: dcn_dl}, gscales={1: gs})
     """
     nc = params.nclass
     axes, keys = [], []
-    for c, vals in sorted((lat_deltas or {}).items()):
+    for c, vals in sorted((lat_deltas or {}).items(),
+                          key=lambda kv: resolve_class(params, kv[0])):
         axes.append(np.asarray(vals, dtype=np.float64))
-        keys.append(("L", c))
-    for c, vals in sorted((gscales or {}).items()):
+        keys.append(("L", resolve_class(params, c)))
+    for c, vals in sorted((gscales or {}).items(),
+                          key=lambda kv: resolve_class(params, kv[0])):
         axes.append(np.asarray(vals, dtype=np.float64))
-        keys.append(("G", c))
+        keys.append(("G", resolve_class(params, c)))
     if not axes:
         return base_batch(params)
     rows_L, rows_G, meta = [], [], []

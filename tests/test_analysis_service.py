@@ -150,7 +150,7 @@ def test_query_errors_become_responses(svc):
     # a rank over a class some variant lacks is an error, never a silent
     # ranking of incomparable sweeps
     resp = svc.handle(AnalysisRequest(kind="rank", cls=1))
-    assert not resp.ok and "out of range" in resp.error
+    assert not resp.ok and "unknown to variants" in resp.error
 
 
 def test_json_lines_protocol(svc):

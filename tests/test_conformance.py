@@ -40,7 +40,7 @@ import pytest
 pytest.importorskip("jax")
 
 from repro.core import dag, lp, synth
-from repro.core.loggps import LogGPS, cluster_params, tpu_pod_params
+from repro.core.loggps import LogGPS, cluster_params, pod_model
 from repro import sweep
 
 # Shim coverage: this suite deliberately drives the deprecated
@@ -67,12 +67,16 @@ class Case:
 
 def _make_cases():
     p1 = cluster_params(L_us=3.0, o_us=5.0)
-    p2 = tpu_pod_params(pod_size=2)
+    p2 = pod_model(pod_size=2).params()
+    # 3-class registry (intra-node / ICI / DCN): 8 ranks = 2 ranks/host,
+    # 4 ranks/pod, 2 pods — every class appears on some message edge
+    p3 = pod_model(pod_size=4, ranks_per_host=2).params()
     specs = [
         ("stencil", synth.stencil2d(3, 3, 4, params=p1), p1),
         ("cg", synth.cg_like(2, 2, 3, params=p1), p1),
         ("allreduce", synth.allreduce_chain(8, 3, params=p1), p1),  # tie-heavy
         ("stencil2c", synth.stencil2d(2, 2, 3, params=p2), p2),     # 2-class
+        ("stencil3c", synth.stencil2d(4, 2, 3, params=p3), p3),     # 3-class
     ]
     rng = np.random.default_rng(42)
     cases = []
@@ -590,3 +594,25 @@ def test_shims_bit_identical_to_engine():
     mb = mnew.run([x.batch for x in cases])
     np.testing.assert_array_equal(ma.T, mb.T)
     np.testing.assert_array_equal(ma.lam, mb.lam)
+
+
+def test_zero_congestion_fixed_point_bit_identical():
+    """``ExecPolicy(congestion="fixed_point")`` with all-zero α (the
+    registry default) must be **bit-identical** (f64) to the plain segment
+    forward on every case — T, λ and ρ — and converge in exactly one
+    iteration: the fixed point's per-link scale is exactly 1.0, and the
+    damped update is an exact identity there.  This pins the congestion
+    refactor as a pure extension: congestion off (or α = 0) can never
+    perturb a pre-existing result."""
+    for c in CASES:
+        base = sweep.Engine(c.g, params=c.params,
+                            policy=sweep.ExecPolicy(cache=None)).run(c.batch)
+        cong = sweep.Engine(
+            c.g, params=c.params,
+            policy=sweep.ExecPolicy(congestion="fixed_point",
+                                    cache=None)).run(c.batch)
+        np.testing.assert_array_equal(cong.T, base.T, err_msg=c.name)
+        np.testing.assert_array_equal(cong.lam, base.lam, err_msg=c.name)
+        np.testing.assert_array_equal(cong.rho, base.rho, err_msg=c.name)
+        assert cong.congestion_iters is not None
+        assert np.all(cong.congestion_iters == 1), c.name

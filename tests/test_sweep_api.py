@@ -13,7 +13,7 @@ import pytest
 pytest.importorskip("jax")
 
 from repro.core import dag, sensitivity, synth
-from repro.core.loggps import cluster_params, tpu_pod_params
+from repro.core.loggps import cluster_params, pod_model
 from repro import sweep
 from repro.sweep import engine as sweep_engine
 from repro.sweep.api import Engine, ExecPolicy, Query
@@ -140,7 +140,7 @@ def test_fd_lambda_matches_exact_at_non_breakpoints(params):
     piecewise linear; λ is its exact right-derivative), T bit-identically
     (it IS the values program), ρ to the same tolerance — including
     two-class params and the candidate-cost axis."""
-    p2 = tpu_pod_params(pod_size=2)
+    p2 = pod_model(pod_size=2).params()
     cases = [(synth.stencil2d(3, 3, 4, params=params), params),
              (synth.cg_like(2, 2, 3, params=params), params),
              (synth.stencil2d(2, 2, 3, params=p2), p2)]
