@@ -695,6 +695,103 @@ def congestion(out, smoke: bool = False):
                  f"rel_err_congested={err_cong:.3f}"))
 
 
+def resilience(out, smoke: bool = False):
+    """Resilience scenario family (the PR-9 tentpole): a fault
+    distribution — stragglers (K axis), degraded/flapping links (S axis),
+    failed devices with checkpoint-restart recovery (B axis + K) — as ONE
+    batched ``sensitivity.resilience_curve`` query.
+
+    Asserted in BOTH modes (the ``--smoke`` CI gate):
+
+    * the whole ≥3-fault-family grid (4 stragglers × 50 link scenarios ×
+      2 device faults — a B×K×S cube of >1000 cells) compiles exactly ONE
+      new XLA program cold and ZERO warm, reported by the production
+      :class:`repro.obs.CompileWatcher`;
+    * the zero-fault cell (0, 0, 0) is bit-identical to the plain scalar
+      forward (``dag.evaluate``);
+    * straggler predictions match the DES fault injector
+      (``simulate(injector="fault")``) — the relative error is asserted
+      ≤5% and reported for ``--json``.
+    """
+    from repro import obs
+    from repro.core import sensitivity
+    from repro.core.graph import CALC
+    from repro.core.loggps import pod_model
+    from repro.core.simulator import simulate
+
+    p = pod_model(pod_size=4).params()
+    g = (synth.stencil2d(3, 3, 3, params=p) if smoke
+         else synth.stencil2d(4, 4, 10, params=p))
+    nv = g.num_vertices
+    indeg = np.bincount(g.edst, minlength=nv)
+
+    # 4 stragglers on compute vertices that have in-edges (expressible as
+    # patch_costs rows), spread across the graph
+    calc = np.nonzero((g.kind == CALC) & (indeg > 0) & (g.vcost > 0))[0]
+    picks = calc[:: max(1, len(calc) // 4)][:4]
+    stragglers = [sweep.StragglerFault(vertices=(int(v),), slowdown=s,
+                                       name=f"strag[v{int(v)}]x{s}")
+                  for v, s in zip(picks, (1.5, 2.0, 3.0, 4.0))]
+    # 50 link-degradation scenarios: ΔL severity sweep × both classes
+    links = [sweep.LinkFault(cls=c, extra_L_us=float(dl), gscale=1.5,
+                             duty=duty, name=f"{c}+{dl:.0f}us@{duty}")
+             for c in ("ici", "dcn")
+             for dl in np.linspace(5.0, 120.0, 5 if smoke else 25)
+             for duty in ((1.0, 0.5) if not smoke else (1.0, 0.5, 0.25,
+                                                        0.75, 0.1))]
+    # 2 failed devices, recovery cost from checkpoint-restart accounting
+    # (one "step" = one pass over this graph; restore = half a step)
+    T_plain = dag.evaluate(g, p).T
+    rec_us = sweep.recovery_cost_us(step_us=T_plain,
+                                    restore_us=0.5 * T_plain, ckpt_every=4)
+    devices = [sweep.DeviceFault(rank=r, recovery_us=rec_us,
+                                 name=f"dev{r}-down")
+               for r in (1, g.nranks - 1)]
+    faults = stragglers + links + devices
+
+    pol = sweep.ExecPolicy(cache=None)
+    w = obs.CompileWatcher()
+    with w.watch("resilience.cold") as cold:
+        t_cold, rep = timeit(lambda: sensitivity.resilience_curve(
+            g, p, faults, policy=pol), repeats=1, warmup=0)
+    assert cold.new_programs == 1, \
+        f"resilience fault grid built {cold.new_programs} XLA programs, want 1"
+    B, K, S = rep.result.T.shape
+    assert rep.result.axes == ("B", "K", "S") and S >= 51
+
+    with w.watch("resilience.warm") as warm:
+        t_warm, rep2 = timeit(lambda: sensitivity.resilience_curve(
+            g, p, faults, policy=pol), repeats=1, warmup=0)
+    assert warm.new_programs == 0, "re-run of the fault grid recompiled"
+    assert np.array_equal(rep2.T_fault, rep.T_fault)
+
+    # zero-fault cell: bit-identical to the plain scalar forward
+    assert rep.T0 == T_plain, \
+        f"zero-fault cell {rep.T0} != plain forward {T_plain}"
+
+    # DES cross-validation: the straggler rows against the fault injector
+    errs = []
+    for f, T_pred in zip(stragglers, rep.T_fault[:len(stragglers)]):
+        des = simulate(g, p, injector="fault",
+                       fault={"slowdown": {f.vertices[0]: f.slowdown}}).T
+        errs.append(abs(T_pred - des) / des)
+    err_max = float(max(errs))
+    assert err_max <= 0.05, \
+        f"straggler prediction diverged from DES: rel err {err_max:.3f}"
+
+    out(csv_line(f"sweep.resilience.fault_grid.{B}x{K}x{S}", t_cold * 1e6,
+                 f"faults={len(faults)};families=3;cells={B * K * S};"
+                 f"xla_programs=1;E_slowdown={rep.expected_slowdown:.4f};"
+                 f"p99={rep.quantiles['p99']:.4f}"))
+    out(csv_line("sweep.resilience.warm", t_warm * 1e6,
+                 "new_xla_programs=0;bit_equal=1"))
+    out(csv_line("sweep.resilience.zero_fault", 0.0,
+                 "bit_equal_plain_forward=1"))
+    out(csv_line("sweep.resilience.des_validation", err_max,
+                 f"stragglers={len(stragglers)};"
+                 f"rel_err_max={err_max:.2e}"))
+
+
 SHARD_SMOKE_PROG = """
 import numpy as np
 from repro.core import synth
@@ -759,6 +856,7 @@ def run(out, smoke: bool = False):
         structure_patch(out, smoke=True)
         sparse_scale(out, smoke=True)
         congestion(out, smoke=True)
+        resilience(out, smoke=True)
         return
     single_graph(out)
     variant_study(out)
@@ -770,6 +868,7 @@ def run(out, smoke: bool = False):
     structure_patch(out)
     sparse_scale(out)
     congestion(out)
+    resilience(out)
 
 
 def main(argv=None):

@@ -237,6 +237,177 @@ def latency_curve(g: ExecutionGraph, params: LogGPS, deltas: Sequence[float],
                         T=np.asarray(Ts), lam=np.asarray(lams), rho=np.asarray(rhos))
 
 
+@dataclasses.dataclass
+class ResilienceReport:
+    """Expected slowdown under a fault distribution (one batched query).
+
+    ``T_fault``/``slowdown`` are aligned with ``faults``; ``weights`` are
+    the per-fault probabilities (their shortfall from 1 is the no-fault
+    mass at slowdown 1.0).  ``quantiles`` are weighted quantiles of the
+    slowdown distribution; ``result`` is the full B?×K?×S sweep
+    :class:`~repro.sweep.api.Result` for drill-down, with ``cells``
+    naming each fault's cell in it.
+    """
+
+    T0: float                          # intact-system makespan (µs)
+    faults: list
+    names: tuple
+    weights: np.ndarray
+    T_fault: np.ndarray                # per-fault makespan (µs)
+    slowdown: np.ndarray               # T_fault / T0
+    expected_slowdown: float
+    quantiles: dict                    # {"p50": …, "p95": …, "p99": …}
+    result: object
+    cells: list
+
+    def rank(self) -> list:
+        """Faults ordered most-damaging first: (name, slowdown)."""
+        order = np.argsort(-self.slowdown, kind="stable")
+        return [(self.names[i], float(self.slowdown[i])) for i in order]
+
+    def __str__(self):
+        rows = [f"T0 = {self.T0:.3f} µs   "
+                f"E[slowdown] = {self.expected_slowdown:.4f}"]
+        for p, v in self.quantiles.items():
+            rows.append(f"  {p} slowdown = {v:.4f}")
+        for name, s in self.rank():
+            rows.append(f"  {name}: ×{s:.4f}")
+        return "\n".join(rows)
+
+
+def _weighted_quantiles(values: np.ndarray, weights: np.ndarray,
+                        qs: Sequence[float]) -> dict:
+    """Weighted quantiles by inverted CDF (first value whose cumulative
+    weight reaches q of the total)."""
+    order = np.argsort(values, kind="stable")
+    v, w = values[order], weights[order]
+    cum = np.cumsum(w)
+    total = cum[-1]
+    out = {}
+    for q in qs:
+        i = int(np.searchsorted(cum, q * total, side="left"))
+        out[f"p{int(round(q * 100))}"] = float(v[min(i, v.size - 1)])
+    return out
+
+
+def resilience_curve(g: ExecutionGraph, params: LogGPS, faults: Sequence,
+                     weights: Optional[Sequence[float]] = None,
+                     quantiles: Sequence[float] = (0.50, 0.95, 0.99),
+                     engine: str = "auto", policy=None) -> ResilienceReport:
+    """Expected slowdown under a fault distribution, as ONE batched query.
+
+    ``faults`` is a list of :class:`~repro.sweep.scenarios.StragglerFault`
+    / :class:`~repro.sweep.scenarios.LinkFault` /
+    :class:`~repro.sweep.scenarios.DeviceFault`; each family rides one
+    engine batch axis (K / S / B), so the whole distribution — plus the
+    intact baseline at cell (0, 0, 0) — evaluates in a single compiled
+    program (see :func:`repro.sweep.scenarios.fault_axes`).
+
+    ``weights`` are per-fault probabilities: nonnegative, summing to
+    ≤ 1; the shortfall is the no-fault mass (slowdown 1.0).  ``None``
+    means uniform over ``faults`` (the conditional-on-a-fault
+    distribution).  The report carries E[slowdown] and weighted
+    p50/p95/p99 over the distribution.
+
+    Device faults need the structural (B) axis and therefore the batched
+    engine; the scalar fallback (JAX unavailable, or
+    ``engine="scalar"``) handles straggler and link faults only and
+    raises otherwise.  Sharded policies are rejected by the engine when
+    the B axis is populated.
+    """
+    _check_engine_arg(engine)
+    faults = list(faults)
+    if not faults:
+        raise ValueError("resilience_curve needs at least one fault")
+    if weights is None:
+        w = np.full(len(faults), 1.0 / len(faults))
+    else:
+        w = np.asarray(weights, dtype=np.float64).ravel()
+        if w.shape[0] != len(faults):
+            raise ValueError(f"{len(faults)} faults but {w.shape[0]} weights")
+        if (w < 0).any() or w.sum() > 1.0 + 1e-9:
+            raise ValueError("weights must be nonnegative and sum to ≤ 1 "
+                             "(the shortfall is the no-fault mass)")
+
+    from repro.sweep.scenarios import DeviceFault, fault_axes
+    has_device = any(isinstance(f, DeviceFault) for f in faults)
+
+    res = None
+    if engine != "scalar":
+        try:
+            from repro.sweep.api import ExecPolicy, Query
+        except ImportError:
+            if policy is not None or engine == "sweep" or has_device:
+                raise              # no scalar path can serve these
+            Query = None
+        if Query is not None:
+            # an explicit unified-Engine policy (the legacy shim has no
+            # structure axis); construction/run failures fall back to the
+            # scalar loop only under plain "auto" with no device faults
+            try:
+                eng = _sweep_engine(g, params,
+                                    policy if policy is not None
+                                    else ExecPolicy())
+                if eng is not None:
+                    ax = fault_axes(g, params, faults, plan=eng.plan)
+                    res = eng.run(Query(scenarios=ax.scenarios,
+                                        costs=ax.extras,
+                                        structure=ax.structure))
+                elif policy is not None or engine == "sweep" or has_device:
+                    raise ImportError(
+                        "resilience_curve: the batched sweep engine needs "
+                        "JAX, which is unavailable")
+            except Exception as e:
+                if engine == "sweep" or policy is not None or has_device:
+                    raise
+                _warn_sweep_fallback("resilience_curve", e)
+                res = None
+
+    if res is not None:
+        def cell_T(b, k, s):
+            idx = []
+            if "B" in res.axes:
+                idx.append(b)
+            if "K" in res.axes:
+                idx.append(k)
+            idx.append(s)
+            return float(res.T[tuple(idx)])
+
+        T0 = cell_T(0, 0, 0)
+        T_fault = np.asarray([cell_T(*c) for c in ax.cells])
+        names, cells = ax.names, ax.cells
+    else:                              # scalar fallback: K/S families only
+        if has_device:
+            raise ValueError(
+                "device faults need the batched sweep engine (structural "
+                "B axis) — the scalar path cannot evaluate them")
+        ax = fault_axes(g, params, faults)
+        plan = dag.LevelPlan(g)
+        T0 = plan.forward(params).T
+        T_fault = np.empty(len(faults))
+        for i, (b, k, s) in enumerate(ax.cells):
+            extra = None if ax.extras is None or k == 0 else ax.extras[k]
+            p = params.replace(L=tuple(ax.scenarios.L[s]))
+            gs = ax.scenarios.gscale[s]
+            if (gs != 1.0).any():
+                from .graph import edge_gap_shares
+                egap, egclass = edge_gap_shares(g, p)
+                gextra = egap * (gs[egclass] - 1.0)
+                extra = gextra if extra is None else extra + gextra
+            T_fault[i] = plan.forward(p, extra_edge_cost=extra).T
+        names, cells = ax.names, ax.cells
+
+    slow = T_fault / T0
+    vals = np.concatenate([[1.0], slow])
+    ws = np.concatenate([[max(0.0, 1.0 - w.sum())], w])
+    return ResilienceReport(
+        T0=T0, faults=faults, names=names, weights=w, T_fault=T_fault,
+        slowdown=slow,
+        expected_slowdown=float((vals * ws).sum() / ws.sum()),
+        quantiles=_weighted_quantiles(vals, ws, quantiles),
+        result=res, cells=list(cells))
+
+
 def latency_tolerance(g: ExecutionGraph, params: LogGPS,
                       degradations: Sequence[float] = (0.01, 0.02, 0.05),
                       cls=0, plan: Optional[dag.LevelPlan] = None,

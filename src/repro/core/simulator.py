@@ -24,6 +24,11 @@ Injector modes (Fig 8):
                 congestion fixed point (``ExecPolicy(congestion=
                 "fixed_point")``) approximates with a utilization-driven
                 effective-G inflation; ΔL still injects flow-style on top.
+  "fault"     — resilience ground truth (``fault=`` dict): per-vertex
+                compute slowdown multipliers (stragglers) plus per-class
+                latency additions and gap inflations (degraded links),
+                the states ``sensitivity.resilience_curve`` predicts via
+                the batched K/S fault axes.  ΔL injects flow-style on top.
 """
 
 from __future__ import annotations
@@ -48,18 +53,60 @@ class SimResult:
 
 def simulate(g: ExecutionGraph, params: LogGPS, delta_L: float = 0.0,
              injector: str = "flow", inject_class: Optional[int] = None,
-             model_gap: bool = True) -> SimResult:
+             model_gap: bool = True, fault: Optional[dict] = None) -> SimResult:
     """Event-driven replay. delta_L (µs) is injected per message edge.
 
     inject_class: restrict injection to one latency class (None = all).
+
+    fault (``injector="fault"`` only): a dict of degraded states —
+      "slowdown"  {vertex: multiplier} or [nv] array of per-vertex
+                  compute-cost multipliers (stragglers),
+      "extra_L"   {class: µs} per-class base-latency addition,
+      "gscale"    {class: γ} per-class gap inflation (γ > 1 = slower;
+                  applied to the per-edge (s−1)·G gap shares).
+    Class keys resolve through the params registry (index or name).
     """
-    if injector not in ("flow", "sender", "progress", "contention"):
+    if injector not in ("flow", "sender", "progress", "contention", "fault"):
         raise ValueError(
-            f"injector must be 'flow', 'sender', 'progress' or "
-            f"'contention', got {injector!r}")
+            f"injector must be 'flow', 'sender', 'progress', 'contention' "
+            f"or 'fault', got {injector!r}")
+    if (fault is not None) != (injector == "fault"):
+        raise ValueError("fault= requires injector='fault' (and vice versa)")
     nv = g.num_vertices
     ne = g.num_edges
     Lvec = np.asarray(params.L, dtype=np.float64)
+
+    slow = None
+    gap_extra = None
+    if injector == "fault":
+        from .loggps import resolve_class
+        bad = set(fault) - {"slowdown", "extra_L", "gscale"}
+        if bad:
+            raise ValueError(f"unknown fault key(s) {sorted(bad)}; expected "
+                             "'slowdown', 'extra_L', 'gscale'")
+        sl = fault.get("slowdown")
+        if sl is not None:
+            if isinstance(sl, dict):
+                slow = np.ones(nv)
+                for v, m in sl.items():
+                    slow[int(v)] = float(m)
+            else:
+                slow = np.asarray(sl, dtype=np.float64)
+                if slow.shape != (nv,):
+                    raise ValueError(f"slowdown array must be [{nv}], "
+                                     f"got {slow.shape}")
+        Lvec = Lvec.copy()
+        for c, dl in (fault.get("extra_L") or {}).items():
+            Lvec[resolve_class(params, c)] += float(dl)
+        gs = fault.get("gscale")
+        if gs is not None:
+            from .graph import edge_gap_shares
+            gvec = np.ones(params.nclass)
+            for c, gamma in gs.items():
+                gvec[resolve_class(params, c)] = float(gamma)
+            egap, egclass = edge_gap_shares(g, params)
+            gap_extra = egap * (gvec[egclass] - 1.0)
+
     # per-edge latency cost and message-ness
     lat_edge = g.elat.astype(np.float64) @ Lvec
     is_msg = g.ebytes > 0
@@ -127,7 +174,7 @@ def simulate(g: ExecutionGraph, params: LogGPS, delta_L: float = 0.0,
         if ggap and kind[v] in (SEND, RECV):
             start = max(start, rank_gap[r])
             rank_gap[r] = start + ggap
-        cost = vcost[v]
+        cost = vcost[v] if slow is None else vcost[v] * slow[v]
         if injector == "sender" and kind[v] == SEND and delta_L > 0:
             cost = cost + delta_L  # Fig 8B: the send op itself stalls ΔL
         t_start[v] = start
@@ -148,8 +195,10 @@ def simulate(g: ExecutionGraph, params: LogGPS, delta_L: float = 0.0,
                 base = max(end, link_free[l])
                 link_free[l] = base + link_gap[e]
             arr = base + g.econst[e] + lat_edge[e]
+            if gap_extra is not None:
+                arr += gap_extra[e]
             if is_msg[e] and delta_L > 0 and n_lat[e] > 0:
-                if injector in ("flow", "contention"):
+                if injector in ("flow", "contention", "fault"):
                     arr += delta_L * n_lat[e]          # Fig 8D: pure flow delay
                 elif injector == "progress":
                     # Fig 8C: per-receiver delay server busy ΔL per message

@@ -21,7 +21,10 @@ Request/response API (JSON-friendly dataclasses)::
 Query kinds: ``curve`` (T/λ/ρ over ΔL), ``bandwidth`` (T over γ·G),
 ``tolerance`` (p%-degradation ΔL budgets), ``rank`` (variant ordering over
 a shared grid — one compiled call per shape bucket), ``placement``
-(Algorithm-3 rank-mapping suggestion on a two-tier Φ), ``stats``,
+(Algorithm-3 rank-mapping suggestion on a two-tier Φ), ``resilience``
+(expected slowdown + p50/p95/p99 under a fault distribution — straggler /
+degraded-link / failed-device specs lowered onto the engine's K/S/B axes,
+one batched call; see ``sensitivity.resilience_curve``), ``stats``,
 ``metrics`` (the ``repro.obs`` registry snapshot + cache stats).
 
 Observability (``repro.obs``): every request carries a trace id — the
@@ -106,6 +109,11 @@ class AnalysisRequest:
     reduce: str = "mean"                        # rank objective: mean|max|final
     topo: Optional[dict] = None                 # placement Φ spec (two_tier kw)
     topk: int = 1                               # placement candidate width
+    faults: Optional[Sequence[dict]] = None     # fault specs (resilience):
+                                                # {"type": "straggler"|"link"
+                                                #  |"device", ...field kwargs}
+    weights: Optional[Sequence[float]] = None   # per-fault probabilities
+                                                # (resilience; sum ≤ 1)
     policy: Optional[dict] = None               # ExecPolicy block (wire fields)
     backend: Optional[str] = None               # legacy: overlays policy
     shard: Optional[int] = None                 # legacy: overlays policy
@@ -443,6 +451,57 @@ class AnalysisService:
                 "improvement": (1.0 - hist[-1] / hist[0]) if hist[0] else 0.0,
                 "stats": stats}
 
+    @staticmethod
+    def _parse_faults(specs: Sequence[dict]) -> list:
+        """Wire fault specs → fault dataclasses (protocol-edge validation:
+        an unknown type or field comes back as a bad-request error naming
+        the offending spec, never a server traceback)."""
+        from repro.sweep import DeviceFault, LinkFault, StragglerFault
+        kinds = {"straggler": StragglerFault, "link": LinkFault,
+                 "device": DeviceFault}
+        out = []
+        for i, d in enumerate(specs):
+            if not isinstance(d, dict):
+                raise ValueError(f"fault[{i}] must be an object, "
+                                 f"got {type(d).__name__}")
+            d = dict(d)
+            typ = d.pop("type", None)
+            cls = kinds.get(typ)
+            if cls is None:
+                raise ValueError(f"fault[{i}]: type must be one of "
+                                 f"{sorted(kinds)}, got {typ!r}")
+            try:
+                out.append(cls(**d))
+            except TypeError as e:
+                raise ValueError(f"fault[{i}] ({typ}): {e}") from None
+        return out
+
+    def resilience(self, req: AnalysisRequest) -> dict:
+        """Expected slowdown under a fault distribution, as ONE batched
+        query per variant: the request's ``faults`` list (straggler /
+        link / device specs) lowers onto the engine's K/S/B axes and the
+        whole distribution — intact baseline included — evaluates in a
+        single compiled program (``sensitivity.resilience_curve``).
+        ``weights`` are per-fault probabilities (sum ≤ 1; the shortfall
+        is the no-fault mass)."""
+        from repro.core import sensitivity
+        v = self._variant(req.variant)
+        if not req.faults:
+            raise ValueError(
+                "resilience queries need a nonempty 'faults' list, e.g. "
+                '[{"type": "straggler", "vertices": [5], "slowdown": 2}]')
+        faults = self._parse_faults(req.faults)
+        rep = sensitivity.resilience_curve(v.graph, v.params, faults,
+                                           weights=req.weights,
+                                           policy=self._policy(req))
+        return {"variant": v.name, "T0": rep.T0,
+                "faults": list(rep.names),
+                "T_fault": rep.T_fault, "slowdown": rep.slowdown,
+                "expected_slowdown": rep.expected_slowdown,
+                "quantiles": rep.quantiles, "rank": rep.rank(),
+                "axes": None if rep.result is None else list(rep.result.axes),
+                "cells": rep.cells}
+
     def stats(self, req: AnalysisRequest) -> dict:
         return {"variants": list(self._variants),
                 "warm_engines": list(self._engines),
@@ -460,8 +519,8 @@ class AnalysisService:
                 "trace_enabled": _obs_trace.TRACER.enabled}
 
     _KINDS = {"curve": curve, "bandwidth": bandwidth, "tolerance": tolerance,
-              "rank": rank, "placement": placement, "stats": stats,
-              "metrics": metrics}
+              "rank": rank, "placement": placement,
+              "resilience": resilience, "stats": stats, "metrics": metrics}
 
     def handle(self, req: AnalysisRequest) -> AnalysisResponse:
         """Dispatch one request; errors come back as ``ok=False`` responses

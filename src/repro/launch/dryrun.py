@@ -24,6 +24,7 @@ import argparse
 import json
 import time
 import traceback
+import warnings
 
 import jax
 import numpy as np
@@ -51,8 +52,11 @@ def _mem_dict(m) -> dict:
     for k in keys:
         try:
             out[k] = int(getattr(m, k))
-        except Exception:
-            pass
+        except AttributeError:
+            pass                # field absent on this backend's analysis
+        except (TypeError, ValueError) as e:
+            warnings.warn(f"memory_analysis.{k} not coercible to int: {e}",
+                          stacklevel=2)
     return out
 
 
@@ -100,11 +104,11 @@ def build_step(cfg, shape, mesh, opt_cfg):
 
 def lower_compile(cfg, shape, mesh, opt_cfg):
     jitted, args = build_step(cfg, shape, mesh, opt_cfg)
-    t0 = time.time()
+    t0 = time.perf_counter()
     lowered = jitted.lower(*args)
-    t1 = time.time()
+    t1 = time.perf_counter()
     compiled = lowered.compile()
-    t2 = time.time()
+    t2 = time.perf_counter()
     return lowered, compiled, {"lower_s": t1 - t0, "compile_s": t2 - t1}
 
 
@@ -244,8 +248,14 @@ def main():
                     skip += prev["status"] == "skip"
                     print(f"[dryrun] RESUME-SKIP {arch} × {sname} × {mesh_name}")
                     continue
-            except Exception:
-                pass
+            except (OSError, json.JSONDecodeError, UnicodeDecodeError) as e:
+                # unreadable/corrupt record: fall through and re-run the cell
+                warnings.warn(f"--resume could not read {fn} ({e}); "
+                              f"re-running cell", stacklevel=1)
+            except AttributeError:
+                # prev is valid JSON but not a dict (no .get) — stale format
+                warnings.warn(f"--resume record {fn} has unexpected shape; "
+                              f"re-running cell", stacklevel=1)
         rec = run_cell(arch, sname, args.multi_pod,
                        skip_two_point=args.skip_two_point)
         fn = os.path.join(args.out, f"{arch}__{sname}__{mesh_name}.json")

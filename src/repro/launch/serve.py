@@ -47,13 +47,13 @@ def main(argv=None):
 
     # prefill token-by-token through the serve step (exercises the exact
     # program the dry-run lowers); a batched prefill would use forward()
-    t0 = time.time()
+    t0 = time.perf_counter()
     tok = None
     for t in range(P):
         logits, cache = serve(params, {"tokens": prompts[:, t:t + 1]}, cache,
                               jnp.asarray(t, jnp.int32))
     tok = jnp.argmax(logits, axis=-1)[:, None]
-    t1 = time.time()
+    t1 = time.perf_counter()
     out = [tok]
     for t in range(P, P + G - 1):
         logits, cache = serve(params, {"tokens": tok}, cache,
@@ -61,7 +61,7 @@ def main(argv=None):
         tok = jnp.argmax(logits, axis=-1)[:, None]
         out.append(tok)
     gen = jnp.concatenate(out, axis=1)
-    t2 = time.time()
+    t2 = time.perf_counter()
     print(f"[serve] prefill {P} tok × {B} seqs in {t1 - t0:.2f}s; "
           f"decoded {G} tok in {t2 - t1:.2f}s "
           f"({B * G / max(t2 - t1, 1e-9):.1f} tok/s)")

@@ -74,7 +74,7 @@ def main(argv=None):
 
     wd = StepWatchdog(args.watchdog_timeout,
                       on_timeout=lambda info: print(f"[watchdog] STALL {info}"))
-    t0 = time.time()
+    t0 = time.perf_counter()
     losses = []
     for i in range(start, args.steps):
         batch = {k: jnp.asarray(v) for k, v in data.next().items()}
@@ -83,7 +83,7 @@ def main(argv=None):
         wd.disarm()
         losses.append(float(metrics["loss"]))
         if i % args.log_every == 0 or i == args.steps - 1:
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             print(f"[train] step={i} loss={losses[-1]:.4f} "
                   f"ce={float(metrics['ce']):.4f} "
                   f"gnorm={float(metrics['grad_norm']):.3f} "

@@ -21,6 +21,18 @@ from typing import Callable, Optional
 
 
 class StepWatchdog:
+    """Arms a per-step timer; records an incident when a step overruns.
+
+    ``Timer.cancel()`` cannot stop a callback that has already started
+    running, so disarm/fire can race: a step that finishes just as its
+    timer expires must not record a phantom incident.  Each ``arm()``
+    mints a generation; ``_fire`` re-checks its generation under the lock
+    before recording, so a stale callback (its generation retired by a
+    ``disarm()``/re-``arm()``) is a no-op.  Timing uses ``time.monotonic``
+    — NTP steps on the wall clock must not produce negative or inflated
+    straggler elapsed times.
+    """
+
     def __init__(self, timeout_s: float, on_timeout: Optional[Callable] = None):
         self.timeout_s = timeout_s
         self.on_timeout = on_timeout or (lambda info: None)
@@ -28,24 +40,35 @@ class StepWatchdog:
         self._timer: Optional[threading.Timer] = None
         self._step = -1
         self._armed_at = 0.0
+        self._lock = threading.Lock()
+        self._gen = 0
 
     def arm(self, step: int) -> None:
-        self.disarm()
-        self._step = step
-        self._armed_at = time.time()
-        self._timer = threading.Timer(self.timeout_s, self._fire)
-        self._timer.daemon = True
-        self._timer.start()
+        with self._lock:
+            if self._timer is not None:
+                self._timer.cancel()
+            self._gen += 1
+            gen = self._gen
+            self._step = step
+            self._armed_at = time.monotonic()
+            self._timer = threading.Timer(self.timeout_s, self._fire, (gen,))
+            self._timer.daemon = True
+            self._timer.start()
 
     def disarm(self) -> None:
-        if self._timer is not None:
-            self._timer.cancel()
-            self._timer = None
+        with self._lock:
+            self._gen += 1
+            if self._timer is not None:
+                self._timer.cancel()
+                self._timer = None
 
-    def _fire(self) -> None:
-        info = {"step": self._step, "armed_at": self._armed_at,
-                "elapsed": time.time() - self._armed_at}
-        self.incidents.append(info)
+    def _fire(self, gen: int) -> None:
+        with self._lock:
+            if gen != self._gen:
+                return          # step finished (disarmed/re-armed) first
+            info = {"step": self._step, "armed_at": self._armed_at,
+                    "elapsed": time.monotonic() - self._armed_at}
+            self.incidents.append(info)
         self.on_timeout(info)
 
     def __enter__(self):

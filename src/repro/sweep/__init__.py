@@ -57,6 +57,12 @@ Public surface (re-exported here):
     GraphVariant stamping             — collective_variants / topology_variants
                                         / sweep_variants (axes that change the
                                         graph itself)
+    Fault & straggler scenarios       — StragglerFault / LinkFault /
+                                        DeviceFault + fault_axes /
+                                        recovery_cost_us: a fault
+                                        distribution lowered onto the B/K/S
+                                        axes as ONE batched Query
+                                        (``sensitivity.resilience_curve``)
     tolerance_batched / breakpoints_batched — dag.py's bisection loops in
                                         lockstep, one engine call per round
     SweepCache / DEFAULT_CACHE        — content-hash LRU memo of results
@@ -88,6 +94,8 @@ from .compile import (COST_FIELDS, STRUCT_FIELDS, CompiledPlan,  # noqa: F401
 from .engine import (CostSweepResult, MultiSweepEngine,  # noqa: F401
                      MultiSweepResult, SweepEngine, SweepResult,
                      breakpoints_batched, tolerance_batched)
-from .scenarios import (GraphVariant, ScenarioBatch, bandwidth_grid,  # noqa: F401
-                        base_batch, cartesian_grid, collective_variants,
-                        latency_grid, sweep_variants, topology_variants)
+from .scenarios import (DeviceFault, FaultAxes, GraphVariant,  # noqa: F401
+                        LinkFault, ScenarioBatch, StragglerFault,
+                        bandwidth_grid, base_batch, cartesian_grid,
+                        collective_variants, fault_axes, latency_grid,
+                        recovery_cost_us, sweep_variants, topology_variants)

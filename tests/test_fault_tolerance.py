@@ -33,6 +33,45 @@ def test_watchdog_quiet_on_fast_steps():
     assert not wd.incidents
 
 
+def test_watchdog_no_phantom_incident_after_disarm():
+    """Timer.cancel() cannot stop a callback that already started running:
+    a step that completes just as its timer fires must NOT record a phantom
+    incident.  Simulate the lost race by invoking the (cancelled) timer's
+    callback by hand after disarm — exactly what the OS thread does when
+    cancel() arrives too late."""
+    wd = StepWatchdog(60.0)
+    wd.arm(step=1)
+    stale = wd._timer
+    wd.disarm()                        # step finished first
+    stale.function(*stale.args, **(stale.kwargs or {}))
+    assert wd.incidents == []
+
+    # same race, but the next step is already armed: the stale callback
+    # must not record an incident against the *new* step either
+    wd.arm(step=2)
+    stale = wd._timer
+    wd.arm(step=3)
+    stale.function(*stale.args, **(stale.kwargs or {}))
+    assert wd.incidents == []
+    wd.disarm()
+
+
+def test_watchdog_elapsed_is_monotonic(monkeypatch):
+    """An NTP wall-clock step between arm and fire must not produce a
+    negative (or hour-inflated) straggler elapsed time."""
+    import repro.runtime.watchdog as wdmod
+    fired = threading.Event()
+    wd = StepWatchdog(0.05, on_timeout=lambda info: fired.set())
+    real_time = time.time
+    wd.arm(step=3)
+    # wall clock jumps back one hour while the step is armed
+    monkeypatch.setattr(wdmod.time, "time", lambda: real_time() - 3600.0)
+    assert fired.wait(2.0)
+    wd.disarm()
+    (inc,) = wd.incidents
+    assert 0.0 <= inc["elapsed"] < 10.0
+
+
 def test_elastic_reshard_roundtrip(tmp_path):
     """Checkpoints are mesh-agnostic: save from one sharding layout, restore
     into another (the 512→256-chip restart path, scaled down to 1 CPU)."""
@@ -50,6 +89,69 @@ def test_elastic_reshard_roundtrip(tmp_path):
     for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(out)):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32))
+
+
+def test_crash_restart_recovery_cost_accounting(tmp_path):
+    """save_async → kill → restore under an armed watchdog.  The restart
+    must resume from the correct ``latest_step``, re-execute exactly the
+    steps after the last committed checkpoint (and never any committed
+    step twice), and ``sweep.recovery_cost_us`` — the number
+    ``sensitivity.resilience_curve`` charges a ``DeviceFault`` — must equal
+    what the restart actually cost: restore + lost_steps·step."""
+    from repro.sweep import recovery_cost_us
+
+    ckpt_every, crash_step, total = 3, 8, 10
+    step_us, restore_us = 250.0, 90.0    # modeled per-step / restore costs
+    executed: list = []                  # (run, step) for every step computed
+    incidents: list = []
+
+    def train(run, ckpt, state, start, stop_after=None):
+        with StepWatchdog(30.0,
+                          on_timeout=lambda info: incidents.append(info)) as wd:
+            for i in range(start, total):
+                wd.arm(step=i)
+                state = {"w": state["w"] + 1.0, "step": i + 1}
+                executed.append((run, i))
+                wd.disarm()
+                if (i + 1) % ckpt_every == 0:
+                    ckpt.save_async(i + 1, state)
+                if stop_after is not None and i + 1 == stop_after:
+                    ckpt.wait()          # in-flight write commits (the daemon
+                    return state         # writer finishes within the process)
+        ckpt.wait()
+        return state
+
+    ckpt = CheckpointManager(str(tmp_path / "ck"))
+    train(0, ckpt, {"w": np.zeros(4), "step": 0}, 0, stop_after=crash_step)
+    # the process "dies" here: steps 6..7 ran after the last committed save
+
+    ckpt2 = CheckpointManager(str(tmp_path / "ck"))   # fresh process
+    latest = ckpt2.latest_step()
+    assert latest == 6                   # last save_async that committed
+    state = ckpt2.restore(latest, {"w": np.zeros(4), "step": 0})
+    assert state["step"] == latest
+    final = train(1, ckpt2, state, latest)
+    assert final["step"] == total
+    np.testing.assert_array_equal(final["w"], np.full(4, float(total)))
+    assert incidents == []               # armed throughout, no false fires
+
+    # restart accounting: exactly the lost steps re-ran, nothing else twice
+    run0 = [s for r, s in executed if r == 0]
+    run1 = [s for r, s in executed if r == 1]
+    assert run0 == list(range(crash_step))
+    assert run1 == list(range(latest, total))
+    lost = crash_step - latest
+    assert sorted(set(run0) & set(run1)) == list(range(latest, crash_step))
+    assert not set(run1) & set(range(latest))   # committed steps never re-run
+
+    # the resilience_curve recovery charge equals the actual restart cost
+    actual_us = restore_us + len(set(run0) & set(run1)) * step_us
+    assert recovery_cost_us(step_us=step_us, restore_us=restore_us,
+                            lost_steps=lost) == actual_us
+    # expected-case charge (lost_steps unknown): (ckpt_every−1)/2 steps
+    assert recovery_cost_us(step_us=step_us, restore_us=restore_us,
+                            ckpt_every=ckpt_every) == pytest.approx(
+        restore_us + (ckpt_every - 1) / 2.0 * step_us)
 
 
 def test_crash_mid_save_never_corrupts(tmp_path):

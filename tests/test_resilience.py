@@ -1,0 +1,270 @@
+"""Resilience axis: fault & straggler scenarios.
+
+Covers the fault lowering (``sweep.fault_axes`` — each family onto one
+engine batch axis), ``sensitivity.resilience_curve`` (one batched B×K×S
+query; zero-fault cell bit-identical to the plain forward; weighted
+expectation/quantile math), the DES ``injector="fault"`` ground truth the
+predictions are validated against, and the analysis service's
+``resilience`` query kind.  The 1-program-cold/0-warm compile assertion
+lives in ``benchmarks/bench_sweep.py`` (CompileWatcher-backed).
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+
+from repro.core import dag, sensitivity, synth
+from repro.core.loggps import pod_model
+from repro.core.simulator import simulate
+from repro import sweep
+from repro.sweep import DeviceFault, LinkFault, StragglerFault
+
+
+@pytest.fixture(scope="module")
+def pp():
+    return pod_model(pod_size=4).params()
+
+
+@pytest.fixture(scope="module")
+def gg(pp):
+    return synth.stencil2d(3, 3, 3, params=pp)
+
+
+def _calc_vertex(g):
+    """A compute vertex with in-edges and nonzero cost (straggler-eligible)."""
+    from repro.core.graph import CALC
+    indeg = np.bincount(g.edst, minlength=g.num_vertices)
+    picks = np.nonzero((g.kind == CALC) & (indeg > 0) & (g.vcost > 0))[0]
+    assert picks.size
+    return int(picks[0])
+
+
+# -- fault_axes lowering ------------------------------------------------------
+
+def test_fault_axes_layout_and_cells(gg, pp):
+    """One fault per family → each rides exactly one axis, index 0 of every
+    axis is the intact system, and equal recovery costs share one K row."""
+    v = _calc_vertex(gg)
+    faults = [StragglerFault([v], 2.0), LinkFault("dcn", extra_L_us=40.0),
+              DeviceFault(rank=1, recovery_us=7.0),
+              DeviceFault(rank=2, recovery_us=7.0)]
+    ax = sweep.fault_axes(gg, pp, faults)
+    assert ax.extras.shape == (3, gg.num_edges)      # zero + straggler + one
+    np.testing.assert_array_equal(ax.extras[0], 0.0)  # deduped recovery row
+    assert ax.scenarios.S == 2                        # base + link fault
+    assert ax.structure.vsrc.shape[0] == 3            # intact + two outages
+    assert ax.cells == [(0, 1, 0), (0, 0, 1), (1, 2, 0), (2, 2, 0)]
+    assert ax.names == ("StragglerFault[0]", "LinkFault[1]",
+                        "DeviceFault[2]", "DeviceFault[3]")
+    # the straggler row sits on v's in-edges: (slowdown−1)·vcost[v]
+    mask = gg.edst == v
+    np.testing.assert_allclose(ax.extras[1][mask], 1.0 * gg.vcost[v])
+    np.testing.assert_array_equal(ax.extras[1][~mask], 0.0)
+
+
+def test_fault_axes_no_structure_without_device_faults(gg, pp):
+    ax = sweep.fault_axes(gg, pp, [LinkFault("ici", extra_L_us=5.0)])
+    assert ax.structure is None and ax.extras is None
+    assert ax.scenarios.S == 2 and ax.cells == [(0, 0, 1)]
+
+
+def test_fault_spec_validation(gg, pp):
+    with pytest.raises(ValueError, match="≥ 1"):
+        StragglerFault([1], 0.5)
+    with pytest.raises(ValueError, match="duty"):
+        LinkFault("dcn", duty=0.0)
+    with pytest.raises(ValueError, match="duty"):
+        LinkFault("dcn", duty=1.5)
+    with pytest.raises(ValueError, match="gscale"):
+        LinkFault("dcn", gscale=0.5)
+    with pytest.raises(ValueError, match="recovery_us"):
+        DeviceFault(rank=0, recovery_us=-1.0)
+    with pytest.raises(TypeError, match="faults must be"):
+        sweep.fault_axes(gg, pp, ["not a fault"])
+    with pytest.raises(ValueError, match="out of range"):
+        sweep.fault_axes(gg, pp, [StragglerFault([gg.num_vertices], 2.0)])
+
+
+def test_fault_axes_warns_on_inexpressible_faults(gg, pp):
+    indeg = np.bincount(gg.edst, minlength=gg.num_vertices)
+    src = int(np.nonzero(indeg == 0)[0][0])
+    with pytest.warns(UserWarning, match="no in-edges"):
+        ax = sweep.fault_axes(gg, pp, [StragglerFault([src], 3.0)])
+    np.testing.assert_array_equal(ax.extras[1], 0.0)  # dropped → no-op row
+    with pytest.warns(UserWarning, match="no message edges"):
+        sweep.fault_axes(gg, pp, [DeviceFault(rank=gg.nranks + 5)])
+
+
+def test_recovery_cost_us_accounting():
+    assert sweep.recovery_cost_us(step_us=100.0, restore_us=30.0,
+                                  lost_steps=4) == 430.0
+    # expectation over a uniform failure point in the checkpoint interval
+    assert sweep.recovery_cost_us(step_us=100.0, ckpt_every=5) == 200.0
+    with pytest.raises(ValueError, match="lost_steps or"):
+        sweep.recovery_cost_us(step_us=100.0)
+    with pytest.raises(ValueError, match="ckpt_every"):
+        sweep.recovery_cost_us(step_us=100.0, ckpt_every=0)
+    with pytest.raises(ValueError, match="lost_steps"):
+        sweep.recovery_cost_us(step_us=100.0, lost_steps=-1)
+
+
+# -- resilience_curve ---------------------------------------------------------
+
+def test_zero_fault_cell_bit_identical_to_plain_forward(gg, pp):
+    v = _calc_vertex(gg)
+    rep = sensitivity.resilience_curve(
+        gg, pp, [StragglerFault([v], 2.0), LinkFault("dcn", extra_L_us=25.0),
+                 DeviceFault(rank=1, recovery_us=100.0)],
+        policy=sweep.ExecPolicy(cache=None))
+    assert rep.result is not None and rep.result.axes == ("B", "K", "S")
+    assert rep.T0 == dag.evaluate(gg, pp).T          # exact, not approx
+    assert float(rep.result.T[0, 0, 0]) == rep.T0
+
+
+def test_straggler_prediction_matches_des(gg, pp):
+    v = _calc_vertex(gg)
+    for s in (1.5, 3.0):
+        rep = sensitivity.resilience_curve(gg, pp, [StragglerFault([v], s)])
+        ref = simulate(gg, pp, injector="fault",
+                       fault={"slowdown": {v: s}}).T
+        assert rep.T_fault[0] == pytest.approx(ref, rel=1e-9)
+        assert rep.slowdown[0] >= 1.0
+
+
+def test_link_fault_duty_cycle_matches_explicit_params(gg, pp):
+    """ΔL·duty effective inflation ≡ evaluating under the inflated L."""
+    rep = sensitivity.resilience_curve(
+        gg, pp, [LinkFault("dcn", extra_L_us=40.0, duty=0.5)])
+    from repro.core.loggps import resolve_class
+    c = resolve_class(pp, "dcn")
+    L2 = tuple(l + (20.0 if i == c else 0.0) for i, l in enumerate(pp.L))
+    assert rep.T_fault[0] == pytest.approx(dag.evaluate(gg, pp.replace(L=L2)).T)
+
+
+def test_sweep_and_scalar_paths_agree(gg, pp):
+    v = _calc_vertex(gg)
+    faults = [StragglerFault([v], 2.5),
+              LinkFault("ici", extra_L_us=10.0, gscale=2.0, duty=0.75)]
+    rep_sw = sensitivity.resilience_curve(gg, pp, faults, engine="sweep")
+    rep_sc = sensitivity.resilience_curve(gg, pp, faults, engine="scalar")
+    assert rep_sc.result is None
+    np.testing.assert_allclose(rep_sw.T_fault, rep_sc.T_fault, rtol=1e-12)
+    assert rep_sw.T0 == pytest.approx(rep_sc.T0)
+
+
+def test_device_fault_recovery_is_additive(gg, pp):
+    """Recovery on the makespan sinks raises T by exactly recovery_us, on
+    top of the outage variant's own makespan (≤ T0: dropping message edges
+    only removes constraints)."""
+    rec = 1234.5
+    rep = sensitivity.resilience_curve(
+        gg, pp, [DeviceFault(rank=1), DeviceFault(rank=1, recovery_us=rec)])
+    assert rep.T_fault[0] <= rep.T0
+    assert rep.T_fault[1] == pytest.approx(rep.T_fault[0] + rec)
+    # the scalar path cannot express the structural B axis
+    with pytest.raises(ValueError, match="batched sweep engine"):
+        sensitivity.resilience_curve(gg, pp, [DeviceFault(rank=1)],
+                                     engine="scalar")
+
+
+def test_weighted_expectation_and_quantiles(gg, pp):
+    v = _calc_vertex(gg)
+    faults = [StragglerFault([v], 1.5), StragglerFault([v], 2.0),
+              StragglerFault([v], 4.0)]
+    w = np.array([0.2, 0.1, 0.05])          # no-fault mass = 0.65
+    rep = sensitivity.resilience_curve(gg, pp, faults, weights=w)
+    expect = 0.65 * 1.0 + float((w * rep.slowdown).sum())
+    assert rep.expected_slowdown == pytest.approx(expect, rel=1e-12)
+    assert rep.quantiles["p50"] == 1.0       # 65% of the mass is fault-free
+    assert rep.quantiles["p99"] == pytest.approx(float(rep.slowdown.max()))
+    # rank(): most damaging first
+    names = [n for n, _ in rep.rank()]
+    assert names[0] == rep.names[int(np.argmax(rep.slowdown))]
+
+
+def test_resilience_curve_argument_validation(gg, pp):
+    v = _calc_vertex(gg)
+    with pytest.raises(ValueError, match="at least one fault"):
+        sensitivity.resilience_curve(gg, pp, [])
+    with pytest.raises(ValueError, match="weights"):
+        sensitivity.resilience_curve(gg, pp, [StragglerFault([v], 2.0)],
+                                     weights=[0.5, 0.5])
+    with pytest.raises(ValueError, match="nonnegative"):
+        sensitivity.resilience_curve(gg, pp, [StragglerFault([v], 2.0)],
+                                     weights=[-0.1])
+    with pytest.raises(ValueError, match="sum to"):
+        sensitivity.resilience_curve(gg, pp, [StragglerFault([v], 2.0)],
+                                     weights=[1.5])
+
+
+# -- DES fault injector -------------------------------------------------------
+
+def test_des_fault_injector_validation(gg, pp):
+    with pytest.raises(ValueError, match="injector"):
+        simulate(gg, pp, injector="bogus")
+    with pytest.raises(ValueError, match="fault="):
+        simulate(gg, pp, injector="fault")           # fault dict missing
+    with pytest.raises(ValueError, match="fault="):
+        simulate(gg, pp, fault={"slowdown": {0: 2.0}})   # injector not fault
+    with pytest.raises(ValueError, match="unknown fault key"):
+        simulate(gg, pp, injector="fault", fault={"slowdwn": {0: 2.0}})
+    with pytest.raises(ValueError, match="slowdown array"):
+        simulate(gg, pp, injector="fault", fault={"slowdown": np.ones(3)})
+
+
+def test_des_combined_fault_state_slows_the_run(gg, pp):
+    v = _calc_vertex(gg)
+    base = simulate(gg, pp).T
+    hurt = simulate(gg, pp, injector="fault",
+                    fault={"slowdown": {v: 2.0}, "extra_L": {"dcn": 30.0},
+                           "gscale": {"ici": 2.0}}).T
+    assert hurt > base
+    # intact fault state is a no-op: bit-identical to the plain replay
+    same = simulate(gg, pp, injector="fault", fault={}).T
+    assert same == base
+
+
+# -- analysis service ---------------------------------------------------------
+
+def test_service_resilience_roundtrip(gg, pp):
+    from repro.launch.analysis import AnalysisRequest, AnalysisService
+    svc = AnalysisService()
+    svc.register(sweep.GraphVariant(name="stencil", graph=gg, params=pp))
+    v = _calc_vertex(gg)
+    req = AnalysisRequest(
+        kind="resilience", variant="stencil",
+        faults=[{"type": "straggler", "vertices": [v], "slowdown": 2.0},
+                {"type": "link", "cls": "dcn", "extra_L_us": 30.0},
+                {"type": "device", "rank": 1, "recovery_us": 500.0}],
+        weights=[0.3, 0.2, 0.1])
+    resp = svc.handle(req)
+    assert resp.ok, resp.error
+    ref = sensitivity.resilience_curve(
+        gg, pp, [StragglerFault([v], 2.0), LinkFault("dcn", extra_L_us=30.0),
+                 DeviceFault(rank=1, recovery_us=500.0)],
+        weights=[0.3, 0.2, 0.1])
+    assert resp.payload["T0"] == ref.T0
+    np.testing.assert_allclose(resp.payload["T_fault"], ref.T_fault)
+    assert resp.payload["expected_slowdown"] == pytest.approx(
+        ref.expected_slowdown)
+    assert resp.payload["axes"] == ["B", "K", "S"]
+    assert resp.payload["cells"] == ref.cells
+
+
+def test_service_resilience_bad_requests(gg, pp):
+    from repro.launch.analysis import AnalysisRequest, AnalysisService
+    svc = AnalysisService()
+    svc.register(sweep.GraphVariant(name="stencil", graph=gg, params=pp))
+    # missing faults list
+    resp = svc.handle(AnalysisRequest(kind="resilience", variant="stencil"))
+    assert not resp.ok and "faults" in resp.error
+    # unknown fault type names the offending spec
+    resp = svc.handle(AnalysisRequest(kind="resilience", variant="stencil",
+                                      faults=[{"type": "meteor"}]))
+    assert not resp.ok and "fault[0]" in resp.error
+    # unknown field inside a spec is a bad request, not a traceback
+    resp = svc.handle(AnalysisRequest(
+        kind="resilience", variant="stencil",
+        faults=[{"type": "straggler", "verts": [1], "slowdown": 2.0}]))
+    assert not resp.ok and "fault[0]" in resp.error

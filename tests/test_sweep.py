@@ -53,6 +53,21 @@ def test_cartesian_grid_shapes(params):
     assert res.T[1] >= res.T[0] and res.T[5] >= res.T[4]
 
 
+def test_cartesian_grid_rejects_duplicate_class_axes():
+    """The same class passed under two spellings (index and registered
+    name) must raise, not silently clobber the earlier axis."""
+    from repro.core.loggps import pod_model
+    p = pod_model(4).params()          # classes ("ici", "dcn")
+    with pytest.raises(ValueError, match="dcn"):
+        sweep.cartesian_grid(p, lat_deltas={1: [0.0, 5.0], "dcn": [0.0, 9.0]})
+    with pytest.raises(ValueError, match="ici"):
+        sweep.cartesian_grid(p, gscales={"ici": [1.0, 2.0], 0: [1.0, 4.0]})
+    # the same class on the L axis and the G axis is fine (distinct axes)
+    batch = sweep.cartesian_grid(p, lat_deltas={"dcn": [0.0, 5.0]},
+                                 gscales={1: [1.0, 2.0]})
+    assert batch.S == 4
+
+
 def test_collective_variants(params):
     variants = sweep.collective_variants(
         lambda a: synth.allreduce_chain(8, 2, params=params, algo=a),
