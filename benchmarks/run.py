@@ -14,6 +14,11 @@ Prints ``name,us_per_call,derived`` CSV lines:
                                            scalar LevelPlan loop; 4-variant
                                            × 250-scenario packed study vs
                                            the per-variant jit loop; cache)
+  bench_explore        — repro.explore    (packed search generations:
+                                           warm-stamper replay compiles 0
+                                           programs, packed best ==
+                                           solo rebuild bit-for-bit,
+                                           GA vs random at equal budget)
 
 ``python -m benchmarks.bench_sweep --smoke`` runs the sweep module alone
 with tiny grids (the CI smoke step).
@@ -26,15 +31,15 @@ import traceback
 
 
 def main() -> None:
-    from . import (bench_collectives, bench_placement, bench_solver_speed,
-                   bench_sweep, bench_tolerance, bench_topology,
-                   bench_validation)
+    from . import (bench_collectives, bench_explore, bench_placement,
+                   bench_solver_speed, bench_sweep, bench_tolerance,
+                   bench_topology, bench_validation)
 
     print("name,us_per_call,derived")
     failures = 0
     for mod in (bench_solver_speed, bench_validation, bench_tolerance,
                 bench_collectives, bench_topology, bench_placement,
-                bench_sweep):
+                bench_sweep, bench_explore):
         try:
             mod.run(lambda line: print(line, flush=True))
         except Exception:

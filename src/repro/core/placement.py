@@ -405,6 +405,19 @@ def block_mapping(P: int) -> np.ndarray:
     return np.arange(P)
 
 
+def random_mapping(P: int, rng) -> np.ndarray:
+    """A uniformly random rank→slot permutation from an EXPLICIT stream.
+
+    ``rng`` is an int seed or ``numpy.random.Generator``
+    (:func:`repro.core.rng.as_rng`; ``None`` raises) — the "placement
+    seed" knob of a design space lowers through here, and search
+    trajectories must be bit-reproducible from their seed alone, so the
+    global ``np.random`` state is never consulted.
+    """
+    from .rng import as_rng
+    return as_rng(rng).permutation(int(P))
+
+
 def volume_greedy_mapping(g: ExecutionGraph, phi: ArchTopology) -> np.ndarray:
     """Scotch-like baseline: group heavy-traffic rank pairs onto fast links,
     using *total* traffic volume (ignores temporal structure — the paper's

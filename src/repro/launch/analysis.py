@@ -24,8 +24,12 @@ a shared grid — one compiled call per shape bucket), ``placement``
 (Algorithm-3 rank-mapping suggestion on a two-tier Φ), ``resilience``
 (expected slowdown + p50/p95/p99 under a fault distribution — straggler /
 degraded-link / failed-device specs lowered onto the engine's K/S/B axes,
-one batched call; see ``sensitivity.resilience_curve``), ``stats``,
-``metrics`` (the ``repro.obs`` registry snapshot + cache stats).
+one batched call; see ``sensitivity.resilience_curve``), ``explore``
+(design-space search — a ``repro.explore`` preset space + ask/tell
+searcher runs its generations through the packed
+:class:`~repro.explore.Stamper`, which stays warm on the service so
+follow-up searches replay compiled envelopes), ``stats``, ``metrics``
+(the ``repro.obs`` registry snapshot + cache stats).
 
 Observability (``repro.obs``): every request carries a trace id — the
 client's ``trace`` field when present, a fresh id otherwise — echoed on
@@ -114,6 +118,17 @@ class AnalysisRequest:
                                                 #  |"device", ...field kwargs}
     weights: Optional[Sequence[float]] = None   # per-fault probabilities
                                                 # (resilience; sum ≤ 1)
+    space: Optional[str] = None                 # explore: preset name
+    space_args: Optional[dict] = None           # explore: preset kwargs
+                                                # (P, iters, pod, ...)
+    searcher: Optional[str] = None              # explore: random|evolution
+                                                # |halving
+    generations: int = 4                        # explore: search generations
+    population: int = 16                        # explore: candidates per gen
+    seed: int = 0                               # explore: search rng seed
+    budget: int = 50                            # explore: scenario-grid size
+    objective: Optional[dict] = None            # explore: ObjectiveSpec wire
+                                                # dict (default robust q95)
     policy: Optional[dict] = None               # ExecPolicy block (wire fields)
     backend: Optional[str] = None               # legacy: overlays policy
     shard: Optional[int] = None                 # legacy: overlays policy
@@ -221,6 +236,7 @@ class AnalysisService:
         self._engines: dict = {}                # name → Engine (single graph)
         self._groups: Optional[list] = None     # cached bucket index groups
         self._multi: dict = {}                  # group key → Engine (G axis)
+        self._stamper = None                    # warm explore Stamper (lazy)
 
     # -- registration --------------------------------------------------------
     def register(self, variant: GraphVariant) -> str:
@@ -502,6 +518,55 @@ class AnalysisService:
                 "axes": None if rep.result is None else list(rep.result.axes),
                 "cells": rep.cells}
 
+    def explore(self, req: AnalysisRequest) -> dict:
+        """Design-space search over a ``repro.explore`` preset.
+
+        ``space`` names the preset (default ``"codesign"``),
+        ``space_args`` parameterizes it (``P``, ``iters``, ``pod``, …),
+        ``searcher``/``generations``/``population``/``seed`` drive the
+        ask/tell loop, ``budget`` sizes the scenario grid (``deltas``,
+        when given, bound its ΔL range) and ``objective`` is an
+        :class:`~repro.explore.ObjectiveSpec` wire dict.  The service
+        keeps ONE warm :class:`~repro.explore.Stamper`, so a follow-up
+        search over the same preset replays compiled envelopes instead
+        of recompiling them."""
+        from repro import explore as explore_mod
+        from repro.core.loggps import LogGPS
+        from repro.sweep import sample_grid
+        kw = dict(req.space_args or {})
+        P = int(kw.pop("P", 16))
+        iters = int(kw.pop("iters", 3))
+        params = kw.pop("params", None) or LogGPS()
+        space, lower = explore_mod.preset(req.space or "codesign",
+                                          P=P, iters=iters, params=params,
+                                          **kw)
+        objective = (explore_mod.ObjectiveSpec.from_dict(req.objective)
+                     if req.objective else explore_mod.robust_makespan())
+        lo, hi = ((min(req.deltas), max(req.deltas))
+                  if req.deltas else (0.0, 100.0))
+        scen = sample_grid(params, int(req.budget), rng=int(req.seed),
+                           lat_deltas=(lo, hi))
+        name = req.searcher or "random"
+        skw = ({"population_size": max(2, int(req.population))}
+               if name == "evolution" else {})
+        searcher = explore_mod.make_searcher(name, space, int(req.seed),
+                                             **skw)
+        if self._stamper is None:
+            self._stamper = explore_mod.Stamper(policy=self._policy(req))
+        res = explore_mod.run_search(
+            searcher, lower, scen, generations=int(req.generations),
+            population=int(req.population), objective=objective,
+            stamper=self._stamper)
+        return {"space": req.space or "codesign", "searcher": searcher.name,
+                "best": res.best, "best_objective": res.best_objective,
+                "n_evaluated": res.n_evaluated,
+                "generations": res.generations,
+                "objective": objective.to_dict(),
+                "history": [{"gen": h["gen"],
+                             "best_objective": h["best_objective"],
+                             "stamp": h["stamp"]} for h in res.history],
+                "stamper": dict(self._stamper.stats)}
+
     def stats(self, req: AnalysisRequest) -> dict:
         return {"variants": list(self._variants),
                 "warm_engines": list(self._engines),
@@ -520,7 +585,8 @@ class AnalysisService:
 
     _KINDS = {"curve": curve, "bandwidth": bandwidth, "tolerance": tolerance,
               "rank": rank, "placement": placement,
-              "resilience": resilience, "stats": stats, "metrics": metrics}
+              "resilience": resilience, "explore": explore,
+              "stats": stats, "metrics": metrics}
 
     def handle(self, req: AnalysisRequest) -> AnalysisResponse:
         """Dispatch one request; errors come back as ``ok=False`` responses

@@ -85,8 +85,9 @@ stdin/stdout JSON lines or a TCP/UNIX socket.
 """
 
 from .api import (Engine, ExecPolicy, Query, Result,  # noqa: F401
-                  run)
-from .cache import DEFAULT_CACHE, SweepCache, canonical_bytes  # noqa: F401
+                  detached_engine, detached_engine_stats, run)
+from .cache import (DEFAULT_CACHE, SweepCache, canonical_bytes,  # noqa: F401
+                    graph_content_key)
 from .compile import (COST_FIELDS, STRUCT_FIELDS, CompiledPlan,  # noqa: F401
                       CostBatch, MultiPlan, SparsePlan, StructureBatch,
                       compile_plan, compile_sparse, estimate_dense_bytes,
@@ -98,4 +99,5 @@ from .scenarios import (DeviceFault, FaultAxes, GraphVariant,  # noqa: F401
                         LinkFault, ScenarioBatch, StragglerFault,
                         bandwidth_grid, base_batch, cartesian_grid,
                         collective_variants, fault_axes, latency_grid,
-                        recovery_cost_us, sweep_variants, topology_variants)
+                        recovery_cost_us, sample_grid, sweep_variants,
+                        topology_variants)

@@ -47,7 +47,9 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import os
+import threading
 import time
+from collections import OrderedDict
 from typing import Optional, Sequence, Union
 
 import numpy as np
@@ -57,7 +59,8 @@ from repro.obs.compile import WATCHER as _WATCHER
 from repro.obs.trace import span as _span
 
 from . import engine as _eng
-from .cache import DEFAULT_CACHE, SweepCache, query_key
+from .cache import (DEFAULT_CACHE, SweepCache, graph_content_key,
+                    query_key)
 from .compile import (CompiledPlan, CostBatch, MultiPlan, SparsePlan,
                       StructureBatch, _bucket, compile_plan, compile_sparse,
                       estimate_dense_bytes, pack_plans)
@@ -392,6 +395,135 @@ def _variant_names(sb: StructureBatch) -> tuple:
         f"v{i}" for i in range(sb.B))
 
 
+# -- detached-engine memo -----------------------------------------------------
+#
+# ``Engine.run(Query(graphs=...))`` and the module-level :func:`run` used to
+# build a throwaway sub-Engine per call: a study script (or an explore
+# generation) that *rebuilds* the same graph content paid a fresh
+# ``compile_plan`` + array staging every time, even though the shared
+# ``SweepCache`` already had the results.  The memo below keys engines by
+# CONTENT — graph/plan hashes + params + policy — never ``id()``, so a
+# rebuilt graph with identical arrays lands on the warm engine (0 new XLA
+# programs, no plan recompile).  Bounded LRU; unkeyable inputs (an exotic
+# ``rank_of_class`` callable, hand-rolled plan-likes) just build fresh,
+# which is exactly the old behavior.
+
+_DETACHED_ENGINES: OrderedDict = OrderedDict()
+_DETACHED_LOCK = threading.Lock()
+_DETACHED_CAP = 16
+_DETACHED_STATS = {"hits": 0, "misses": 0}
+
+
+def _params_content_key(params, nranks: Optional[int] = None):
+    """Content key for a LogGPS params object, or None if unkeyable.
+
+    Mirrors ``core.sensitivity._params_memo_key``: an opaque
+    ``rank_of_class`` callable is keyed by the rank→rank class matrix it
+    computes (cached on the instance under ``_class_matrix_bytes``, the
+    same slot sensitivity uses), never by ``id()``.
+    """
+    if params is None:
+        return ("none",)
+    parts = []
+    for f in dataclasses.fields(params):
+        v = getattr(params, f.name)
+        if f.name == "rank_of_class":
+            continue
+        if callable(v):
+            return None
+        try:
+            hash(v)
+        except TypeError:
+            return None
+        parts.append((f.name, v))
+    roc = getattr(params, "rank_of_class", None)
+    if roc is not None:
+        if nranks is None:
+            return None
+        cache = getattr(params, "_class_matrix_bytes", None)
+        if cache is None:
+            cache = {}
+            object.__setattr__(params, "_class_matrix_bytes", cache)
+        cls_key = cache.get(int(nranks))
+        if cls_key is None:
+            from .cache import canonical_bytes
+            m = np.asarray([[params.link_class(i, j)
+                             for j in range(int(nranks))]
+                            for i in range(int(nranks))], dtype=np.int32)
+            cls_key = cache[int(nranks)] = b"".join(canonical_bytes(m))
+        parts.append(("rank_of_class", cls_key))
+    return (type(params).__name__, tuple(parts))
+
+
+def _graphs_content_key(graphs, params):
+    """Content key for everything ``Engine(graphs=...)`` accepts, or None
+    when a member can't be content-addressed."""
+    if isinstance(graphs, StructureBatch):
+        base = graphs.base
+        if base is None:
+            return None
+        return ("sb", graphs.content_hash(), base.content_hash())
+    if isinstance(graphs, MultiPlan):
+        return ("multi",) + tuple(graphs.plan_hashes)
+    if isinstance(graphs, CompiledPlan):
+        return ("plan", graphs.content_hash())
+    if isinstance(graphs, SparsePlan):
+        return None
+    if isinstance(graphs, (list, tuple)):
+        keys = []
+        for item in graphs:
+            if isinstance(item, CompiledPlan):
+                keys.append(("plan", item.content_hash()))
+            elif isinstance(item, (list, tuple)) and len(item) == 2:
+                pk = _params_content_key(item[1],
+                                         getattr(item[0], "nranks", None))
+                if pk is None:
+                    return None
+                keys.append(("graph", graph_content_key(item[0]), pk))
+            else:
+                keys.append(("graph", graph_content_key(item)))
+        return ("seq",) + tuple(keys)
+    # a bare ExecutionGraph (anything with the build-time arrays)
+    try:
+        return ("graph", graph_content_key(graphs))
+    except AttributeError:
+        return None
+
+
+def detached_engine(graphs, params, policy: "ExecPolicy") -> "Engine":
+    """The content-keyed warm engine for a detached workload (building and
+    memoizing one if this content was never seen).  Falls back to a fresh
+    un-memoized engine when the inputs can't be content-addressed."""
+    gk = _graphs_content_key(graphs, params)
+    key = None
+    if gk is not None:
+        pk = _params_content_key(params, getattr(graphs, "nranks", None))
+        if pk is not None:
+            key = (gk, pk, policy.key())
+    if key is None:
+        return Engine(graphs, params=params, policy=policy)
+    with _DETACHED_LOCK:
+        eng = _DETACHED_ENGINES.get(key)
+        if eng is not None:
+            _DETACHED_ENGINES.move_to_end(key)
+            _DETACHED_STATS["hits"] += 1
+            return eng
+        _DETACHED_STATS["misses"] += 1
+    eng = Engine(graphs, params=params, policy=policy)
+    with _DETACHED_LOCK:
+        _DETACHED_ENGINES[key] = eng
+        _DETACHED_ENGINES.move_to_end(key)
+        while len(_DETACHED_ENGINES) > _DETACHED_CAP:
+            _DETACHED_ENGINES.popitem(last=False)
+    return eng
+
+
+def detached_engine_stats() -> dict:
+    """Hit/miss counters + live size of the detached-engine memo."""
+    with _DETACHED_LOCK:
+        return {**_DETACHED_STATS, "size": len(_DETACHED_ENGINES)}
+
+
 class Engine:
     """Compile once, evaluate any populated combination of G×K×S axes.
 
@@ -714,11 +846,11 @@ class Engine:
         """
         if isinstance(query, Query):
             if query.graphs is not None:
-                sub = Engine(query.graphs,
-                             params=(query.params if query.params is not None
-                                     else self.params),
-                             policy=policy if policy is not None
-                             else self.policy)
+                sub = detached_engine(
+                    query.graphs,
+                    (query.params if query.params is not None
+                     else self.params),
+                    policy if policy is not None else self.policy)
                 return sub.run(dataclasses.replace(query, graphs=None,
                                                    params=None),
                                structure=structure, outputs=outputs,
@@ -1247,11 +1379,15 @@ class Engine:
 def run(query: Query, policy: Optional[ExecPolicy] = None,
         params=None) -> Result:
     """One-shot declarative evaluation: compile ``query.graphs``, run,
-    return the :class:`Result`.  For repeated queries over one workload,
-    build an :class:`Engine` and keep it warm instead."""
+    return the :class:`Result`.  Engines are memoized by *content*
+    (:func:`detached_engine`): re-running a query whose graphs were rebuilt
+    with identical arrays reuses the warm engine — no plan recompile, 0 new
+    XLA programs — so one-shot calls in a loop cost what a kept-warm
+    :class:`Engine` costs."""
     if query.graphs is None:
         raise ValueError("a detached run() needs query.graphs")
-    eng = Engine(query.graphs,
-                 params=query.params if query.params is not None else params,
-                 policy=policy)
+    eng = detached_engine(
+        query.graphs,
+        query.params if query.params is not None else params,
+        policy if policy is not None else ExecPolicy())
     return eng.run(dataclasses.replace(query, graphs=None, params=None))

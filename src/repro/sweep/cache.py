@@ -103,6 +103,31 @@ def query_key(plan_hash: str, batches: Sequence, want_lam: bool,
     return sha.hexdigest()
 
 
+def graph_content_key(g) -> str:
+    """Content hash of an :class:`~repro.core.graph.ExecutionGraph`.
+
+    Hashes the build-time arrays (vertices, edges, latency classes, gap
+    decomposition, interned links) — everything :func:`compile_plan`
+    consumes — so two graphs built independently with identical content
+    share one key.  The CSR/level arrays are derived from those inputs and
+    deliberately excluded.  This is what lets detached ``Query(graphs=)``
+    runs and explore generations that *rebuild* a graph land on the same
+    memoized engine instead of recompiling the plan.
+    """
+    sha = hashlib.sha1(b"graph-content-v1|")
+    for arr in (g.kind, g.vcost, g.vrank, g.esrc, g.edst, g.econst,
+                g.ebytes, g.elat):
+        _update(sha, arr)
+    for opt in (g.egap, g.egclass, g.elink, g.link_classes):
+        if opt is None:
+            sha.update(b"|none")
+        else:
+            sha.update(b"|arr")
+            _update(sha, opt)
+    sha.update(f"|{int(g.nclass)}|{int(g.nranks)}|{int(g.nlinks)}".encode())
+    return sha.hexdigest()
+
+
 def multi_result_key(multi_hash: str, batches: Sequence, compute_lam: bool,
                      backend: str) -> str:
     """Key for a MultiPlan run: per-graph scenario batches hashed in order."""

@@ -159,6 +159,35 @@ def cartesian_grid(params: LogGPS,
     return ScenarioBatch(L=np.stack(rows_L), gscale=np.stack(rows_G), meta=meta)
 
 
+def sample_grid(params: LogGPS, n: int, rng, *,
+                lat_deltas: tuple = (0.0, 50.0),
+                gscales: tuple = (1.0, 1.0), cls=0) -> ScenarioBatch:
+    """``n`` randomly sampled scenarios on one class: ΔL uniform over
+    ``lat_deltas`` and γ uniform over ``gscales`` (degenerate ranges pin
+    the value).  Search drivers use this for robust objectives — the same
+    seed reproduces the same grid bit-for-bit, so two identical searches
+    share result-cache entries.
+
+    ``rng`` is REQUIRED (an int seed or ``numpy.random.Generator``,
+    normalized by :func:`repro.core.rng.as_rng`); there is deliberately no
+    default and no global-``np.random`` fallback.
+    """
+    from repro.core.rng import as_rng
+    rng = as_rng(rng)
+    cls = resolve_class(params, cls)
+    n = int(n)
+    nc = params.nclass
+    dl = rng.uniform(float(lat_deltas[0]), float(lat_deltas[1]), n)
+    gs = rng.uniform(float(gscales[0]), float(gscales[1]), n)
+    L = np.tile(np.asarray(params.L, dtype=np.float64), (n, 1))
+    L[:, cls] = L[:, cls] + dl
+    G = np.ones((n, nc))
+    G[:, cls] = gs
+    return ScenarioBatch(L=L, gscale=G,
+                         meta=[{"cls": cls, "dL": float(d), "gscale": float(g)}
+                               for d, g in zip(dl, gs)])
+
+
 # -- resilience: fault & straggler degraded states ----------------------------
 #
 # Each fault family lowers onto exactly one engine batch axis, so an entire
